@@ -1,0 +1,142 @@
+"""Simulator-backed reproductions of the paper's figures (Figs 1–3).
+
+Each function returns a dict of series suitable for CSV/JSON dumping and a
+one-line derived summary; ``benchmarks.run`` orchestrates them.  Default
+scale is CI-friendly (200 nodes / 20 s); ``full=True`` reproduces the
+paper's 1000-node / 40 s setting with β = 1% of the system size.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.psp_linear import PSPLinearConfig
+from repro.core.barriers import make_barrier
+from repro.core.simulator import SimConfig, run_simulation
+
+FIVE = ("bsp", "ssp", "asp", "pbsp", "pssp")
+
+
+def _scale(full: bool) -> PSPLinearConfig:
+    if full:
+        return PSPLinearConfig()
+    return PSPLinearConfig(n_nodes=200, dim=100, duration=20.0)
+
+
+def _bar(name: str, c: PSPLinearConfig):
+    return make_barrier(name, staleness=c.ssp_staleness,
+                        sample_size=c.sample_size)
+
+
+def _run(name: str, c: PSPLinearConfig, **kw):
+    cfg = SimConfig(n_nodes=c.n_nodes, duration=c.duration, dim=c.dim,
+                    barrier=_bar(name, c), seed=c.seed, **kw)
+    return run_simulation(cfg)
+
+
+def fig1_progress(full: bool = False) -> Dict:
+    """Fig 1a/1b: final step distribution of the five strategies."""
+    c = _scale(full)
+    out = {}
+    for name in FIVE:
+        r = _run(name, c)
+        out[name] = {"mean": float(r.mean_progress),
+                     "min": int(r.steps.min()), "max": int(r.steps.max()),
+                     "cdf_steps": np.sort(r.steps).tolist()[:: max(1,
+                         c.n_nodes // 50)]}
+    return out
+
+
+def fig1_sample_sweep(full: bool = False) -> Dict:
+    """Fig 1c: pBSP parameterised by sample size 0 → 64."""
+    c = _scale(full)
+    out = {}
+    for beta in (0, 1, 2, 4, 16, 64):
+        bar = make_barrier("asp") if beta == 0 else \
+            make_barrier("pbsp", sample_size=beta)
+        r = run_simulation(SimConfig(n_nodes=c.n_nodes, duration=c.duration,
+                                     dim=c.dim, barrier=bar, seed=c.seed))
+        out[f"beta={beta}"] = {"mean": float(r.mean_progress),
+                               "spread": int(r.steps.max() - r.steps.min())}
+    return out
+
+
+def fig1_error(full: bool = False) -> Dict:
+    """Fig 1d: normalized L2 model error over time."""
+    c = _scale(full)
+    out = {}
+    for name in FIVE:
+        r = _run(name, c)
+        out[name] = {"times": r.times.tolist(),
+                     "errors": r.errors.tolist(),
+                     "final": float(r.final_error)}
+    return out
+
+
+def fig1_messages(full: bool = False) -> Dict:
+    """Fig 1e: cumulative updates received by the server."""
+    c = _scale(full)
+    out = {}
+    for name in FIVE:
+        r = _run(name, c)
+        out[name] = {"times": r.times.tolist(),
+                     "updates": r.server_updates.tolist(),
+                     "total": int(r.total_updates)}
+    return out
+
+
+def fig2_stragglers(full: bool = False) -> Dict:
+    """Fig 2a/2b: straggler-fraction sweep 0 → 30% (4× slow)."""
+    c = _scale(full)
+    out = {}
+    for name in FIVE:
+        base = None
+        rows = []
+        for frac in (0.0, 0.05, 0.1, 0.2, 0.3):
+            r = _run(name, c, straggler_frac=frac)
+            if base is None:
+                base = (r.mean_progress, r.final_error)
+            rows.append({"frac": frac,
+                         "progress_ratio": float(r.mean_progress / base[0]),
+                         "error_increase": float(r.final_error - base[1])})
+        out[name] = rows
+    return out
+
+
+def fig2_slowness(full: bool = False) -> Dict:
+    """Fig 2c: 5% stragglers, slowness 1× → 16×."""
+    c = _scale(full)
+    out = {}
+    for name in FIVE:
+        rows = []
+        base = None
+        for slow in (1.0, 2.0, 4.0, 8.0, 16.0):
+            r = _run(name, c, straggler_frac=0.05, straggler_slowdown=slow)
+            if base is None:
+                base = r.mean_progress
+            rows.append({"slowness": slow,
+                         "progress_ratio": float(r.mean_progress / base)})
+        out[name] = rows
+    return out
+
+
+def fig3_scalability(full: bool = False) -> Dict:
+    """Fig 3: 5% stragglers, system size 100 → 1000 (fixed 10-node sample)."""
+    sizes = (100, 250, 500, 1000) if full else (50, 100, 200)
+    out = {}
+    for name in FIVE:
+        rows = []
+        base = None
+        for n in sizes:
+            bar = make_barrier(name, staleness=4, sample_size=10)
+            r = run_simulation(SimConfig(
+                n_nodes=n, duration=20.0 if not full else 40.0,
+                dim=100, barrier=bar, straggler_frac=0.05, seed=0))
+            if base is None:
+                base = r.mean_progress
+            rows.append({"n": n, "progress_pct": float(
+                100.0 * r.mean_progress / base)})
+        out[name] = rows
+    return out

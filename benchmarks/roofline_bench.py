@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Prints the per-(arch × shape) three-term roofline for the single-pod mesh
+(EXPERIMENTS.md §Roofline is generated from this) and flags the dominant
+bottleneck.  ``derived`` = count of combos per bottleneck class.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh: str = "single") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        if "_psp__" in path:
+            continue    # PSP trainer artifacts live in §Perf pair 3
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(mesh: str = "single") -> List[dict]:
+    out = []
+    for r in load(mesh):
+        if r.get("status") != "ok" or "roofline" not in r:
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": r.get("status", "?"),
+                        "reason": r.get("reason", r.get("error", ""))[:60]})
+            continue
+        rf = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bottleneck": rf["bottleneck"],
+            "useful_ratio": rf["useful_ratio"],
+            "temp_gb": r["memory"]["temp_bytes"] / 1e9,
+            "args_gb": r["memory"]["argument_bytes"] / 1e9,
+        })
+    return out
+
+
+def print_table(mesh: str = "single") -> Dict[str, int]:
+    rows = table(mesh)
+    counts: Dict[str, int] = {}
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'coll_s':>10s} {'bneck':>10s} {'useful':>7s} {'temp_GB':>8s}")
+    print(hdr)
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:24s} {r['shape']:12s} -- {r['status']}: "
+                  f"{r.get('reason','')}")
+            continue
+        counts[r["bottleneck"]] = counts.get(r["bottleneck"], 0) + 1
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['bottleneck']:>10s} {r['useful_ratio']:7.3f} "
+              f"{r['temp_gb']:8.2f}")
+    return counts

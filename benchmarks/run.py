@@ -1,0 +1,116 @@
+"""Benchmark harness — one entry per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark) and dumps
+the full series to results/benchmarks/*.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1_progress]
+
+``--full`` runs the paper-scale settings (1000 nodes / 40 s / β = 1%);
+default is a CI-friendly reduced scale with identical structure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks import fig45_bounds, figures
+from benchmarks.roofline_bench import print_table, table
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "benchmarks")
+
+
+def _derived_fig1(res):
+    return ("pbsp_vs_bsp_progress="
+            f"{res['pbsp']['mean'] / max(res['bsp']['mean'], 1e-9):.2f}")
+
+
+def _derived_fig1_err(res):
+    best = min(res, key=lambda k: res[k]["final"])
+    return f"lowest_error={best}:{res[best]['final']:.4f}"
+
+
+def _derived_fig1_msg(res):
+    return ("asp_vs_bsp_updates="
+            f"{res['asp']['total'] / max(res['bsp']['total'], 1):.1f}x")
+
+
+def _derived_fig2(res):
+    worst = res["bsp"][-1]["progress_ratio"]
+    rob = res["pbsp"][-1]["progress_ratio"]
+    return f"at30pct: bsp={worst:.2f} pbsp={rob:.2f}"
+
+
+def _derived_fig2c(res):
+    return (f"at16x: bsp={res['bsp'][-1]['progress_ratio']:.2f} "
+            f"pbsp={res['pbsp'][-1]['progress_ratio']:.2f}")
+
+
+def _derived_fig3(res):
+    return (f"largest: bsp={res['bsp'][-1]['progress_pct']:.0f}% "
+            f"pssp={res['pssp'][-1]['progress_pct']:.0f}%")
+
+
+def _derived_sweep(res):
+    keys = sorted(res, key=lambda k: int(k.split("=")[1]))
+    return (f"spread beta0={res[keys[0]]['spread']} "
+            f"beta_max={res[keys[-1]]['spread']}")
+
+
+BENCHES = [
+    ("fig1_progress", figures.fig1_progress, _derived_fig1),
+    ("fig1_sample_sweep", figures.fig1_sample_sweep, _derived_sweep),
+    ("fig1_error", figures.fig1_error, _derived_fig1_err),
+    ("fig1_messages", figures.fig1_messages, _derived_fig1_msg),
+    ("fig2_stragglers", figures.fig2_stragglers, _derived_fig2),
+    ("fig2_slowness", figures.fig2_slowness, _derived_fig2c),
+    ("fig3_scalability", figures.fig3_scalability, _derived_fig3),
+    ("fig4_mean_bound", lambda full=False: fig45_bounds.fig4_mean_bound(),
+     lambda res: fig45_bounds.derived_summary()),
+    ("fig5_variance_bound",
+     lambda full=False: fig45_bounds.fig5_variance_bound(),
+     lambda res: fig45_bounds.derived_summary()),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (1000 nodes, 40s)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-roofline", action="store_true")
+    a = ap.parse_args(argv)
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    print("name,us_per_call,derived")
+    for name, fn, derive in BENCHES:
+        if a.only and name != a.only:
+            continue
+        t0 = time.time()
+        res = fn(full=a.full)
+        us = (time.time() - t0) * 1e6
+        with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
+            json.dump(res, f)
+        print(f"{name},{us:.0f},{derive(res)}")
+
+    if not a.skip_roofline and (a.only in (None, "roofline")):
+        rows = table("single")
+        ok = [r for r in rows if r["status"] == "ok"]
+        if ok:
+            t0 = time.time()
+            with open(os.path.join(OUT_DIR, "roofline.json"), "w") as f:
+                json.dump(rows, f, indent=1)
+            counts = {}
+            for r in ok:
+                counts[r["bottleneck"]] = counts.get(r["bottleneck"], 0) + 1
+            us = (time.time() - t0) * 1e6
+            print(f"roofline,{us:.0f},"
+                  f"combos={len(ok)} bottlenecks={counts}")
+        else:
+            print("roofline,0,no dry-run artifacts (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Barrier-control sweep on a real model: the paper's Fig-1 trade-off,
+measured on an actual transformer (not the linear-model simulator).
+
+For each barrier, trains the same reduced transformer with 25% injected
+stragglers and reports loss reached vs virtual wall-clock — the
+convergence-speed/accuracy trade-off PSP is designed to win.
+
+    PYTHONPATH=src python examples/barrier_sweep.py
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.spmd_psp import PSPConfig, psp_init, psp_train_step
+from repro.data import SyntheticLM
+from repro.models import init_model, loss_fn
+from repro.optim import adamw, clip_by_norm
+
+W, TICKS = 4, 120
+
+
+def main():
+    cfg = reduced(get_config("qwen2-0.5b"))
+    cfg = dataclasses.replace(cfg, vocab_size=256, n_layers=2, d_model=128,
+                              remat=False)
+    data = iter(SyntheticLM(cfg.vocab_size, 64, W * 4, seed=0))
+    batches = [next(data)["tokens"].reshape(W, 4, 64) for _ in range(16)]
+    opt = adamw(2e-3)
+
+    def grad_fn(p, toks):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            p, {"tokens": toks}, cfg)
+        return loss, clip_by_norm(g, 1.0)
+
+    print(f"{'barrier':8s} {'loss':>8s} {'vtime':>7s} {'steps':>7s} "
+          f"{'spread':>7s} {'steps/s':>8s}")
+    for name in ("bsp", "ssp", "asp", "pbsp", "pssp"):
+        pcfg = PSPConfig(barrier=name, n_workers=W, sample_size=2,
+                         staleness=3, straggler_frac=0.25)
+        st = psp_init(pcfg, init_model(cfg, jax.random.PRNGKey(0)),
+                      opt.init, jax.random.PRNGKey(1))
+        step = jax.jit(lambda s, b, _p=pcfg: psp_train_step(
+            _p, grad_fn, opt.update, s, b))
+        for t in range(TICKS):
+            st, m = step(st, batches[t % len(batches)])
+        loss, _ = loss_fn(st.server_params, {"tokens": batches[0][0]}, cfg)
+        vt, ms = float(m["virtual_time"]), float(m["mean_step"])
+        print(f"{name:8s} {float(loss):8.4f} {vt:7.2f} {ms:7.1f} "
+              f"{int(m['step_spread']):7d} {ms / vt:8.2f}")
+    print("\n→ probabilistic barriers keep near-ASP step throughput while")
+    print("  bounding dispersion — the paper's trade-off, on a live model.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end driver: train a transformer for a few hundred steps with PSP
+barrier control as a first-class feature.
+
+Default: a ~10M-param reduced qwen2 for 200 PSP ticks on CPU (finishes in
+minutes).  ``--large`` selects a ~100M-param config (same code path; sized
+for a real accelerator or a long CPU run).
+
+    PYTHONPATH=src python examples/train_e2e.py
+    PYTHONPATH=src python examples/train_e2e.py --barrier bsp --steps 300
+    PYTHONPATH=src python examples/train_e2e.py --large --steps 400
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--barrier", default="pbsp")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--large", action="store_true",
+                    help="~100M params instead of ~10M")
+    a, rest = ap.parse_known_args()
+    if a.large:
+        dims = ["--d-model", "768", "--n-layers", "12", "--vocab", "8192",
+                "--seq", "256", "--batch", "4"]
+    else:
+        dims = ["--d-model", "256", "--n-layers", "4", "--vocab", "1024",
+                "--seq", "128", "--batch", "4"]
+    args = (["--arch", "qwen2-0.5b", "--reduced", "--steps", str(a.steps),
+             "--barrier", a.barrier, "--workers", "4",
+             "--straggler-frac", "0.25", "--log-every", "20"]
+            + dims + rest)
+    return train_main(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

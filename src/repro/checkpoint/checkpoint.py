@@ -1,0 +1,82 @@
+"""Pytree checkpointing (dependency-free .npz format).
+
+Layout: ``<dir>/step_<n>.npz`` holding flattened leaves keyed by their
+pytree path, plus a tiny JSON sidecar with step metadata.  Atomic writes
+(tmp + rename), latest-step discovery, and structural restore into an
+existing template pytree (so dtypes/shardings are preserved by the caller
+putting the arrays back on device).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16 etc.): store f32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    os.replace(tmp, final)
+    meta = {"step": step, **(metadata or {})}
+    with open(final + ".json", "w") as f:
+        json.dump(meta, f)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", fn))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: PyTree,
+                       step: Optional[int] = None) -> Tuple[PyTree, int]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        # cast through jnp: numpy cannot cast into ml_dtypes (bf16)
+        leaves.append(np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype)))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    return tree, step

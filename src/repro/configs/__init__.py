@@ -1,0 +1,84 @@
+"""Architecture config registry — one module per assigned architecture.
+
+``get_config("gemma2-27b")`` returns the exact assigned configuration;
+``reduced(cfg)`` returns the CPU-smoke variant (≤2 layers, d_model ≤ 512,
+≤4 experts) of the same family used by per-arch smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+from repro.configs.h2o_danube_1_8b import CONFIG as _danube
+from repro.configs.recurrentgemma_2b import CONFIG as _rg
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3moe
+from repro.configs.mamba2_780m import CONFIG as _mamba2
+from repro.configs.dbrx_132b import CONFIG as _dbrx
+from repro.configs.musicgen_large import CONFIG as _musicgen
+from repro.configs.qwen1_5_4b import CONFIG as _qwen15
+from repro.configs.qwen2_0_5b import CONFIG as _qwen2
+from repro.configs.gemma2_27b import CONFIG as _gemma2
+from repro.configs.internvl2_2b import CONFIG as _internvl2
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [_danube, _rg, _qwen3moe, _mamba2, _dbrx, _musicgen, _qwen15,
+              _qwen2, _gemma2, _internvl2]
+}
+
+#: archs allowed to run long_500k (sub-quadratic / windowed decode state);
+#: pure full-attention archs skip it — see DESIGN.md §5.
+LONG_CONTEXT_ARCHS = (
+    "h2o-danube-1.8b",      # SWA everywhere → window-ring cache
+    "recurrentgemma-2b",    # RG-LRU + local attention
+    "mamba2-780m",          # constant-size SSM state
+    "gemma2-27b",           # alternating local/global (global KV sharded)
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; options: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,
+            seq_ok: bool = True) -> ModelConfig:
+    """CPU-smoke variant: same family/flavour, tiny dims.
+
+    Keeps every structural switch (GQA ratio, pattern, softcaps, biases,
+    MoE top-k, SSD dims, RG-LRU) while shrinking widths so one forward/train
+    step runs on a single CPU device in milliseconds.
+    """
+    n_heads = max(2, cfg.n_heads // 8)
+    ratio = max(1, cfg.n_heads // max(cfg.n_kv_heads, 1))
+    n_kv = max(1, n_heads // ratio)
+    head_dim = min(64, max(16, d_model // n_heads))
+    pat = cfg.layer_pattern
+    # keep the pattern; give patterns longer than n_layers one full group
+    layers = max(n_layers, len(pat)) if len(pat) > 1 else n_layers
+    if cfg.name == "recurrentgemma-2b":
+        layers = 5                      # one (R,R,A) group + (R,R) tail
+    changes = dict(
+        n_layers=layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=max(1, min(cfg.d_ff, 4 * d_model)) if cfg.d_ff else 0,
+        vocab_size=512,
+        sliding_window=(64 if cfg.sliding_window else None),
+        lru_width=(d_model if cfg.lru_width else None),
+        frontend_tokens=(16 if cfg.frontend_tokens else 0),
+    )
+    if cfg.is_moe:
+        changes.update(n_experts=4, n_experts_per_token=2)
+    if cfg.family == "ssm":
+        changes.update(ssm_state=32, ssm_head_dim=16)
+    return dataclasses.replace(cfg, **changes)
+
+
+__all__ = ["ARCHS", "LONG_CONTEXT_ARCHS", "INPUT_SHAPES", "InputShape",
+           "ModelConfig", "get_config", "reduced"]

@@ -1,0 +1,26 @@
+"""PSP core: barrier controls, the sampling primitive, theory, simulator.
+
+The paper's contribution (Probabilistic Synchronous Parallel) as a composable
+library:
+
+* :mod:`repro.core.barriers` — BSP/SSP/ASP/pBSP/pSSP predicates
+* :mod:`repro.core.sampling` — the ``sampling`` system primitive
+* :mod:`repro.core.overlay` — structured overlay backing distributed sampling
+* :mod:`repro.core.bounds` — Theorems 1–3 bounds (Figs 4–5)
+* :mod:`repro.core.simulator` — discrete-event Actor-system repro (Figs 1–3)
+* :mod:`repro.core.engines` — map-reduce / parameter-server / p2p engines
+* :mod:`repro.core.spmd_psp` — TPU-native PSP for pjit/shard_map training
+"""
+from repro.core.barriers import (ASP, BSP, PBSP, PSSP, SSP, BarrierControl,
+                                 make_barrier)
+from repro.core.bounds import (mean_lag_bound, psp_lag_pmf, regret_tail_bound,
+                               variance_lag_bound)
+from repro.core.sampling import CentralSampler, OverlaySampler, sample_steps_jax
+from repro.core.simulator import SimConfig, SimResult, run_simulation
+
+__all__ = [
+    "ASP", "BSP", "PBSP", "PSSP", "SSP", "BarrierControl", "make_barrier",
+    "mean_lag_bound", "psp_lag_pmf", "regret_tail_bound", "variance_lag_bound",
+    "CentralSampler", "OverlaySampler", "sample_steps_jax",
+    "SimConfig", "SimResult", "run_simulation",
+]

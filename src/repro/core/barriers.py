@@ -1,0 +1,208 @@
+"""Barrier control policies (the paper's §4.2 / §6.1).
+
+A barrier control decides whether a worker may advance its local step given
+(some view of) the steps of other workers.  The paper's key move is that the
+*same* predicate can be evaluated on the full state vector (classic,
+centralised BSP/SSP) or on a random sample of it (pBSP/pSSP) — the sampling
+primitive composes with any barrier method, which decouples barrier control
+from model consistency and makes the policy fully distributable.
+
+Two call styles are provided:
+
+* :meth:`BarrierControl.can_pass` — pure-python, used by the discrete-event
+  Actor simulator (``core/simulator.py``).
+* :meth:`BarrierControl.can_pass_jax` — ``jnp``-only (no python branching on
+  traced values), used by the SPMD trainer (``core/spmd_psp.py``); takes the
+  *sampled* step vector and returns a bool array.
+
+Formal definitions (paper §6.1), with ``s_i`` worker i's step and ``S`` the
+evaluated subset:
+
+    BSP :  ∀ i,j ∈ V  :  s_i = s_j
+    SSP :  ∀ i,j ∈ V  :  |s_i − s_j| ≤ s
+    ASP :  ⊤
+    pBSP:  ∀ i,j ∈ S⊆V:  s_i = s_j
+    pSSP:  ∀ i,j ∈ S⊆V:  |s_i − s_j| ≤ s
+
+pSSP generalises all of the above: S=V ⇒ SSP; s=0 ⇒ pBSP; S=V, s=0 ⇒ BSP;
+S=∅ or s=∞ ⇒ ASP.
+
+Note on the *worker-centric* evaluation used at runtime: a worker w deciding
+whether to advance from its own step ``s_w`` checks the sampled peers' steps
+and waits if any sampled peer lags more than ``staleness`` behind ``s_w``
+(paper §6.4: "a worker samples β out of P workers ... if a single one of
+these lags more than s steps behind the current worker then it waits").
+The pairwise form above is the global invariant the policy maintains; the
+worker-centric form is what each node evaluates locally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BarrierControl",
+    "BSP",
+    "SSP",
+    "ASP",
+    "PBSP",
+    "PSSP",
+    "make_barrier",
+    "BARRIER_REGISTRY",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BarrierControl:
+    """Base class. ``staleness`` is the bound s; ``sample_size`` is β.
+
+    ``sample_size is None`` means "evaluate on the full state" (classic
+    methods); an integer β means "evaluate on a β-sample" (probabilistic
+    methods).
+    """
+
+    staleness: int = 0
+    sample_size: Optional[int] = None
+
+    #: registry name, overridden by subclasses
+    name: str = "base"
+
+    # ------------------------------------------------------------------ #
+    # python path (simulator)
+    # ------------------------------------------------------------------ #
+    def view(self, steps: Sequence[int], rng: np.random.Generator,
+             self_index: Optional[int] = None) -> np.ndarray:
+        """Return the subset of ``steps`` this policy evaluates.
+
+        For classic policies this is all of ``steps``; for probabilistic ones
+        it is a uniform sample of size β (without replacement), which in the
+        real system is produced by the structured overlay
+        (:mod:`repro.core.overlay`).
+        """
+        steps = np.asarray(steps)
+        if self.sample_size is None:
+            return steps
+        beta = min(self.sample_size, len(steps))
+        if beta == 0:
+            return steps[:0]
+        idx = rng.choice(len(steps), size=beta, replace=False)
+        return steps[idx]
+
+    def can_pass(self, my_step: int, steps: Sequence[int],
+                 rng: np.random.Generator) -> bool:
+        """Worker-centric barrier check: may a worker at ``my_step`` advance?
+
+        ``steps`` is the (full) step vector the policy may sample from.
+        """
+        sampled = self.view(steps, rng)
+        if sampled.size == 0:
+            return True
+        return bool(np.all(my_step - sampled <= self.staleness))
+
+    # ------------------------------------------------------------------ #
+    # jnp path (SPMD trainer) — no data-dependent python control flow
+    # ------------------------------------------------------------------ #
+    def can_pass_jax(self, my_step: jax.Array, sampled_steps: jax.Array,
+                     valid: Optional[jax.Array] = None) -> jax.Array:
+        """Vectorised barrier check.
+
+        Args:
+          my_step: i32[] or i32[W] — the deciding worker's step(s).
+          sampled_steps: i32[β] or i32[W, β] — sampled peers' steps (already
+            drawn by the sampling primitive).
+          valid: optional bool mask matching ``sampled_steps`` (β may exceed
+            the population in small tests).
+
+        Returns: bool array, True where the worker may advance.
+        """
+        lag = my_step[..., None] - sampled_steps
+        ok = lag <= self.staleness
+        if valid is not None:
+            ok = ok | ~valid
+        return jnp.all(ok, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BSP(BarrierControl):
+    """Bulk Synchronous Parallel — lockstep (Algorithm 1)."""
+
+    staleness: int = 0
+    sample_size: Optional[int] = None
+    name: str = "bsp"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSP(BarrierControl):
+    """Stale Synchronous Parallel — bounded staleness (Algorithm 2)."""
+
+    staleness: int = 4
+    sample_size: Optional[int] = None
+    name: str = "ssp"
+
+
+@dataclasses.dataclass(frozen=True)
+class ASP(BarrierControl):
+    """Asynchronous Parallel — no synchronisation (⊤)."""
+
+    staleness: int = 0
+    sample_size: Optional[int] = None
+    name: str = "asp"
+
+    def view(self, steps, rng, self_index=None):  # noqa: D102
+        return np.asarray(steps)[:0]  # S = ∅
+
+    def can_pass(self, my_step, steps, rng):  # noqa: D102
+        return True
+
+    def can_pass_jax(self, my_step, sampled_steps, valid=None):  # noqa: D102
+        lag = my_step[..., None] - sampled_steps
+        return jnp.ones(jnp.broadcast_shapes(lag.shape[:-1]), dtype=bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class PBSP(BarrierControl):
+    """Probabilistic BSP — BSP composed with the sampling primitive."""
+
+    staleness: int = 0
+    sample_size: Optional[int] = 16
+    name: str = "pbsp"
+
+
+@dataclasses.dataclass(frozen=True)
+class PSSP(BarrierControl):
+    """Probabilistic SSP — the most general PSP method (paper Eq. 5)."""
+
+    staleness: int = 4
+    sample_size: Optional[int] = 16
+    name: str = "pssp"
+
+
+BARRIER_REGISTRY = {
+    "bsp": BSP,
+    "ssp": SSP,
+    "asp": ASP,
+    "pbsp": PBSP,
+    "pssp": PSSP,
+}
+
+
+def make_barrier(name: str, *, staleness: Optional[int] = None,
+                 sample_size: Optional[int] = None) -> BarrierControl:
+    """Factory: ``make_barrier('pssp', staleness=4, sample_size=16)``."""
+    name = name.lower()
+    if name not in BARRIER_REGISTRY:
+        raise ValueError(
+            f"unknown barrier {name!r}; options: {sorted(BARRIER_REGISTRY)}")
+    cls = BARRIER_REGISTRY[name]
+    kwargs = {}
+    # staleness is meaningful only for the SSP family (BSP/pBSP are s=0 by
+    # definition; ASP ignores it)
+    if staleness is not None and name in ("ssp", "pssp"):
+        kwargs["staleness"] = staleness
+    if sample_size is not None and name in ("pbsp", "pssp"):
+        kwargs["sample_size"] = sample_size
+    return cls(**kwargs)

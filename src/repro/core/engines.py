@@ -1,0 +1,124 @@
+"""The Actor system's three engines (paper §4).
+
+The paper's framework exposes three computation engines that share one
+swappable ``barrier`` function (Table 1: "Owl+Actor — BSP, ASP, SSP, PSP"):
+
+* **map-reduce** — BSP-style bulk phases (``map``/``reduce``/``collect``);
+* **parameter server** — ``push``/``pull``/``schedule``/``barrier`` with a
+  logical central server holding model *and* node states
+  (design combination 1: [centralised model, centralised states]);
+* **peer-to-peer** — the same four APIs, but barrier state is fully
+  distributed: every node samples peers through the structured overlay and
+  decides locally (combination 2/4: [*, distributed states]); with PSP the
+  server degenerates into a stateless *stream server* for updates.
+
+These engines drive the discrete-event simulator, so all of the paper's
+experiments are expressible as engine+barrier combinations.  The SPMD
+counterpart for TPU meshes lives in :mod:`repro.core.spmd_psp`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.barriers import ASP, BSP, BarrierControl, make_barrier
+from repro.core.simulator import SimConfig, SimResult, run_simulation
+
+__all__ = [
+    "Engine",
+    "MapReduceEngine",
+    "ParameterServerEngine",
+    "P2PEngine",
+    "valid_combinations",
+]
+
+
+# --------------------------------------------------------------------------- #
+# design-combination matrix (paper §4.1)
+# --------------------------------------------------------------------------- #
+#: barrier-name -> engines that can host it.  BSP/SSP need centralised state;
+#: ASP needs none; pBSP/pSSP run anywhere (that is the point of the paper).
+_COMBINATIONS = {
+    "bsp": ("mapreduce", "ps"),
+    "ssp": ("ps",),
+    "asp": ("ps", "p2p"),
+    "pbsp": ("ps", "p2p"),
+    "pssp": ("ps", "p2p"),
+}
+
+
+def valid_combinations(barrier_name: str) -> Sequence[str]:
+    return _COMBINATIONS[barrier_name.lower()]
+
+
+class Engine:
+    """Common engine machinery: configure a simulation and run it."""
+
+    name = "base"
+    distributed_states = False
+
+    def __init__(self, barrier: BarrierControl | str = "bsp", **overrides):
+        if isinstance(barrier, str):
+            barrier = make_barrier(barrier)
+        if self.name != "base" and self.name not in _COMBINATIONS[barrier.name]:
+            raise ValueError(
+                f"{barrier.name} cannot run on the {self.name} engine "
+                f"(paper §4.1: needs one of {_COMBINATIONS[barrier.name]}); "
+                "only ASP and PSP support distributed barrier state")
+        self.barrier = barrier
+        self.overrides = overrides
+
+    # the four shared APIs (paper §4) — semantic no-op hooks that the
+    # simulator enacts; exposed so applications can be written against them.
+    def schedule(self, step: int, n_params: int) -> np.ndarray:
+        """Which model parameters to update this step (here: all)."""
+        return np.arange(n_params)
+
+    def pull(self):
+        raise NotImplementedError("driven by the simulator's event loop")
+
+    def push(self):
+        raise NotImplementedError("driven by the simulator's event loop")
+
+    def run(self, **cfg_kwargs) -> SimResult:
+        cfg_kwargs = {**self.overrides, **cfg_kwargs}
+        cfg = SimConfig(barrier=self.barrier,
+                        distributed_sampling=self.distributed_states,
+                        **cfg_kwargs)
+        return run_simulation(cfg)
+
+
+class MapReduceEngine(Engine):
+    """Bulk phases: map (local grads) → barrier → reduce (server apply).
+
+    MapReduce "requires map to complete before reducing" (Table 1) — i.e. the
+    engine is inherently BSP.
+    """
+
+    name = "mapreduce"
+    distributed_states = False
+
+    def __init__(self, **overrides):
+        super().__init__(BSP(), **overrides)
+
+
+class ParameterServerEngine(Engine):
+    """[centralised model, centralised states] — swappable barrier."""
+
+    name = "ps"
+    distributed_states = False
+
+
+class P2PEngine(Engine):
+    """[centralised-or-distributed model, **distributed** states].
+
+    Barrier decisions are taken node-locally from overlay samples; the model
+    server (when present) is a stateless stream server.  Only ASP and the
+    probabilistic barriers are admissible here — BSP/SSP would need the very
+    global view this engine abolishes.
+    """
+
+    name = "p2p"
+    distributed_states = True

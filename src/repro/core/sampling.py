@@ -1,0 +1,154 @@
+"""The ``sampling`` system primitive (the paper's central contribution).
+
+The primitive answers: *"give me the current steps of β uniformly random
+workers"*.  Composed with any barrier predicate (:mod:`repro.core.barriers`)
+it yields the probabilistic variants pBSP/pSSP, and because a β-sample needs
+no global state it can be evaluated **by every node independently** — turning
+a centralised barrier into a fully distributed one.
+
+Backends:
+
+* :class:`OverlaySampler` — samples through a structured overlay
+  (:class:`~repro.core.overlay.ChordOverlay`); charges O(β log N) hops.
+  Used by the simulator's *distributed* scenario.
+* :class:`CentralSampler` — the *centralised* scenario: the server holds the
+  step vector, sampling "is as trivial as a counting process" (paper §5).
+* :func:`sample_steps_jax` — jittable sampling of a step vector for the SPMD
+  trainer; seeded, without replacement (per-worker independent permutations).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.overlay import ChordOverlay, FullMembershipOverlay
+
+__all__ = [
+    "StepSample",
+    "CentralSampler",
+    "OverlaySampler",
+    "sample_steps_jax",
+]
+
+
+@dataclasses.dataclass
+class StepSample:
+    """Result of one sampling call."""
+
+    steps: np.ndarray          # i64[β] — sampled workers' current steps
+    worker_ids: np.ndarray     # i64[β]
+    cost_hops: int             # control-plane cost charged for this call
+
+
+class CentralSampler:
+    """Server-side sampling: the server already holds all steps."""
+
+    def __init__(self, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+
+    def sample(self, steps: Sequence[int], beta: Optional[int],
+               exclude: Optional[int] = None) -> StepSample:
+        steps = np.asarray(steps)
+        ids = np.arange(len(steps))
+        if exclude is not None:
+            keep = ids != exclude
+            ids, pool = ids[keep], steps[keep]
+        else:
+            pool = steps
+        if beta is None:  # classic barrier: full view
+            return StepSample(pool, ids, cost_hops=0)
+        beta = min(beta, len(pool))
+        if beta == 0:
+            return StepSample(pool[:0], ids[:0], cost_hops=0)
+        # rejection sampling: O(β) per call instead of rng.choice's O(N)
+        # permutation — this is the simulator's hottest path (every poll of
+        # every waiting node draws a fresh sample)
+        n = len(pool)
+        if beta * 4 < n:
+            seen: set = set()
+            while len(seen) < beta:
+                for v in self._rng.integers(0, n, size=beta):
+                    seen.add(int(v))
+                    if len(seen) == beta:
+                        break
+            sel = np.fromiter(seen, dtype=np.int64)
+        else:
+            sel = self._rng.choice(n, size=beta, replace=False)
+        # Centralised: zero extra messages — it's a local counting process.
+        return StepSample(pool[sel], ids[sel], cost_hops=0)
+
+
+class OverlaySampler:
+    """Node-local sampling through the structured overlay.
+
+    Each call queries β random peers for their step: β lookups of
+    O(log N) hops plus β direct step queries.
+    """
+
+    def __init__(self, overlay: ChordOverlay | FullMembershipOverlay):
+        self.overlay = overlay
+
+    def sample(self, steps: Sequence[int], beta: Optional[int],
+               exclude: Optional[int] = None) -> StepSample:
+        steps = np.asarray(steps)
+        if beta is None:
+            beta = len(steps)
+        peer_ids = np.asarray(self.overlay.sample(beta, exclude=exclude),
+                              dtype=np.int64)
+        cost = self.overlay.sample_cost_hops(len(peer_ids)) + len(peer_ids)
+        return StepSample(steps[peer_ids], peer_ids, cost_hops=cost)
+
+    def estimate_population(self) -> float:
+        return self.overlay.estimate_population()
+
+
+def sample_steps_jax(
+    key: jax.Array,
+    steps: jax.Array,
+    beta: int,
+    *,
+    exclude_self: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Jittable sampling primitive for the SPMD trainer.
+
+    For each of the W workers, draws β peers uniformly **without replacement**
+    (independent per worker, as each node samples locally in the distributed
+    scenario).
+
+    Args:
+      key: PRNG key.
+      steps: i32[W] — all workers' step counters (cheap to all-gather: 4W
+        bytes; this is the *only* globally exchanged control state, and in the
+        fully distributed deployment even this is replaced by β point queries).
+      beta: sample size β ≥ 0.
+      exclude_self: do not let a worker sample itself (it trivially satisfies
+        the predicate).
+
+    Returns:
+      sampled_steps: i32[W, β]
+      valid: bool[W, β] — False where β exceeded the peer population.
+    """
+    w = steps.shape[0]
+    if beta == 0:
+        return (jnp.zeros((w, 0), dtype=steps.dtype),
+                jnp.zeros((w, 0), dtype=bool))
+
+    keys = jax.random.split(key, w)
+
+    def one(worker_idx, k):
+        # Uniform scores; self is pushed to the end when excluded.
+        scores = jax.random.uniform(k, (w,))
+        if exclude_self:
+            scores = scores.at[worker_idx].set(2.0)
+        order = jnp.argsort(scores)          # ascending: β smallest = sample
+        take = order[:beta]
+        pop = w - 1 if exclude_self else w
+        valid = jnp.arange(beta) < pop
+        return steps[take], valid
+
+    sampled, valid = jax.vmap(one)(jnp.arange(w), keys)
+    return sampled, valid

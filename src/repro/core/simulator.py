@@ -1,0 +1,306 @@
+"""Discrete-event simulator of the paper's Actor system (§4–§5).
+
+Reproduces the evaluation workload: P heterogeneous nodes collaboratively
+training a d-parameter **linear model with SGD** through a parameter server,
+under a swappable barrier control (BSP / SSP / ASP / pBSP / pSSP).  The
+simulator is seeded and deterministic, and measures exactly what the paper
+plots:
+
+* per-node progress in steps at a time horizon (Fig 1a/1b/1c),
+* normalized model error ‖w − w*‖₂/‖w*‖₂ over time (Fig 1d),
+* number of updates received by the server over time (Fig 1e),
+* straggler sweeps — fraction and slowness (Fig 2),
+* scalability sweeps — system size (Fig 3).
+
+Faithfulness notes
+------------------
+* Each node holds an i.i.d. local dataset (paper §5: "every node hold the
+  equal-size data and the data is i.i.d.").
+* A node's SGD step: pull the current model, compute a minibatch gradient on
+  it, push the update.  Updates computed on a stale pull are exactly the
+  paper's "delayed updates" noise.
+* Barrier evaluation is either **centralised** (server-side counting process)
+  or **distributed** (each node samples β peers through the structured
+  overlay) — both scenarios of §5.
+* Control-plane cost is tracked separately from update messages, matching the
+  paper's Fig-1e methodology ("we ignore control messages ... negligible
+  compared to the size of model updates").
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.barriers import ASP, BSP, BarrierControl
+from repro.core.overlay import ChordOverlay, FullMembershipOverlay
+from repro.core.sampling import CentralSampler, OverlaySampler
+
+__all__ = ["SimConfig", "SimResult", "Simulator", "run_simulation"]
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """Configuration mirroring the paper's experimental setup."""
+
+    n_nodes: int = 100
+    duration: float = 40.0          # simulated seconds (paper: 40 s)
+    dim: int = 100                  # model dimensionality (paper: 1000)
+    batch: int = 8                  # minibatch per local step
+    #: learning rate; None ⇒ 0.5/P (server applies P concurrent pushes, so
+    #: stability of the quadratic task needs P·lr < 2; see tests)
+    lr: Optional[float] = None
+    base_compute: float = 0.1       # mean seconds per local SGD step
+    compute_jitter: float = 0.5     # U[1−j/2, 1+j/2] multiplicative noise
+    straggler_frac: float = 0.0     # fraction of slow nodes (Fig 2)
+    straggler_slowdown: float = 4.0  # slow nodes are this many × slower
+    barrier: BarrierControl = dataclasses.field(default_factory=BSP)
+    distributed_sampling: bool = False  # node-local sampling via overlay
+    poll_interval: float = 0.02     # waiting-node recheck cadence (sampled)
+    measure_interval: float = 0.5   # error/progress trace cadence
+    noise_std: float = 0.1          # label noise of the linear task
+    churn_join_rate: float = 0.0    # nodes joining per second
+    churn_leave_rate: float = 0.0   # nodes leaving per second
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    steps: np.ndarray               # i64[P] final per-node progress
+    times: np.ndarray               # f64[M] measurement grid
+    errors: np.ndarray              # f64[M] normalized ‖w−w*‖/‖w*‖
+    server_updates: np.ndarray      # i64[M] cumulative updates at server
+    control_messages: int           # overlay/sampling control-plane cost
+    total_updates: int
+    mean_progress: float
+    final_error: float
+
+    def lag_pmf(self) -> np.ndarray:
+        lags = self.steps.max() - self.steps
+        pmf = np.bincount(lags).astype(np.float64)
+        return pmf / pmf.sum()
+
+
+# event kinds
+_FINISH, _POLL, _MEASURE, _JOIN, _LEAVE = range(5)
+
+
+class Simulator:
+    """Single-run simulator.  See :func:`run_simulation` for the entry point."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        P, d = cfg.n_nodes, cfg.dim
+        self.lr = cfg.lr if cfg.lr is not None else 0.5 / P
+
+        # --- linear-regression ground truth & server model ---------------- #
+        self.w_true = self.rng.normal(size=d) / np.sqrt(d)
+        self.w = np.zeros(d)
+        self.w_true_norm = float(np.linalg.norm(self.w_true))
+
+        # --- node state ---------------------------------------------------- #
+        self.steps = np.zeros(P, dtype=np.int64)
+        self.alive = np.ones(P, dtype=bool)
+        self._all_alive = (cfg.churn_leave_rate == 0.0
+                           and cfg.churn_join_rate == 0.0)
+        self.pulled_w: List[np.ndarray] = [self.w.copy() for _ in range(P)]
+        speed = 1.0 + cfg.compute_jitter * (self.rng.random(P) - 0.5)
+        n_slow = int(round(cfg.straggler_frac * P))
+        slow_ids = self.rng.choice(P, size=n_slow, replace=False)
+        speed[slow_ids] *= cfg.straggler_slowdown
+        self.compute_time = cfg.base_compute * speed  # per-node mean step time
+
+        # --- barrier / sampling backends ----------------------------------- #
+        self.barrier = cfg.barrier
+        if cfg.distributed_sampling:
+            self.overlay = ChordOverlay(seed=cfg.seed + 1)
+            self.node_ids = [self.overlay.join(i) for i in range(P)]
+            self.sampler = OverlaySampler(self.overlay)
+        else:
+            self.overlay = None
+            self.sampler = CentralSampler(seed=cfg.seed + 1)
+
+        # --- bookkeeping ---------------------------------------------------- #
+        self.now = 0.0
+        self.total_updates = 0
+        self.control_messages = 0
+        self._events: List[Tuple[float, int, int, int]] = []
+        self._seq = itertools.count()
+        self._waiting: Dict[int, int] = {}   # node -> step it wants to start
+        self._trace_t: List[float] = []
+        self._trace_err: List[float] = []
+        self._trace_upd: List[int] = []
+        # fast-path state for full-view (deterministic) barriers
+        self._full_view = self.barrier.sample_size is None and \
+            not isinstance(self.barrier, ASP)
+
+    # ------------------------------------------------------------------ #
+    def _push(self, t: float, kind: int, node: int = -1) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, node))
+
+    def _step_duration(self, node: int) -> float:
+        # exponential-ish jitter around the node's mean (heterogeneous net+CPU)
+        return float(self.compute_time[node] *
+                     (0.5 + self.rng.random()))
+
+    # ------------------------------------------------------------------ #
+    # SGD mechanics
+    # ------------------------------------------------------------------ #
+    def _local_gradient(self, node: int) -> np.ndarray:
+        """Minibatch gradient of ½‖Xw−y‖² on node-local i.i.d. data."""
+        cfg = self.cfg
+        X = self.rng.normal(size=(cfg.batch, cfg.dim))
+        y = X @ self.w_true + cfg.noise_std * self.rng.normal(size=cfg.batch)
+        w_local = self.pulled_w[node]
+        return X.T @ (X @ w_local - y) / cfg.batch
+
+    def _push_update(self, node: int) -> None:
+        """Node pushes −η·∇f(w_pulled); the server applies it (data plane)."""
+        g = self._local_gradient(node)
+        self.w -= self.lr * g
+        self.total_updates += 1
+
+    def _pull_model(self, node: int) -> None:
+        self.pulled_w[node] = self.w.copy()
+
+    # ------------------------------------------------------------------ #
+    # barrier plumbing
+    # ------------------------------------------------------------------ #
+    def _can_pass(self, node: int) -> bool:
+        if isinstance(self.barrier, ASP):
+            return True
+        beta = self.barrier.sample_size
+        # avoid the O(N) alive-mask gather on the hot path when there is
+        # no churn (the common case)
+        all_alive = self._all_alive if hasattr(self, "_all_alive") else True
+        alive_steps = self.steps if all_alive else self.steps[self.alive]
+        if self.cfg.distributed_sampling and beta is not None:
+            sample = self.sampler.sample(self.steps, beta, exclude=node)
+            self.control_messages += sample.cost_hops
+            pool = sample.steps
+        else:
+            sample = self.sampler.sample(alive_steps, beta, exclude=None)
+            # centralised: counting process at the server — no extra messages
+            pool = sample.steps
+        if pool.size == 0:
+            return True
+        return bool(np.all(self.steps[node] - pool <= self.barrier.staleness))
+
+    def _try_advance(self, node: int) -> None:
+        """Barrier check; on success begin the node's next step."""
+        if not self.alive[node]:
+            return
+        if self._can_pass(node):
+            self._waiting.pop(node, None)
+            self._pull_model(node)
+            self._push(self.now + self._step_duration(node), _FINISH, node)
+        else:
+            if node not in self._waiting:
+                self._waiting[node] = int(self.steps[node])
+            if not self._full_view:
+                # sampled barriers re-draw a fresh sample after a poll interval
+                self._push(self.now + self.cfg.poll_interval, _POLL, node)
+
+    def _wake_waiters(self) -> None:
+        """Deterministic barriers re-check when the global min step moves."""
+        if not self._waiting:
+            return
+        for node in list(self._waiting):
+            self._try_advance(node)
+
+    # ------------------------------------------------------------------ #
+    # event handlers
+    # ------------------------------------------------------------------ #
+    def _on_finish(self, node: int) -> None:
+        if not self.alive[node]:
+            return
+        self._push_update(node)
+        old_min = int(self.steps[self.alive].min())
+        self.steps[node] += 1
+        self._try_advance(node)
+        if self._full_view and int(self.steps[self.alive].min()) != old_min:
+            self._wake_waiters()
+
+    def _on_measure(self) -> None:
+        err = float(np.linalg.norm(self.w - self.w_true) / self.w_true_norm)
+        self._trace_t.append(self.now)
+        self._trace_err.append(err)
+        self._trace_upd.append(self.total_updates)
+        if self.now + self.cfg.measure_interval <= self.cfg.duration + 1e-9:
+            self._push(self.now + self.cfg.measure_interval, _MEASURE)
+
+    def _on_leave(self) -> None:
+        alive_ids = np.flatnonzero(self.alive)
+        if len(alive_ids) > 2:
+            node = int(self.rng.choice(alive_ids))
+            self.alive[node] = False
+            if self.overlay is not None:
+                self.overlay.leave(self.node_ids[node])
+            self._waiting.pop(node, None)
+            self._wake_waiters() if self._full_view else None
+        if self.cfg.churn_leave_rate > 0:
+            self._push(self.now + self.rng.exponential(
+                1.0 / self.cfg.churn_leave_rate), _LEAVE)
+
+    def _on_join(self) -> None:
+        # a previously departed node re-joins (bounded population model)
+        dead = np.flatnonzero(~self.alive)
+        if len(dead):
+            node = int(self.rng.choice(dead))
+            self.alive[node] = True
+            self.steps[node] = int(self.steps[self.alive].max())  # fresh start
+            if self.overlay is not None:
+                self.node_ids[node] = self.overlay.join(node)
+            self._try_advance(node)
+        if self.cfg.churn_join_rate > 0:
+            self._push(self.now + self.rng.exponential(
+                1.0 / self.cfg.churn_join_rate), _JOIN)
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        for node in range(cfg.n_nodes):
+            self._push(self._step_duration(node), _FINISH, node)
+        self._push(0.0, _MEASURE)
+        if cfg.churn_leave_rate > 0:
+            self._push(self.rng.exponential(1.0 / cfg.churn_leave_rate), _LEAVE)
+        if cfg.churn_join_rate > 0:
+            self._push(self.rng.exponential(1.0 / cfg.churn_join_rate), _JOIN)
+
+        while self._events:
+            t, _, kind, node = heapq.heappop(self._events)
+            if t > cfg.duration:
+                break
+            self.now = t
+            if kind == _FINISH:
+                self._on_finish(node)
+            elif kind == _POLL:
+                if node in self._waiting:
+                    self._try_advance(node)
+            elif kind == _MEASURE:
+                self._on_measure()
+            elif kind == _LEAVE:
+                self._on_leave()
+            elif kind == _JOIN:
+                self._on_join()
+
+        err = float(np.linalg.norm(self.w - self.w_true) / self.w_true_norm)
+        return SimResult(
+            steps=self.steps.copy(),
+            times=np.asarray(self._trace_t),
+            errors=np.asarray(self._trace_err),
+            server_updates=np.asarray(self._trace_upd),
+            control_messages=self.control_messages,
+            total_updates=self.total_updates,
+            mean_progress=float(self.steps[self.alive].mean()),
+            final_error=err,
+        )
+
+
+def run_simulation(cfg: SimConfig) -> SimResult:
+    """Run one seeded simulation."""
+    return Simulator(cfg).run()

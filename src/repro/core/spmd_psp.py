@@ -1,0 +1,271 @@
+"""TPU-native PSP: barrier control as a first-class SPMD training feature.
+
+The paper's deployment model (WAN actors) does not exist on a TPU pod — an
+SPMD program is lockstep by construction.  What transfers is the *semantics*:
+workers at heterogeneous speeds, a server model updated by possibly-stale
+pushes, and a barrier predicate (evaluated on a β-sample of step counters)
+gating when each worker may start its next step.
+
+This module implements those semantics as a single jittable train step
+(`lax`-only control flow), so one SPMD program faithfully executes
+BSP / SSP / ASP / pBSP / pSSP and their convergence-vs-virtual-wall-clock
+trade-offs can be measured on real models — and so the PSP logic itself is
+visible to the multi-pod dry-run and the roofline pipeline.
+
+Mapping (DESIGN.md §3/§4):
+
+* **worker** = a data-parallel shard group (the ``data`` mesh axis carries the
+  worker dimension W; the ``model`` axis shards each worker's compute).  In a
+  multi-pod mesh a worker is a (pod, data-row) pair.
+* **server model** = one replicated parameter pytree, updated by masked
+  contributions (`psum` over the worker axis is the only cross-worker
+  collective — identical schedule to plain DP, so PSP adds *zero* extra
+  collective bytes on the data plane; the control plane is a W-length i32
+  vector).
+* **worker view** = each worker's stale pull of the server model (leading W
+  axis sharded over ``data``), updated by a masked "pull" when the worker
+  passes the barrier.  This reproduces read-my-writes staleness exactly.
+* **virtual clock** = seeded per-worker step durations (heterogeneity +
+  straggler injection, reproducing Fig 2 on-device).  Time advances
+  event-style to the next completion.
+
+The per-tick protocol (one call of :func:`psp_train_step`):
+
+  1. every worker computes a gradient on **its own view** (SPMD always
+     computes; masks decide what lands),
+  2. workers whose virtual clock completed *push*: the server applies the
+     masked sum of their gradients through the optimizer,
+  3. completed workers evaluate the barrier on a β-sample of the step
+     vector; those allowed *pull* the fresh server model, bump their step,
+     and draw the duration of their next local step; blocked workers hold
+     (they re-sample next tick — the paper's "holds until condition is
+     satisfied").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.barriers import BarrierControl, make_barrier
+from repro.core.sampling import sample_steps_jax
+
+__all__ = ["PSPConfig", "PSPState", "psp_init", "psp_train_step",
+           "make_psp_step_fn"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PSPConfig:
+    """Barrier-control configuration for the SPMD trainer."""
+
+    barrier: str = "pssp"          # bsp | ssp | asp | pbsp | pssp
+    staleness: int = 4             # s (ignored by bsp/asp)
+    sample_size: int = 16          # β (ignored by classic barriers)
+    n_workers: int = 8             # W — data-parallel worker groups
+    # heterogeneity model (virtual seconds per local step)
+    base_compute: float = 0.1
+    compute_jitter: float = 0.5    # per-step U[1−j/2, 1+j/2] noise
+    straggler_frac: float = 0.0
+    straggler_slowdown: float = 4.0
+    poll_interval: float = 0.02    # blocked-worker re-sample cadence (virtual s)
+    contribution: str = "mean"     # "mean" | "sum" over pushing workers
+
+    def make_barrier(self) -> BarrierControl:
+        return make_barrier(self.barrier, staleness=self.staleness,
+                            sample_size=self.sample_size)
+
+    @property
+    def beta(self) -> int:
+        b = self.make_barrier()
+        return 0 if b.sample_size is None else min(b.sample_size,
+                                                   self.n_workers - 1)
+
+    @property
+    def effective_staleness(self) -> int:
+        b = self.make_barrier()
+        return int(b.staleness)
+
+    @property
+    def is_classic(self) -> bool:
+        """Classic barriers evaluate the full step vector (β = W−1)."""
+        return self.barrier in ("bsp", "ssp")
+
+    @property
+    def is_asp(self) -> bool:
+        return self.barrier == "asp"
+
+
+class PSPState(NamedTuple):
+    """Replicated-or-sharded training state carried across ticks."""
+
+    server_params: PyTree          # the single server model
+    opt_state: PyTree              # optimizer state of the server model
+    views: PyTree                  # [W, ...] worker views (stale pulls)
+    step: jax.Array                # i32[W] logical step counters
+    busy_until: jax.Array          # f32[W] virtual completion times
+    pushed: jax.Array              # bool[W] pushed current step's update?
+    now: jax.Array                 # f32[] virtual wall clock
+    slow: jax.Array                # bool[W] straggler flags (static draw)
+    key: jax.Array                 # PRNG key
+    tick: jax.Array                # i32[] SPMD tick counter
+    total_pushes: jax.Array        # i32[] server update count (Fig 1e)
+
+
+def _duration(cfg: PSPConfig, key: jax.Array, slow: jax.Array) -> jax.Array:
+    """Seeded per-worker duration of one local step (virtual seconds)."""
+    w = slow.shape[0]
+    jit = 1.0 + cfg.compute_jitter * (jax.random.uniform(key, (w,)) - 0.5)
+    mult = jnp.where(slow, cfg.straggler_slowdown, 1.0)
+    return cfg.base_compute * jit * mult
+
+
+def psp_init(cfg: PSPConfig, params: PyTree, opt_init: Callable[[PyTree], PyTree],
+             key: jax.Array) -> PSPState:
+    """Build the initial PSP state from server params."""
+    w = cfg.n_workers
+    views = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (w,) + p.shape),
+                         params)
+    k_slow, k_dur, k_carry = jax.random.split(key, 3)
+    n_slow = int(round(cfg.straggler_frac * w))
+    slow = jnp.arange(w) < n_slow  # deterministic placement; permuted below
+    slow = jax.random.permutation(k_slow, slow)
+    dur = _duration(cfg, k_dur, slow)
+    return PSPState(
+        server_params=params,
+        opt_state=opt_init(params),
+        views=views,
+        step=jnp.zeros((w,), jnp.int32),
+        busy_until=dur,
+        pushed=jnp.zeros((w,), bool),
+        now=jnp.zeros((), jnp.float32),
+        slow=slow,
+        key=k_carry,
+        tick=jnp.zeros((), jnp.int32),
+        total_pushes=jnp.zeros((), jnp.int32),
+    )
+
+
+def _barrier_allowed(cfg: PSPConfig, key: jax.Array, step: jax.Array
+                     ) -> jax.Array:
+    """bool[W]: may each worker start its next step, per the barrier?"""
+    w = step.shape[0]
+    if cfg.is_asp:
+        return jnp.ones((w,), bool)
+    if cfg.is_classic:
+        # full view: worker may advance iff it leads the slowest by ≤ s
+        lag = step[:, None] - step[None, :]
+        return jnp.all(lag <= cfg.effective_staleness, axis=1)
+    # probabilistic: β-sample per worker (the sampling primitive)
+    sampled, valid = sample_steps_jax(key, step, cfg.beta)
+    barrier = cfg.make_barrier()
+    return barrier.can_pass_jax(step, sampled, valid)
+
+
+def psp_train_step(
+    cfg: PSPConfig,
+    grad_fn: Callable[[PyTree, PyTree], Tuple[jax.Array, PyTree]],
+    opt_update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]],
+    state: PSPState,
+    batch: PyTree,
+) -> Tuple[PSPState, dict]:
+    """One SPMD tick of PSP training.
+
+    Args:
+      cfg: barrier configuration (static).
+      grad_fn: ``(params, microbatch) -> (loss, grads)`` for ONE worker;
+        vmapped over the leading W axis of ``state.views`` / ``batch``.
+      opt_update: ``(grads, opt_state, params) -> (updates, new_opt_state)``.
+      state: carried :class:`PSPState`.
+      batch: pytree with leading axis W (per-worker microbatches).
+
+    Returns: (new_state, metrics)
+    """
+    key, k_bar, k_dur = jax.random.split(state.key, 3)
+
+    # (1) every worker computes on its own (possibly stale) view
+    losses, grads = jax.vmap(grad_fn)(state.views, batch)
+
+    # (2) completions push to the server
+    completed = state.busy_until <= state.now
+    push_mask = completed & ~state.pushed
+    denom = jnp.maximum(jnp.sum(push_mask), 1)
+    scale = jnp.where(cfg.contribution == "mean", 1.0 / denom, 1.0)
+
+    def _masked_sum(g):
+        m = push_mask.reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.sum(jnp.where(m, g, 0), axis=0) * scale
+
+    server_grad = jax.tree.map(_masked_sum, grads)
+    any_push = jnp.any(push_mask)
+    updates, new_opt = opt_update(server_grad, state.opt_state,
+                                  state.server_params)
+    new_params = jax.tree.map(
+        lambda p, u: jnp.where(any_push, p + u, p),
+        state.server_params, updates)
+    new_opt = jax.tree.map(
+        lambda new, old: jnp.where(any_push, new, old), new_opt,
+        state.opt_state)
+    pushed = state.pushed | push_mask
+
+    # (3) barrier: completed workers try to start their next step
+    allowed = _barrier_allowed(cfg, k_bar, state.step) & completed
+    new_step = state.step + allowed.astype(jnp.int32)
+    next_dur = _duration(cfg, k_dur, state.slow)
+    new_busy = jnp.where(allowed, state.now + next_dur, state.busy_until)
+    new_pushed = jnp.where(allowed, False, pushed)
+
+    def _pull(view, p):
+        m = allowed.reshape((-1,) + (1,) * p.ndim)
+        return jnp.where(m, p[None], view)
+
+    new_views = jax.tree.map(_pull, state.views, new_params)
+
+    # (4) event-driven virtual-time advance: jump to the earlier of (a) the
+    # next completion of a still-busy worker, (b) the next poll of a
+    # barrier-blocked worker (the paper's "holds until condition is
+    # satisfied" — re-sampling costs a poll interval of virtual time).
+    blocked = completed & ~allowed
+    next_busy = jnp.min(jnp.where(new_busy > state.now, new_busy, jnp.inf))
+    next_poll = jnp.where(jnp.any(blocked),
+                          state.now + cfg.poll_interval, jnp.inf)
+    next_time = jnp.minimum(next_busy, next_poll)
+    new_now = jnp.where(jnp.isfinite(next_time),
+                        jnp.maximum(state.now, next_time), state.now)
+
+    new_state = PSPState(
+        server_params=new_params,
+        opt_state=new_opt,
+        views=new_views,
+        step=new_step,
+        busy_until=new_busy,
+        pushed=new_pushed,
+        now=new_now,
+        slow=state.slow,
+        key=key,
+        tick=state.tick + 1,
+        total_pushes=state.total_pushes + jnp.sum(push_mask),
+    )
+    metrics = {
+        # pushed-worker mean; falls back to the all-worker mean on ticks
+        # where nobody completed (avoids misleading 0.0 readouts)
+        "loss": jnp.where(any_push,
+                          jnp.sum(jnp.where(push_mask, losses, 0)) / denom,
+                          jnp.mean(losses)),
+        "pushes": jnp.sum(push_mask),
+        "allowed": jnp.sum(allowed),
+        "blocked": jnp.sum(blocked),
+        "mean_step": jnp.mean(new_step.astype(jnp.float32)),
+        "step_spread": (jnp.max(new_step) - jnp.min(new_step)),
+        "virtual_time": new_now,
+    }
+    return new_state, metrics
+
+
+def make_psp_step_fn(cfg: PSPConfig, grad_fn, opt_update):
+    """Convenience: partially-applied, jit-ready step function."""
+    return functools.partial(psp_train_step, cfg, grad_fn, opt_update)

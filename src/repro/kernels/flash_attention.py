@@ -1,0 +1,132 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+TPU-native adaptation (DESIGN.md §3.5): q/k/v tiles live in VMEM via
+BlockSpecs; the MXU consumes (block_q × hd)·(hd × block_k) tiles with
+hardware-aligned 128-multiples; online softmax state (m, l, acc) sits in
+VMEM scratch and is carried across the sequential k-block grid dimension
+(TPU grids iterate the last axis innermost and sequentially, which is
+exactly the flash accumulation order).  Causal + sliding-window masking is
+applied in-tile; fully-masked tiles are skipped with ``pl.when`` so SWA
+does O(S·W) work.
+
+Layout: q (B, H, Sq, hd), k/v (B, H, Sk, hd) — MHA (the ops wrapper
+repeats GQA KV heads, mirroring the model's XLA path).
+Grid: (B·H, nq, nk); block shapes (1, block_q, hd) / (1, block_k, hd).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_tpu"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            block_q: int, block_k: int, nk: int, causal: bool,
+            window: Optional[int], softcap: Optional[float], scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, _NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # tile visibility: skip tiles fully outside the causal/window band
+    first_q = qi * block_q
+    last_q = first_q + block_q - 1
+    first_k = ki * block_k
+    last_k = first_k + block_k - 1
+    visible = True
+    if causal:
+        visible = jnp.logical_and(visible, first_k <= last_q)
+    if window is not None:
+        visible = jnp.logical_and(visible, last_k > first_q - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_sc[...]
+        l_prev = l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_sc[...] = m_new
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * corr + pv
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_sc[...] /
+                    jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        block_q: int = 128,
+                        block_k: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q, k, v: (B, H, S, hd) → (B, H, S, hd)."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    bh = B * H
+    qr = q.reshape(bh, Sq, hd)
+    kr = k.reshape(bh, Sk, hd)
+    vr = v.reshape(bh, Sk, hd)
+
+    kern = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, nk=nk, causal=causal,
+        window=window, softcap=softcap, scale=hd ** -0.5)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, hd)

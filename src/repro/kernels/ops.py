@@ -1,0 +1,86 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``impl="auto"`` picks the Pallas kernel on TPU and the pure-jnp reference on
+CPU (where Mosaic kernels cannot lower; interpret mode is for tests).  The
+model code calls these wrappers so a TPU deployment gets the kernels without
+touching model code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.rmsnorm import rmsnorm_tpu
+from repro.kernels.ssd_scan import ssd_scan_tpu
+
+__all__ = ["attention", "ssd", "rmsnorm"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "impl"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None,
+              impl: str = "auto") -> jax.Array:
+    """q,k,v: (B, S, H, hd) MHA layout → (B, S, H, hd)."""
+    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    interp = impl == "interpret"
+    if use_kernel or interp:
+        o = flash_attention_tpu(q.transpose(0, 2, 1, 3),
+                                k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3),
+                                causal=causal, window=window,
+                                softcap=softcap, interpret=interp)
+        return o.transpose(0, 2, 1, 3)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(xdt: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array, *,
+        chunk: int = 128, impl: str = "auto") -> jax.Array:
+    """Chunked SSD over (BH, S, ·) tensors (see ssd_scan_tpu)."""
+    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    interp = impl == "interpret"
+    if use_kernel or interp:
+        return ssd_scan_tpu(xdt, dA, Bm, Cm, chunk=chunk, interpret=interp)
+    # reference path: reconstruct (x·dt, dt·A) → sequential recurrence.
+    # ssd_ref wants per-step dt and B/C per head; feed dt=1 with xdt/dA
+    # pre-multiplied (algebraically identical).
+    BH, S, hd = xdt.shape
+    x4 = xdt[:, :, None, :]                     # (BH, S, 1, hd)
+    dt4 = jnp.ones((BH, S, 1), xdt.dtype)
+    A4 = jnp.zeros((1,), jnp.float32)
+    # y_t = C·h_t ; h_t = exp(dA_t)·h + B x·dt — emulate via custom scan
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dat, bt, ct = inp
+        h = h * jnp.exp(dat.astype(f32))[:, None, None] \
+            + jnp.einsum("bn,bd->bdn", bt.astype(f32), xt.astype(f32))
+        return h, jnp.einsum("bn,bdn->bd", ct.astype(f32), h)
+
+    h0 = jnp.zeros((BH, hd, Bm.shape[-1]), f32)
+    xs = (xdt.swapaxes(0, 1), dA.swapaxes(0, 1), Bm.swapaxes(0, 1),
+          Cm.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(xdt.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            impl: str = "auto") -> jax.Array:
+    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    interp = impl == "interpret"
+    if use_kernel or interp:
+        return rmsnorm_tpu(x, w, eps=eps, interpret=interp)
+    return ref.rmsnorm_ref(x, w, eps)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel tests sweep against
+(``assert_allclose`` over shapes × dtypes, kernels run in interpret mode on
+CPU).  They are deliberately naive — O(S²) attention, direct recurrences —
+because obviousness is the point of an oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "ssd_ref", "rmsnorm_ref"]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """Naive attention.  q,k,v: (B, S, H, hd) MHA layout."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qa, ka = jnp.arange(Sq), jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= qa[:, None] >= ka[None, :]
+    if window is not None:
+        m &= (qa[:, None] - ka[None, :]) < window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence (the definition, not the dual form).
+
+    x: (B, S, nh, hd); dt: (B, S, nh); A: (nh,) (negative);
+    Bm, Cm: (B, S, nh, N) (already broadcast to heads).
+    Returns y: (B, S, nh, hd) where
+        h_t = exp(dt_t A) h_{t−1} + dt_t B_t ⊗ x_t ;  y_t = C_t · h_t
+    """
+    B, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt.astype(f32) * A.astype(f32))        # (B,nh)
+        upd = jnp.einsum("bhn,bhd,bh->bhdn", bt.astype(f32),
+                         xt.astype(f32), dtt.astype(f32))
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhdn->bhd", ct.astype(f32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, nh, hd, N), f32)
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), Bm.swapaxes(0, 1),
+          Cm.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)) \
+        .astype(x.dtype)

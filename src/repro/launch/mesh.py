@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and smoke tests must keep seeing 1 device.
+
+Mesh geometry (v5e pods):
+  single-pod: (data=16, model=16)          — 256 chips
+  multi-pod:  (pod=2, data=16, model=16)   — 512 chips
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2,
+                   pod: Optional[int] = None) -> Mesh:
+    """Small mesh over however many (host) devices exist — for tests."""
+    n = len(jax.devices())
+    assert n >= data * model * (pod or 1), (n, data, model, pod)
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

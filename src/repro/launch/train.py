@@ -1,0 +1,113 @@
+"""Training launcher.
+
+Two modes:
+
+* ``--barrier none``  — plain synchronous (pjit) training: the classical
+  data+tensor-parallel path used by the dry-run.
+* ``--barrier {bsp,ssp,asp,pbsp,pssp}`` — PSP training (the paper's
+  technique as a first-class feature): W worker views, seeded virtual-clock
+  heterogeneity, masked server aggregation (core/spmd_psp.py).
+
+CPU example (used by examples/train_e2e.py):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+        --steps 200 --batch 8 --seq 128 --barrier pbsp --workers 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, reduced as make_reduced
+from repro.core.spmd_psp import PSPConfig, psp_init, psp_train_step
+from repro.data import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import init_model, loss_fn
+from repro.optim import adamw, apply_updates, clip_by_norm, warmup_cosine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--barrier", default="none",
+                    choices=["none", "bsp", "ssp", "asp", "pbsp", "pssp"])
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--sample-size", type=int, default=2)
+    ap.add_argument("--staleness", type=int, default=3)
+    ap.add_argument("--straggler-frac", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--vocab", type=int, default=512)
+    a = ap.parse_args(argv)
+
+    cfg = get_config(a.arch)
+    if a.reduced:
+        cfg = make_reduced(cfg, n_layers=a.n_layers, d_model=a.d_model)
+        cfg = dataclasses.replace(cfg, vocab_size=a.vocab)
+    opt = adamw(warmup_cosine(a.lr, a.steps // 10 + 1, a.steps))
+    key = jax.random.PRNGKey(a.seed)
+    params = init_model(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params:,} barrier={a.barrier}")
+
+    t0 = time.time()
+    if a.barrier == "none":
+        data = iter(SyntheticLM(cfg.vocab_size, a.seq, a.batch, seed=a.seed))
+        state = opt.init(params)
+        step_fn = jax.jit(make_train_step(cfg, opt))
+        for t in range(a.steps):
+            batch = next(data)
+            params, state, loss, _ = step_fn(params, state, batch)
+            if t % a.log_every == 0 or t == a.steps - 1:
+                print(f"step {t:5d} loss {float(loss):.4f} "
+                      f"({time.time()-t0:.1f}s)")
+    else:
+        W = a.workers
+        data = iter(SyntheticLM(cfg.vocab_size, a.seq, W * a.batch,
+                                seed=a.seed))
+        pcfg = PSPConfig(barrier=a.barrier, n_workers=W,
+                         sample_size=a.sample_size, staleness=a.staleness,
+                         straggler_frac=a.straggler_frac)
+
+        def grad_fn(p, tokens):
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                p, {"tokens": tokens}, cfg)
+            return loss, clip_by_norm(g, 1.0)
+
+        st = psp_init(pcfg, params, opt.init, jax.random.fold_in(key, 1))
+        step_fn = jax.jit(lambda s, b: psp_train_step(
+            pcfg, grad_fn, opt.update, s, b))
+        for t in range(a.steps):
+            toks = next(data)["tokens"].reshape(W, a.batch, a.seq)
+            st, m = step_fn(st, toks)
+            if t % a.log_every == 0 or t == a.steps - 1:
+                print(f"tick {t:5d} loss {float(m['loss']):.4f} "
+                      f"vtime {float(m['virtual_time']):.2f}s "
+                      f"mean_step {float(m['mean_step']):.1f} "
+                      f"spread {int(m['step_spread'])} "
+                      f"({time.time()-t0:.1f}s)")
+        params = st.server_params
+    if a.ckpt_dir:
+        path = save_checkpoint(a.ckpt_dir, a.steps, params,
+                               {"arch": cfg.name, "barrier": a.barrier})
+        print("checkpoint:", path)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

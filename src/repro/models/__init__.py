@@ -1,0 +1,7 @@
+"""Model zoo: composable decoder covering all assigned architectures."""
+from repro.models.transformer import (cache_defs, decode_step, forward,
+                                      init_cache, init_model, loss_fn,
+                                      model_defs, prefill, unembed_matrix)
+
+__all__ = ["cache_defs", "decode_step", "forward", "init_cache", "init_model",
+           "loss_fn", "model_defs", "prefill", "unembed_matrix"]

@@ -1,0 +1,309 @@
+"""Attention: GQA projections + chunked (flash-style) train/prefill path +
+single-token decode path.
+
+The train/prefill core is a two-level ``lax.scan`` with online softmax —
+algorithmically identical to the Pallas flash kernel
+(:mod:`repro.kernels.flash_attention`), so peak memory is O(block²) instead
+of O(S²) and the pure-XLA path stays compile-friendly at 512 partitions.
+On TPU the Pallas kernel replaces the inner loops; on CPU (tests, dry-run
+lowering) the scan path is used.
+
+Sliding-window layers slice a static (window + block) band of K/V per query
+block, so SWA FLOPs scale as O(S·W) rather than O(S²) — this is what makes
+``long_500k`` viable for the SWA archs and keeps prefill_32k honest in the
+roofline.
+
+Tensor-parallel head padding: the production mesh has a 16-way `model`
+axis; archs whose head count doesn't divide it (qwen1.5: 20H, qwen2: 14H,
+recurrentgemma: 10H) pad the *activation* head axis to the next multiple
+(q padded with zero queries, K/V repeated to full MHA layout and padded
+with zero keys, and the output projection padded with zero rows).  Dummy
+heads therefore contribute exactly zero to the output and receive zero
+gradient — semantics are unchanged, while the attention core shards evenly
+across `model` with no resharding of the residual stream (the alternative,
+batch-resharding per layer, triggered XLA "involuntary full
+rematerialization" — see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.flash import flash_attention
+from repro.models.layers import _gathered, rope, softcap
+from repro.models.params import ParamDef
+from repro.parallel.sharding import constrain, current_rules
+
+__all__ = ["attn_defs", "attn_apply", "chunked_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+#: fixed block count of the fused-QKV layout: one block per shard of the
+#: production 16-way `model` axis (works for any model size dividing 16)
+_QKV_BLOCKS = 16
+
+
+def _fusable_qkv(cfg) -> bool:
+    return (cfg.fuse_qkv and not cfg.qkv_bias
+            and cfg.n_heads % _QKV_BLOCKS == 0
+            and cfg.n_kv_heads % _QKV_BLOCKS == 0)
+
+
+def attn_defs(cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if _fusable_qkv(cfg):
+        # blocked fused projection: per model-shard block [q…, k…, v…] so
+        # q/k/v extraction slices an UNSHARDED dim (no resharding), and the
+        # backward dx needs ONE all-reduce instead of three
+        width = h // _QKV_BLOCKS + 2 * (kv // _QKV_BLOCKS)
+        defs = {
+            "wqkv": ParamDef((d, _QKV_BLOCKS, width, hd),
+                             ("d_model_w", "heads_w", None, None)),
+            "wo": ParamDef((h, hd, d), ("heads_w", None, "d_model_w")),
+        }
+        return defs
+    defs = {
+        "wq": ParamDef((d, h, hd), ("d_model_w", "heads_w", None)),
+        "wk": ParamDef((d, kv, hd), ("d_model_w", "kv_heads_w", None)),
+        "wv": ParamDef((d, kv, hd), ("d_model_w", "kv_heads_w", None)),
+        "wo": ParamDef((h, hd, d), ("heads_w", None, "d_model_w")),
+    }
+    if cfg.qkv_bias:
+        defs.update({
+            "bq": ParamDef((h, hd), ("heads_w", None), init="zeros"),
+            "bk": ParamDef((kv, hd), ("kv_heads_w", None), init="zeros"),
+            "bv": ParamDef((kv, hd), ("kv_heads_w", None), init="zeros"),
+        })
+    return defs
+
+
+# --------------------------------------------------------------------------- #
+# train / prefill core (MHA layout: K/V pre-repeated to H heads)
+# --------------------------------------------------------------------------- #
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True,
+                      window: Optional[int] = None,
+                      attn_softcap: Optional[float] = None,
+                      block_q: int = 512,
+                      block_k: int = 512) -> jax.Array:
+    """Online-softmax blocked attention (MHA layout).
+
+    q, k, v: (B, S, H, hd).  Query i attends keys ≤ i (+ window bound).
+    Returns (B, Sq, H, hd) in q.dtype.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, _, _ = k.shape
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq = Sq // block_q
+    scale = hd ** -0.5
+    qr = q * scale
+
+    if window is not None:
+        # static K/V band per query block: the window plus the query block,
+        # rounded up to whole K blocks
+        span = min(Sk, int(np.ceil((window + block_q) / block_k)) * block_k)
+    else:
+        span = Sk
+    nk = span // block_k
+
+    def q_block(carry, qi):
+        del carry
+        q_start = qi * block_q
+        qb = jax.lax.dynamic_slice_in_dim(qr, q_start, block_q, axis=1)
+        q_pos = q_start + jnp.arange(block_q)
+
+        if window is not None and span < Sk:
+            k_start = jnp.clip(q_start + block_q - span, 0, Sk - span)
+        else:
+            k_start = jnp.zeros((), jnp.int32)
+        kb_all = jax.lax.dynamic_slice_in_dim(k, k_start, span, axis=1)
+        vb_all = jax.lax.dynamic_slice_in_dim(v, k_start, span, axis=1)
+
+        m0 = jnp.full((B, H, block_q), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, H, block_q, hd), jnp.float32)
+
+        def k_block(kcarry, ki):
+            m, l, acc = kcarry
+            kb = jax.lax.dynamic_slice_in_dim(kb_all, ki * block_k, block_k, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vb_all, ki * block_k, block_k, 1)
+            k_pos = k_start + ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, attn_softcap)
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask, s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(k_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,H,bq,hd)
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # (nq, B, bq, H, hd) → (B, Sq, H, hd)
+    return blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+# --------------------------------------------------------------------------- #
+# decode core (GQA layout against the compact KV cache)
+# --------------------------------------------------------------------------- #
+def decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                     length: jax.Array, *,
+                     ring: bool = False,
+                     attn_softcap: Optional[float] = None) -> jax.Array:
+    """One-token attention against a KV cache.
+
+    q: (B, 1, H, hd); ck/cv: (B, S, KV, hd); length: i32[] — number of valid
+    cache entries (for ring buffers, valid = min(length, S); slot order is
+    irrelevant to softmax).
+    """
+    B, _, H, hd = q.shape
+    _, S, KV, _ = ck.shape
+    G = H // KV
+    qr = (q[:, 0] * hd ** -0.5).reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qr, ck,
+                   preferred_element_type=jnp.float32)
+    s = softcap(s, attn_softcap)
+    valid = jnp.arange(S) < jnp.minimum(length, S)
+    s = jnp.where(valid[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, cv.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# head padding for tensor parallelism
+# --------------------------------------------------------------------------- #
+def _model_axis_size() -> int:
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return 1
+    return int(rules.mesh.shape.get("model", 1))
+
+
+def _padded_heads(H: int, model: int) -> int:
+    if model <= 1 or H % model == 0:
+        return H
+    return int(np.ceil(H / model)) * model
+
+
+def _repeat_pad_kv(k: jax.Array, H: int, H_pad: int) -> jax.Array:
+    """(B,S,KV,hd) → MHA layout (B,S,H_pad,hd): repeat per group, zero-pad."""
+    B, S, KV, hd = k.shape
+    G = H // KV
+    k = jnp.repeat(k, G, axis=2)                           # (B,S,H,hd)
+    if H_pad > H:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, H_pad - H), (0, 0)))
+    return k
+
+
+# --------------------------------------------------------------------------- #
+# full module
+# --------------------------------------------------------------------------- #
+def attn_apply(p: dict, x: jax.Array, *, cfg, window: Optional[int],
+               positions: jax.Array, cache: Optional[dict] = None,
+               mode: str = "train",
+               max_len: Optional[int] = None
+               ) -> Tuple[jax.Array, Optional[dict]]:
+    """GQA attention with RoPE.
+
+    mode: "train" (no cache), "prefill" (returns cache), "decode"
+    (reads/updates cache; x is (B, 1, D); ``positions[0]`` is the write
+    position == current length).
+    """
+    dtype = x.dtype
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if _fusable_qkv(cfg):
+        nq, nkv = H // _QKV_BLOCKS, KV // _QKV_BLOCKS
+        proj = jnp.einsum(
+            "bsd,dnwk->bsnwk", x,
+            _gathered(p["wqkv"], dtype, (None, "heads_w", None, None)))
+        q = proj[:, :, :, :nq].reshape(B, S, H, hd)
+        k = proj[:, :, :, nq:nq + nkv].reshape(B, S, KV, hd)
+        v = proj[:, :, :, nq + nkv:].reshape(B, S, KV, hd)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x,
+                       _gathered(p["wq"], dtype, (None, "heads_w", None)))
+        k = jnp.einsum("bsd,dhk->bshk", x,
+                       _gathered(p["wk"], dtype, (None, "kv_heads_w", None)))
+        v = jnp.einsum("bsd,dhk->bshk", x,
+                       _gathered(p["wv"], dtype, (None, "kv_heads_w", None)))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(dtype)
+            k = k + p["bk"].astype(dtype)
+            v = v + p["bv"].astype(dtype)
+
+    if cfg.pos_embed == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    if mode == "decode":
+        assert cache is not None
+        length = positions[0]
+        ck, cv = cache["k"], cache["v"]
+        s_max = ck.shape[1]
+        slot = (length % s_max) if window is not None else length
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, 1)
+        ck = constrain(ck, ("cache_batch", "cache_seq", "kv_heads", None))
+        cv = constrain(cv, ("cache_batch", "cache_seq", "kv_heads", None))
+        o = decode_attention(q, ck, cv, length + 1, ring=window is not None,
+                             attn_softcap=cfg.attn_softcap)
+        new_cache = {"k": ck, "v": cv}
+        wo = _gathered(p["wo"], dtype, ("heads_w", None, None))
+    else:
+        model = _model_axis_size()
+        H_pad = _padded_heads(H, model)
+        if H_pad > H:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, H_pad - H), (0, 0)))
+        kf = _repeat_pad_kv(k, H, H_pad)
+        vf = _repeat_pad_kv(v, H, H_pad)
+        q = constrain(q, ("attn_batch", "qseq", "heads", None))
+        kf = constrain(kf, ("attn_batch", "seq", "heads", None))
+        vf = constrain(vf, ("attn_batch", "seq", "heads", None))
+        o = flash_attention(q, kf, vf, True, window, cfg.attn_softcap)
+        o = constrain(o, ("attn_batch", "qseq", "heads", None))
+        wo = _gathered(p["wo"], dtype, ("heads_w", None, None))
+        if H_pad > H:
+            wo = jnp.pad(wo, ((0, H_pad - H), (0, 0), (0, 0)))
+        new_cache = None
+        if mode == "prefill":
+            if window is not None:
+                w = window
+                if S >= w:
+                    # ring layout: absolute position p lives at slot p % w
+                    ck = jnp.roll(k[:, S - w:], S % w, axis=1)
+                    cv = jnp.roll(v[:, S - w:], S % w, axis=1)
+                else:
+                    pad = ((0, 0), (0, w - S), (0, 0), (0, 0))
+                    ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+            else:
+                ck, cv = k, v
+                if max_len is not None and max_len > S:
+                    pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+                    ck, cv = jnp.pad(ck, pad), jnp.pad(cv, pad)
+            ck = constrain(ck, ("cache_batch", "cache_seq", "kv_heads", None))
+            cv = constrain(cv, ("cache_batch", "cache_seq", "kv_heads", None))
+            new_cache = {"k": ck.astype(jnp.bfloat16),
+                         "v": cv.astype(jnp.bfloat16)}
+
+    out = jnp.einsum("bshk,hkd->bsd", o, wo)
+    return constrain(out, ("batch", "seq", None)), new_cache

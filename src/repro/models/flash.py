@@ -1,0 +1,317 @@
+"""Flash attention with a memory-correct custom VJP (pure-XLA path).
+
+Differentiating naively through the blocked-softmax scans makes JAX save
+every (block_q × block_k) probability/mask tile as a scan residual —
+O(S²/chips) bytes, which dominated the dry-run temp memory (see
+EXPERIMENTS.md §Perf).  The fix is the standard flash-attention backward:
+save only (q, k, v, o, lse), recompute tile scores/probabilities in the
+backward sweep, and accumulate dq/dk/dv blockwise.
+
+Forward:  o = softmax(mask(τ·tanh(qkᵀ/τ) if softcap else qkᵀ)) v
+Backward: p  = exp(s − lse)
+          dv = pᵀ · do
+          dp = do · vᵀ ;  ds = p ⊙ (dp − Δ),  Δ = rowsum(do ⊙ o)
+          (softcap chain: ds ← ds ⊙ (1 − tanh²(s_raw/τ)))
+          dq = ds · k ;  dk = dsᵀ · q
+
+Both sweeps are q-block scans with k-block inner scans over a static
+sliding-window band, so SWA keeps O(S·W) work in the backward as well.
+
+Causal global attention uses a **triangular pair scan**: instead of
+sweeping the full (nq × nk) tile rectangle and masking the upper half
+(≈2× wasted FLOPs — visible in the roofline useful_ratio), both sweeps
+iterate a static list of the nq·(nq+1)/2 visible (qi, ki) tile pairs and
+scatter-accumulate per-q-block softmax state (EXPERIMENTS.md §Perf,
+compute-term iteration).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -1e30
+
+
+def _tri_pairs(nq: int):
+    """Static (qi, ki) lists covering the causal lower-triangle of tiles."""
+    qis, kis = [], []
+    for qi in range(nq):
+        for ki in range(qi + 1):
+            qis.append(qi)
+            kis.append(ki)
+    return jnp.asarray(qis, jnp.int32), jnp.asarray(kis, jnp.int32)
+
+
+def _band(window: Optional[int], block_q: int, block_k: int,
+          s_k: int) -> int:
+    if window is None:
+        return s_k
+    return min(s_k, int(np.ceil((window + block_q) / block_k)) * block_k)
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    attn_softcap: Optional[float] = None,
+                    block_q: int = 512,
+                    block_k: int = 512) -> jax.Array:
+    """q, k, v: (B, S, H, hd) MHA layout → (B, Sq, H, hd)."""
+    o, _ = _fwd(q, k, v, causal, window, attn_softcap, block_q, block_k)
+    return o
+
+
+def _use_triangular(causal, window, Sq, Sk, block_q, block_k):
+    return (causal and window is None and Sq == Sk
+            and block_q == block_k and Sq % block_q == 0)
+
+
+def _fwd_triangular(q, k, v, cap, blk):
+    """Causal forward over the visible tile pairs only (no masked tiles
+    except the diagonal)."""
+    B, Sq, H, hd = q.shape
+    nq = Sq // blk
+    scale = hd ** -0.5
+    qis, kis = _tri_pairs(nq)
+
+    m0 = jnp.full((B, H, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+
+    def step(c, qk):
+        m, l, acc = c
+        qi, ki = qk
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * blk, blk, 1) * scale
+        kb = jax.lax.dynamic_slice_in_dim(k, ki * blk, blk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, ki * blk, blk, 1)
+        s = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                       preferred_element_type=jnp.float32)
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        diag = qi == ki
+        pos = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0) >=             jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+        s = jnp.where(jnp.logical_or(~diag, pos)[None, None], s, _NEG)
+        mb = jax.lax.dynamic_slice_in_dim(m, qi * blk, blk, 2)
+        lb = jax.lax.dynamic_slice_in_dim(l, qi * blk, blk, 2)
+        ab = jax.lax.dynamic_slice_in_dim(acc, qi * blk, blk, 2)
+        m_new = jnp.maximum(mb, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mb - m_new)
+        l_new = lb * corr + jnp.sum(p, axis=-1)
+        a_new = ab * corr[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p, vb.astype(jnp.float32))
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, qi * blk, 2)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, qi * blk, 2)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, qi * blk, 2)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (qis, kis))
+    o = (acc / jnp.maximum(l, 1e-30)[..., None]).transpose(0, 2, 1, 3)         .astype(q.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return o, (q, k, v, o, lse)
+
+
+def _bwd_triangular(cap, blk, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, hd = q.shape
+    nq = Sq // blk
+    scale = hd ** -0.5
+    qis, kis = _tri_pairs(nq)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+
+    def step(c, qk):
+        dq, dk, dv = c
+        qi, ki = qk
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * blk, blk, 1) * scale
+        kb = jax.lax.dynamic_slice_in_dim(k, ki * blk, blk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, ki * blk, blk, 1)
+        dob = jax.lax.dynamic_slice_in_dim(do, qi * blk, blk, 1)             .astype(jnp.float32)
+        deltab = jax.lax.dynamic_slice_in_dim(delta, qi * blk, blk, 1)
+        lseb = jax.lax.dynamic_slice_in_dim(lse, qi * blk, blk, 2)
+        s_raw = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                           preferred_element_type=jnp.float32)
+        if cap is not None:
+            t = jnp.tanh(s_raw / cap)
+            s = cap * t
+        else:
+            s = s_raw
+        diag = qi == ki
+        pos = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0) >=             jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+        mask = jnp.logical_or(~diag, pos)[None, None]
+        s = jnp.where(mask, s, _NEG)
+        p = jnp.exp(s - lseb[..., None])
+        dv_blk = jnp.einsum("bhqs,bqhd->bshd", p, dob)
+        dp = jnp.einsum("bqhd,bshd->bhqs", dob.astype(v.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - deltab.transpose(0, 2, 1)[..., None])
+        if cap is not None:
+            ds = ds * (1.0 - t * t)
+        ds = jnp.where(mask, ds, 0.0)
+        dq_blk = jnp.einsum("bhqs,bshd->bqhd", ds,
+                            kb.astype(jnp.float32)) * scale
+        dk_blk = jnp.einsum("bhqs,bqhd->bshd", ds, qb.astype(jnp.float32))
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, qi * blk, blk, 1) + dq_blk,
+            qi * blk, 1)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, ki * blk, blk, 1) + dk_blk,
+            ki * blk, 1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, ki * blk, blk, 1) + dv_blk,
+            ki * blk, 1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), (qis, kis))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _fwd(q, k, v, causal, window, cap, block_q, block_k):
+    B, Sq, H, hd = q.shape
+    _, Sk, _, _ = k.shape
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if _use_triangular(causal, window, Sq, Sk, block_q, block_k):
+        return _fwd_triangular(q, k, v, cap, block_q)
+    nq = Sq // block_q
+    scale = hd ** -0.5
+    span = _band(window, block_q, block_k, Sk)
+    nk = span // block_k
+
+    def q_block(_, qi):
+        q_start = qi * block_q
+        qb = jax.lax.dynamic_slice_in_dim(q, q_start, block_q, 1) * scale
+        q_pos = q_start + jnp.arange(block_q)
+        k_start = (jnp.clip(q_start + block_q - span, 0, Sk - span)
+                   if (window is not None and span < Sk)
+                   else jnp.zeros((), jnp.int32))
+        kb_all = jax.lax.dynamic_slice_in_dim(k, k_start, span, 1)
+        vb_all = jax.lax.dynamic_slice_in_dim(v, k_start, span, 1)
+
+        m0 = jnp.full((B, H, block_q), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, H, block_q, hd), jnp.float32)
+
+        def k_block(c, ki):
+            m, l, acc = c
+            kb = jax.lax.dynamic_slice_in_dim(kb_all, ki * block_k, block_k, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vb_all, ki * block_k, block_k, 1)
+            k_pos = k_start + ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                           preferred_element_type=jnp.float32)
+            if cap is not None:
+                s = cap * jnp.tanh(s / cap)
+            s = jnp.where(_mask(q_pos, k_pos, causal, window), s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(k_block, (m0, l0, a0), jnp.arange(nk))
+        ob = (acc / jnp.maximum(l, 1e-30)[..., None])
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))           # (B,H,bq)
+        return None, (ob.transpose(0, 2, 1, 3).astype(q.dtype), lse)
+
+    _, (blocks, lses) = jax.lax.scan(q_block, None, jnp.arange(nq))
+    o = blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+    lse = lses.transpose(1, 2, 0, 3).reshape(B, H, Sq)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd(causal, window, cap, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, hd = q.shape
+    _, Sk, _, _ = k.shape
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if _use_triangular(causal, window, Sq, Sk, block_q, block_k):
+        return _bwd_triangular(cap, block_q, res, do)
+    nq = Sq // block_q
+    scale = hd ** -0.5
+    span = _band(window, block_q, block_k, Sk)
+    nk = span // block_k
+
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)                                # (B,Sq,H)
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+
+    def q_block(carry, qi):
+        dk_acc, dv_acc = carry
+        q_start = qi * block_q
+        qb = jax.lax.dynamic_slice_in_dim(q, q_start, block_q, 1) * scale
+        dob = jax.lax.dynamic_slice_in_dim(do, q_start, block_q, 1) \
+            .astype(jnp.float32)
+        deltab = jax.lax.dynamic_slice_in_dim(delta, q_start, block_q, 1)
+        lseb = jax.lax.dynamic_slice_in_dim(lse, q_start, block_q, 2)
+        q_pos = q_start + jnp.arange(block_q)
+        k_start = (jnp.clip(q_start + block_q - span, 0, Sk - span)
+                   if (window is not None and span < Sk)
+                   else jnp.zeros((), jnp.int32))
+
+        dq0 = jnp.zeros((B, block_q, H, hd), jnp.float32)
+
+        def k_block(c, ki):
+            dqb, dk_acc, dv_acc = c
+            ks = k_start + ki * block_k
+            kb = jax.lax.dynamic_slice_in_dim(k, ks, block_k, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ks, block_k, 1)
+            k_pos = ks + jnp.arange(block_k)
+            s_raw = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                               preferred_element_type=jnp.float32)
+            if cap is not None:
+                t = jnp.tanh(s_raw / cap)
+                s = cap * t
+            else:
+                s = s_raw
+            mask = _mask(q_pos, k_pos, causal, window)
+            s = jnp.where(mask, s, _NEG)
+            p = jnp.exp(s - lseb[..., None])                # (B,H,bq,bk)
+            dv_blk = jnp.einsum("bhqs,bqhd->bshd", p, dob)
+            dp = jnp.einsum("bqhd,bshd->bhqs", dob.astype(v.dtype),
+                            vb, preferred_element_type=jnp.float32)
+            ds = p * (dp - deltab.transpose(0, 2, 1)[..., None])
+            if cap is not None:
+                ds = ds * (1.0 - t * t)
+            ds = jnp.where(mask, ds, 0.0)
+            dq_blk = jnp.einsum("bhqs,bshd->bqhd", ds,
+                                kb.astype(jnp.float32)) * scale
+            dk_blk = jnp.einsum("bhqs,bqhd->bshd", ds,
+                                (qb).astype(jnp.float32))
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(dk_acc, ks, block_k, 1)
+                + dk_blk, ks, 1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(dv_acc, ks, block_k, 1)
+                + dv_blk, ks, 1)
+            return (dqb + dq_blk, dk_acc, dv_acc), None
+
+        (dqb, dk_acc, dv_acc), _ = jax.lax.scan(
+            k_block, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dqb.astype(q.dtype)
+
+    (dk, dv), dq_blocks = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = dq_blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,226 @@
+"""Shared neural layers: norms, RoPE/sinusoidal positions, MLPs, losses."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import ParamDef
+from repro.parallel.sharding import constrain
+
+__all__ = ["rmsnorm", "rope", "sinusoidal_pos", "mlp_defs", "mlp_apply",
+           "softcap", "chunked_cross_entropy", "embed_tokens"]
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+            gemma: bool = False) -> jax.Array:
+    """RMSNorm with f32 statistics; ``gemma=True`` scales by (1 + w).
+
+    Custom VJP for two memory-critical reasons (EXPERIMENTS.md §Perf,
+    memory-term iterations):
+
+    1. the forward accumulates the variance through an f32 dot instead of
+       upcasting x — a wholesale ``x.astype(f32)`` at the top of every
+       block makes XLA hoist the conversion out of the layer scan,
+       materialising an f32 copy of the whole (L, B, S, D)
+       residual-checkpoint stack;
+    2. the backward returns dx in **x's dtype** — the plain autodiff rule
+       emits an f32 cotangent (bf16 primal × f32 multiplier), and once one
+       f32 cotangent enters the residual stream the entire backward
+       activation traffic doubles.
+    """
+    return _rms_fwd(x, w, eps, gemma)[0]
+
+
+def _rms_stats(x, eps):
+    d = x.shape[-1]
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / d
+    return jax.lax.rsqrt(var + eps)                        # f32 (...,)
+
+
+def _rms_fwd(x, w, eps, gemma):
+    m = _rms_stats(x, eps)
+    scale = (1.0 + w.astype(jnp.float32)) if gemma else w.astype(jnp.float32)
+    if x.dtype == jnp.float32:
+        y = x * m[..., None] * scale
+    else:
+        y = (x * (m[..., None] * scale).astype(x.dtype)).astype(x.dtype)
+    return y, (x, w, m)
+
+
+def _rms_bwd(eps, gemma, res, g):
+    """dx_j = m·s_j·g_j − (m³ x_j / d)·Σ_i g_i s_i x_i.
+
+    Every consumption of the *saved* x happens through a bf16-native op
+    (f32-accumulating dot or a bf16 multiply) — an elementwise
+    ``x.astype(f32)`` here would be commuted past the scan's
+    dynamic-slice by XLA and materialise an f32 twin of the whole
+    residual-checkpoint stack (measured: +27.8 GB/device on gemma2-27b).
+    """
+    x, w, m = res
+    d = x.shape[-1]
+    scale = (1.0 + w.astype(jnp.float32)) if gemma else w.astype(jnp.float32)
+    gs = g.astype(jnp.float32) * scale                     # transient f32
+    gs_x = gs.astype(x.dtype)
+    inner = jnp.einsum("...d,...d->...", gs_x, x,
+                       preferred_element_type=jnp.float32)
+    coeff = (m ** 3 / d) * inner                           # f32 (...,)
+    dx = (m[..., None] * gs).astype(x.dtype) \
+        - coeff[..., None].astype(x.dtype) * x
+    # dw_i = Σ_rows g_i·x_i·m  (einsum keeps x in its own dtype)
+    t = (g.astype(jnp.float32) * m[..., None]).astype(x.dtype)
+    tr = t.reshape(-1, d)
+    xr = x.reshape(-1, d)
+    dw = jnp.einsum("rd,rd->d", tr, xr,
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+rmsnorm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap · tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------- #
+# positions
+# --------------------------------------------------------------------------- #
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, half-rotation convention.
+
+    x: (..., S, H, hd); positions: (S,) or scalar broadcastable.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freq  # (S, half)
+    cos = jnp.cos(angles)[..., None, :]   # (S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions: jax.Array, d_model: int) -> jax.Array:
+    """Classic transformer sinusoidal embedding; positions (S,) → (S, D)."""
+    half = d_model // 2
+    freq = np.exp(-np.log(10_000.0) * np.arange(half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+def mlp_defs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        if cfg.fuse_gateup:
+            # gate and up interleaved on a trailing axis of 2 so the split
+            # after the matmul slices an UNSHARDED dim (no resharding)
+            return {
+                "w_gu": ParamDef((d, f, 2), ("d_model_w", "d_ff_w", None)),
+                "w_down": ParamDef((f, d), ("d_ff_w", "d_model_w")),
+            }
+        return {
+            "w_gate": ParamDef((d, f), ("d_model_w", "d_ff_w")),
+            "w_up": ParamDef((d, f), ("d_model_w", "d_ff_w")),
+            "w_down": ParamDef((f, d), ("d_ff_w", "d_model_w")),
+        }
+    return {   # plain gelu MLP (musicgen)
+        "w_up": ParamDef((d, f), ("d_model_w", "d_ff_w")),
+        "w_down": ParamDef((f, d), ("d_ff_w", "d_model_w")),
+    }
+
+
+def _gathered(w: jax.Array, dtype, axes) -> jax.Array:
+    """Cast a weight to compute dtype and make it whole along the FSDP
+    (`data`) axis before the matmul.
+
+    Without this, XLA executes the contraction with the d_model dim sharded
+    and ALL-REDUCES the (B, S, d_ff)-sized f32 partials — ~300 MB per matmul
+    — instead of all-gathering the ~20 MB bf16 weight.  Measured 40× drop in
+    per-device collective bytes on gemma2-27b train_4k (EXPERIMENTS.md
+    §Perf, collective-term iteration 1).
+    """
+    return constrain(w.astype(dtype), axes)
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg) -> jax.Array:
+    dtype = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        if cfg.fuse_gateup:
+            gu = jnp.einsum(
+                "bsd,dft->bsft", x,
+                _gathered(p["w_gu"], dtype, (None, "d_ff_w", None)))
+            g, u = gu[..., 0], gu[..., 1]
+        else:
+            g = x @ _gathered(p["w_gate"], dtype, (None, "d_ff_w"))
+            u = x @ _gathered(p["w_up"], dtype, (None, "d_ff_w"))
+        h = act(g) * u
+        h = constrain(h, ("batch", "seq", "d_ff_act"))
+        return h @ _gathered(p["w_down"], dtype, ("d_ff_w", None))
+    h = jax.nn.gelu(x @ _gathered(p["w_up"], dtype, (None, "d_ff_w")),
+                    approximate=True)
+    h = constrain(h, ("batch", "seq", "d_ff_act"))
+    return h @ _gathered(p["w_down"], dtype, ("d_ff_w", None))
+
+
+# --------------------------------------------------------------------------- #
+# embedding & loss
+# --------------------------------------------------------------------------- #
+def embed_tokens(embed: jax.Array, tokens: jax.Array, cfg) -> jax.Array:
+    x = jnp.take(embed, tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+def chunked_cross_entropy(h: jax.Array, labels: jax.Array, unembed: jax.Array,
+                          cfg, chunk: int = 512) -> jax.Array:
+    """Causal-LM loss without materialising full (B, S, V) logits.
+
+    h: (B, S, D) hidden states aligned so h[:, i] predicts labels[:, i];
+    unembed: (D, V).  Scans over seq chunks; each chunk's logits are
+    (B, chunk, V)-sized, optionally soft-capped (gemma2).  S is padded to a
+    chunk multiple; padded positions carry label −1 and are masked out.
+    """
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (S + pad) // chunk
+    hc = h.reshape(B, n, chunk, D).swapaxes(0, 1)          # (n, B, c, D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)        # (n, B, c)
+
+    @jax.checkpoint   # recompute chunk logits in backward: O(B·c·V) peak
+    def step(tot, xs):
+        hb, lb = xs
+        logits = hb @ unembed.astype(hb.dtype)             # (B, c, V)
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        logits = constrain(logits, ("batch", "seq", "vocab_act"))
+        valid = lb >= 0
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(jnp.where(valid, logz - gold, 0.0)), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (B * S)

@@ -1,0 +1,81 @@
+"""Parameter definition machinery.
+
+A model is described once as a nested dict of :class:`ParamDef` (shape +
+logical axes + initializer).  From that single description we derive:
+
+* materialised parameters (:func:`init_params`) for real runs,
+* ``ShapeDtypeStruct`` stand-ins (:func:`abstract_params`) for the dry-run,
+* ``PartitionSpec`` trees (:func:`spec_tree`) for pjit in/out shardings.
+
+Keeping shapes, shardings and init in one place is what lets the dry-run and
+the real trainer agree by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import AxisRules
+
+__all__ = ["ParamDef", "init_params", "abstract_params", "spec_tree",
+           "tree_size_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Optional[str] = None     # override the tree-wide dtype (caches)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs: Dict, key: jax.Array, dtype=jnp.float32) -> Dict:
+    """Materialise a ParamDef tree into arrays (deterministic per path)."""
+    flat, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    paths = jax.tree_util.tree_leaves_with_path(defs, is_leaf=_is_def)
+    out = []
+    for i, ((path, d), _) in enumerate(zip(paths, flat)):
+        k = jax.random.fold_in(key, i)
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dt)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dt)
+        else:
+            arr = (d.scale * jax.random.normal(k, d.shape)).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs: Dict, dtype=jnp.float32,
+                    rules: Optional[AxisRules] = None) -> Dict:
+    """ShapeDtypeStruct tree (with shardings when rules are given)."""
+    def one(d: ParamDef):
+        sharding = rules.sharding(d.axes, d.shape) if rules else None
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=sharding)
+    return jax.tree.map(one, defs, is_leaf=_is_def)
+
+
+def spec_tree(defs: Dict, rules: AxisRules) -> Dict:
+    return jax.tree.map(lambda d: rules.spec(d.axes, d.shape), defs,
+                        is_leaf=_is_def)
+
+
+def tree_size_bytes(defs: Dict, bytes_per_el: int = 4) -> int:
+    """Total parameter bytes of a ParamDef tree (for memory napkin math)."""
+    leaves = jax.tree.leaves(defs, is_leaf=_is_def)
+    return sum(int(np.prod(d.shape)) * bytes_per_el for d in leaves)

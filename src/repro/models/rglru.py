@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+[arXiv:2402.19427]  Temporal-mixing block:
+
+    x ─▶ gate branch: GeLU(x·W_y)
+      ─▶ x branch:    x·W_x ─ causal-conv(4) ─ RG-LRU ─┐
+    out = (h ⊙ gate) · W_out                            ┘
+
+RG-LRU recurrence (per channel):
+
+    r_t = σ(blockdiag(W_a)·x_t + b_a)        recurrence gate
+    i_t = σ(blockdiag(W_x)·x_t + b_x)        input gate
+    log a_t = −c · softplus(Λ) · r_t          (c = 8)
+    h_t = a_t · h_{t−1} + sqrt(1 − a_t²) · (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (parallel
+prefix, TPU-friendly — this is the recurrent-scan sharding mentioned in the
+assignment); decode is the O(1) single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _gathered
+from repro.models.params import ParamDef
+from repro.parallel.sharding import constrain
+
+__all__ = ["rglru_defs", "rglru_apply"]
+
+_C = 8.0            # Griffin's fixed gate sharpness constant
+_MAX_SQRT_ARG = 1.0
+
+
+def rglru_defs(cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    nb = max(1, cfg.n_heads)            # block-diagonal gate blocks
+    assert w % nb == 0, (w, nb)
+    bw = w // nb
+    return {
+        "w_y": ParamDef((d, w), ("d_model_w", "lru_w")),
+        "w_x": ParamDef((d, w), ("d_model_w", "lru_w")),
+        "conv_w": ParamDef((cfg.conv_width, w), ("conv", "lru_w"), scale=0.1),
+        "conv_b": ParamDef((w,), ("lru_w",), init="zeros"),
+        "a_gate_w": ParamDef((nb, bw, bw), ("ssm_heads_w", None, None)),
+        "a_gate_b": ParamDef((w,), ("lru_w",), init="zeros"),
+        "i_gate_w": ParamDef((nb, bw, bw), ("ssm_heads_w", None, None)),
+        "i_gate_b": ParamDef((w,), ("lru_w",), init="zeros"),
+        "Lambda": ParamDef((w,), ("lru_w",), init="ones"),
+        "w_out": ParamDef((w, d), ("lru_w", "d_model_w")),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, W) with W = nb·bw; w: (nb, bw, bw) → (B, S, W)."""
+    B, S, W = x.shape
+    nb, bw, _ = w.shape
+    xr = x.reshape(B, S, nb, bw)
+    y = jnp.einsum("bsnw,nwv->bsnv", xr, w.astype(x.dtype))
+    return y.reshape(B, S, W) + b.astype(x.dtype)
+
+
+def _causal_conv(x, w, b, state=None):
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y + b.astype(x.dtype), new_state
+
+
+def rglru_apply(p: dict, x: jax.Array, *, cfg,
+                cache: Optional[dict] = None, mode: str = "train"
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, D) → (out, new_cache). Residual/norm handled by caller."""
+    dtype = x.dtype
+    B, S, D = x.shape
+
+    gate = jax.nn.gelu(x @ _gathered(p["w_y"], dtype, (None, "lru_w")),
+                       approximate=True)
+    xb = x @ _gathered(p["w_x"], dtype, (None, "lru_w"))
+    xb = constrain(xb, ("batch", "seq", "lru_act"))
+    conv_state = cache.get("conv") if cache else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(_block_diag(xb, p["a_gate_w"], p["a_gate_b"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(xb, p["i_gate_w"], p["i_gate_b"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["Lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                       # (B,S,W) f32
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, _MAX_SQRT_ARG))
+    bterm = mult * i * xb.astype(jnp.float32)
+
+    if mode == "decode":
+        h0 = cache["h"]                                      # (B, W) f32
+        h = a[:, 0] * h0 + bterm[:, 0]
+        hs = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        hs = b_sc                                            # h0 = 0
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "h": hs[:, -1]}
+
+    out = (hs.astype(dtype) * gate) @ _gathered(p["w_out"], dtype,
+                                                ("lru_w", None))
+    return constrain(out, ("batch", "seq", None)), new_cache

@@ -1,0 +1,238 @@
+"""Mamba-2 block with SSD (state-space duality) sequence mixing.
+
+[arXiv:2405.21060]  The block:
+
+    x ─ RMSNorm ─ in_proj ─▶ [z | x_in | B | C | dt]   (blocked layout)
+                  x_in,B,C ─ causal-conv(4) ─ SiLU
+                  y = SSD(x_in, dt, A, B, C) + D·x_in
+                  y = RMSNorm(y · SiLU(z)) ─ out_proj ─▶ (+residual)
+
+SSD is computed in the **chunked dual form** (chunk length Q): an
+intra-chunk quadratic term (attention-like, MXU-friendly) plus an
+inter-chunk linear recurrence over per-chunk states (nh, hd, N) carried by a
+``lax.scan`` — O(S·Q + S·N·hd) work instead of O(S²).  The Pallas kernel in
+:mod:`repro.kernels.ssd_scan` implements the same chunking for TPU; this
+module is the pure-JAX path (CPU tests, dry-run lowering) and the kernel's
+oracle counterpart lives in :mod:`repro.kernels.ref`.
+
+**Blocked projection layout** (EXPERIMENTS.md §Perf, mamba2 collective
+iteration): the fused in_proj output is laid out as 16 shard-blocks of
+``[z | x | B | C | dt]`` so every component extraction slices an UNSHARDED
+dim.  A flat ``[z…|x…|B…|C…|dt…]`` layout splits at offsets that are not
+multiples of the per-shard width, and XLA reshards every split with
+collective-permute/all-to-all — measured 85 GB/device/step on
+mamba2-780m train_4k.  The layout is a fixed column permutation of the
+weight (training from scratch is unaffected; loading external checkpoints
+would need a one-time permutation).  The depthwise convs run per component
+(channelwise, so exactly equivalent).
+
+Decode is the classic O(1) recurrence: h ← h·exp(dt·A) + dt·B⊗x.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _gathered, rmsnorm
+from repro.models.params import ParamDef
+from repro.parallel.sharding import constrain
+
+__all__ = ["ssd_defs", "ssd_apply", "ssd_chunked"]
+
+#: shard-block count of the projection layout (production model-axis size)
+_BLOCKS = 16
+
+
+def _widths(cfg) -> Tuple[int, int, int]:
+    """Per-block widths of (z or x, B or C, dt)."""
+    di, gs, nh = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_heads
+    assert di % _BLOCKS == 0 and nh % _BLOCKS == 0, (di, nh)
+    assert gs % _BLOCKS == 0, gs
+    return di // _BLOCKS, gs // _BLOCKS, nh // _BLOCKS
+
+
+def ssd_defs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    nh = cfg.ssm_heads
+    wz, wg, wn = _widths(cfg)
+    width = 2 * wz + 2 * wg + wn          # [z | x | B | C | dt] per block
+    return {
+        "ln": ParamDef((d,), (None,), init="ones"),
+        "in_proj": ParamDef((d, _BLOCKS, width),
+                            ("d_model_w", "d_inner_w", None)),
+        "conv_x_w": ParamDef((cfg.ssm_conv, di), ("conv", "d_inner_act"),
+                             scale=0.1),
+        "conv_x_b": ParamDef((di,), ("d_inner_act",), init="zeros"),
+        "conv_b_w": ParamDef((cfg.ssm_conv, gs), ("conv", None), scale=0.1),
+        "conv_b_b": ParamDef((gs,), (None,), init="zeros"),
+        "conv_c_w": ParamDef((cfg.ssm_conv, gs), ("conv", None), scale=0.1),
+        "conv_c_b": ParamDef((gs,), (None,), init="zeros"),
+        "A_log": ParamDef((nh,), ("ssm_heads_w",), init="zeros"),
+        "D": ParamDef((nh,), ("ssm_heads_w",), init="ones"),
+        "dt_bias": ParamDef((nh,), ("ssm_heads_w",), init="zeros"),
+        "norm": ParamDef((di,), ("d_inner_w",), init="ones"),
+        "out_proj": ParamDef((di, d), ("d_inner_w", "d_model_w")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (B, S, C), w: (K, C).
+
+    Returns (y, new_state) where state is the trailing K−1 inputs.
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int = 128,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x:  (B, S, nh, hd)   inputs per SSM head
+    dt: (B, S, nh)       post-softplus step sizes
+    A:  (nh,)            negative decay rates (A = −exp(A_log))
+    Bm: (B, S, ng, N)    input projections (shared across heads per group)
+    Cm: (B, S, ng, N)    output projections
+    h0: optional initial state (B, nh, hd, N)
+
+    Returns (y: (B, S, nh, hd), h_final: (B, nh, hd, N)).
+    """
+    B, S, nh, hd = x.shape
+    ng, N = Bm.shape[2], Bm.shape[3]
+    rep = nh // ng
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    f32 = jnp.float32
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None])        # (B,S,nh,hd)
+    dA = dt.astype(f32) * A.astype(f32)                      # (B,S,nh) ≤ 0
+
+    def ch(a, extra):
+        return a.reshape((B, nc, Q) + extra)
+    xdt_c = ch(xdt, (nh, hd))
+    dA_c = ch(dA, (nh,))
+    B_c = ch(Bm.astype(f32), (ng, N))
+    C_c = ch(Cm.astype(f32), (ng, N))
+    B_h = jnp.repeat(B_c, rep, axis=3)                       # (B,nc,Q,nh,N)
+    C_h = jnp.repeat(C_c, rep, axis=3)
+
+    cum = jnp.cumsum(dA_c, axis=2)                           # (B,nc,Q,nh)
+    seg_total = cum[:, :, -1]                                # (B,nc,nh)
+
+    # --- intra-chunk (quadratic dual form) ------------------------------ #
+    li = cum[:, :, :, None, :]                               # (B,nc,Q,1,nh)
+    lj = cum[:, :, None, :, :]                               # (B,nc,1,Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(li - lj), 0.0)             # (B,nc,Q,Q,nh)
+    scores = jnp.einsum("bcqhn,bcshn->bcqsh", C_h, B_h) * L
+    y_intra = jnp.einsum("bcqsh,bcshd->bcqhd", scores, xdt_c)
+
+    # --- per-chunk input states ----------------------------------------- #
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)   # (B,nc,Q,nh)
+    chunk_state = jnp.einsum("bcqhn,bcqhd,bcqh->bchdn",
+                             B_h, xdt_c, decay_to_end)       # (B,nc,nh,hd,N)
+
+    # --- inter-chunk recurrence over states ------------------------------ #
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, N), f32)
+
+    def step(h, inp):
+        seg, st8 = inp                                       # (B,nh), (B,nh,hd,N)
+        h_new = h * jnp.exp(seg)[:, :, None, None] + st8
+        return h_new, h                                      # emit PREVIOUS
+
+    seg_t = seg_total.swapaxes(0, 1)                         # (nc,B,nh)
+    st_t = chunk_state.swapaxes(0, 1)                        # (nc,B,nh,hd,N)
+    h_final, h_prevs = jax.lax.scan(step, h0.astype(f32), (seg_t, st_t))
+    h_prev = h_prevs.swapaxes(0, 1)                          # (B,nc,nh,hd,N)
+
+    y_inter = jnp.einsum("bcqhn,bchdn,bcqh->bcqhd",
+                         C_h, h_prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_apply(p: dict, x: jax.Array, *, cfg,
+              cache: Optional[dict] = None, mode: str = "train",
+              skip_norm: bool = False
+              ) -> Tuple[jax.Array, Optional[dict]]:
+    """Full Mamba-2 block (norm + projections + SSD + gate + out)."""
+    dtype = x.dtype
+    B, S, D = x.shape
+    di, ng, st = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    gs = ng * st
+    wz, wg, wn = _widths(cfg)
+
+    h_in = x if skip_norm else rmsnorm(x, p["ln"], cfg.norm_eps,
+                                       gemma=cfg.gemma_norm)
+    proj = jnp.einsum(
+        "bsd,dnw->bsnw", h_in,
+        _gathered(p["in_proj"], dtype, (None, "d_inner_w", None)))
+    proj = constrain(proj, ("batch", "seq", "d_inner_act", None))
+    # blocked extraction: every slice cuts the UNSHARDED trailing dim
+    z = proj[..., :wz].reshape(B, S, di)
+    x_in = proj[..., wz:2 * wz].reshape(B, S, di)
+    Bm = proj[..., 2 * wz:2 * wz + wg].reshape(B, S, gs)
+    Cm = proj[..., 2 * wz + wg:2 * wz + 2 * wg].reshape(B, S, gs)
+    dt = proj[..., 2 * wz + 2 * wg:].reshape(B, S, nh)
+
+    # B/C are shared across all heads → replicate over `model` (tiny gather)
+    Bm = constrain(Bm, ("batch", "seq", None))
+    Cm = constrain(Cm, ("batch", "seq", None))
+
+    cs = cache or {}
+    x_in, new_cx = _causal_conv(x_in, p["conv_x_w"], p["conv_x_b"],
+                                cs.get("conv_x"))
+    Bm, new_cb = _causal_conv(Bm, p["conv_b_w"], p["conv_b_b"],
+                              cs.get("conv_b"))
+    Cm, new_cc = _causal_conv(Cm, p["conv_c_w"], p["conv_c_b"],
+                              cs.get("conv_c"))
+    x_in = jax.nn.silu(x_in).reshape(B, S, nh, hd)
+    Bm = jax.nn.silu(Bm).reshape(B, S, ng, st)
+    Cm = jax.nn.silu(Cm).reshape(B, S, ng, st)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+
+    if mode == "decode":
+        h0 = cache["ssm"]                                    # (B,nh,hd,N)
+        rep = nh // ng
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1).astype(jnp.float32)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1).astype(jnp.float32)
+        dA = jnp.exp(dt[:, 0] * A)                           # (B,nh)
+        upd = jnp.einsum("bhn,bhd,bh->bhdn", Bh,
+                         x_in[:, 0].astype(jnp.float32), dt[:, 0])
+        h_new = h0 * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhdn->bhd", Ch, h_new)
+        y = y[:, None].astype(dtype)                         # (B,1,nh,hd)
+        new_cache = {"conv_x": new_cx, "conv_b": new_cb, "conv_c": new_cc,
+                     "ssm": h_new}
+    else:
+        y, h_final = ssd_chunked(x_in, dt, A, Bm, Cm)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv_x": new_cx, "conv_b": new_cb,
+                         "conv_c": new_cc, "ssm": h_final}
+
+    y = y + x_in * p["D"].astype(dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ _gathered(p["out_proj"], dtype, ("d_inner_w", None))
+    return constrain(out, ("batch", "seq", None)), new_cache

@@ -1,0 +1,348 @@
+"""The composable decoder: pattern-grouped blocks, scan-over-layers,
+train / prefill / decode paths for every assigned architecture family.
+
+Structure (DESIGN.md §5): a model is ``embed → scan(pattern groups) → tail
+blocks → final norm → unembed``.  A *pattern group* is one repetition of
+``cfg.layer_pattern`` (e.g. gemma2 ``("local","attn")``); all groups share a
+block structure, so their parameters are stacked with a leading G axis and
+the stack is consumed by ``jax.lax.scan`` — keeping the lowered HLO small
+enough to compile 80 (arch × shape × mesh) dry-run combinations on CPU.
+Layers past the last full group (RecurrentGemma's trailing R,R) live in
+``params["tail"]`` and run unscanned.
+
+Caches follow the same grouping: ``cache["groups"]`` leaves are stacked over
+G and fed to the scan as xs; decode emits the updated stack as ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, moe as moe_mod, rglru as rglru_mod, \
+    ssm as ssm_mod
+from repro.models.layers import (chunked_cross_entropy, embed_tokens,
+                                 mlp_apply, mlp_defs, rmsnorm, sinusoidal_pos,
+                                 softcap)
+from repro.models.params import ParamDef, abstract_params, init_params
+from repro.parallel.sharding import constrain
+
+__all__ = ["model_defs", "init_model", "forward", "loss_fn", "prefill",
+           "decode_step", "cache_defs", "init_cache", "unembed_matrix"]
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------- #
+# parameter definitions
+# --------------------------------------------------------------------------- #
+def _norm_def(cfg) -> ParamDef:
+    init = "zeros" if cfg.gemma_norm else "ones"   # gemma scales by (1 + w)
+    return ParamDef((cfg.d_model,), (None,), init=init)
+
+
+def block_defs(cfg, kind: str) -> Dict:
+    if kind in ("attn", "local"):
+        d = {"ln1": _norm_def(cfg), "attn": attention.attn_defs(cfg),
+             "ln2": _norm_def(cfg), "mlp": mlp_defs(cfg)}
+        if cfg.post_norms:
+            d["ln1_post"] = _norm_def(cfg)
+            d["ln2_post"] = _norm_def(cfg)
+        return d
+    if kind == "moe":
+        return {"ln1": _norm_def(cfg), "attn": attention.attn_defs(cfg),
+                "ln2": _norm_def(cfg), "moe": moe_mod.moe_defs(cfg)}
+    if kind == "ssd":
+        return {"ssd": ssm_mod.ssd_defs(cfg)}
+    if kind == "rglru":
+        return {"ln1": _norm_def(cfg), "rglru": rglru_mod.rglru_defs(cfg),
+                "ln2": _norm_def(cfg), "mlp": mlp_defs(cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _stack_defs(defs: Dict, n: int) -> Dict:
+    """Prepend a scanned `layers` axis of length n to every ParamDef."""
+    def one(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + d.shape, ("layers",) + d.axes, init=d.init,
+                        scale=d.scale, dtype=d.dtype)
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def model_defs(cfg) -> Dict:
+    d: Dict = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model),
+                          ("vocab_w", "d_model_w"), scale=0.02),
+        "final_norm": _norm_def(cfg),
+    }
+    group = {str(i): block_defs(cfg, k)
+             for i, k in enumerate(cfg.layer_pattern)}
+    d["groups"] = _stack_defs(group, cfg.n_groups)
+    if cfg.tail_pattern:
+        d["tail"] = {str(i): block_defs(cfg, k)
+                     for i, k in enumerate(cfg.tail_pattern)}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                ("d_model_w", "vocab_w"), scale=0.02)
+    return d
+
+
+def init_model(cfg, key: jax.Array) -> PyTree:
+    return init_params(model_defs(cfg), key,
+                       dtype=jnp.dtype(cfg.param_dtype))
+
+
+def unembed_matrix(params: PyTree, cfg) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# --------------------------------------------------------------------------- #
+# cache definitions
+# --------------------------------------------------------------------------- #
+def _block_cache_defs(cfg, kind: str, batch: int, max_len: int) -> Optional[Dict]:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind == "moe":
+        kind = "attn"   # MoE blocks carry an ordinary attention cache
+    if kind == "attn" or (kind == "local" and cfg.sliding_window is None):
+        return {"attn": {
+            "k": ParamDef((batch, max_len, kv, hd),
+                          ("cache_batch", "cache_seq", "kv_heads", None),
+                          init="zeros", dtype="bfloat16"),
+            "v": ParamDef((batch, max_len, kv, hd),
+                          ("cache_batch", "cache_seq", "kv_heads", None),
+                          init="zeros", dtype="bfloat16")}}
+    if kind == "local":
+        w = min(cfg.sliding_window, max_len)
+        return {"attn": {
+            "k": ParamDef((batch, w, kv, hd),
+                          ("cache_batch", "cache_seq", "kv_heads", None),
+                          init="zeros", dtype="bfloat16"),
+            "v": ParamDef((batch, w, kv, hd),
+                          ("cache_batch", "cache_seq", "kv_heads", None),
+                          init="zeros", dtype="bfloat16")}}
+    if kind == "ssd":
+        gs = cfg.ssm_groups * cfg.ssm_state
+        return {"ssd": {
+            "conv_x": ParamDef((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                               ("cache_batch", None, "d_inner_act"),
+                               init="zeros", dtype="bfloat16"),
+            "conv_b": ParamDef((batch, cfg.ssm_conv - 1, gs),
+                               ("cache_batch", None, None),
+                               init="zeros", dtype="bfloat16"),
+            "conv_c": ParamDef((batch, cfg.ssm_conv - 1, gs),
+                               ("cache_batch", None, None),
+                               init="zeros", dtype="bfloat16"),
+            "ssm": ParamDef((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                             cfg.ssm_state),
+                            ("cache_batch", "ssm_heads_act", None, None),
+                            init="zeros", dtype="float32")}}
+    if kind == "rglru":
+        return {"rglru": {
+            "conv": ParamDef((batch, cfg.conv_width - 1, cfg.lru_width),
+                             ("cache_batch", None, "lru_act"),
+                             init="zeros", dtype="bfloat16"),
+            "h": ParamDef((batch, cfg.lru_width),
+                          ("cache_batch", "lru_act"),
+                          init="zeros", dtype="float32")}}
+    raise ValueError(kind)
+
+
+def cache_defs(cfg, batch: int, max_len: int) -> Dict:
+    group = {str(i): _block_cache_defs(cfg, k, batch, max_len)
+             for i, k in enumerate(cfg.layer_pattern)}
+    d: Dict = {"groups": _stack_defs(group, cfg.n_groups),
+               "length": ParamDef((), (), init="zeros", dtype="int32")}
+    if cfg.tail_pattern:
+        d["tail"] = {str(i): _block_cache_defs(cfg, k, batch, max_len)
+                     for i, k in enumerate(cfg.tail_pattern)}
+    return d
+
+
+def init_cache(cfg, batch: int, max_len: int) -> PyTree:
+    return init_params(cache_defs(cfg, batch, max_len), jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------- #
+# block application
+# --------------------------------------------------------------------------- #
+def _apply_block(kind: str, bp: Dict, x: jax.Array, *, cfg,
+                 positions: jax.Array, cache: Optional[Dict],
+                 mode: str, max_len: Optional[int] = None
+                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    eps, gn = cfg.norm_eps, cfg.gemma_norm
+    window = cfg.sliding_window if kind == "local" else None
+
+    if kind in ("attn", "local", "moe"):
+        h = rmsnorm(x, bp["ln1"], eps, gn)
+        a, attn_cache = attention.attn_apply(
+            bp["attn"], h, cfg=cfg, window=window, positions=positions,
+            cache=cache.get("attn") if cache else None, mode=mode,
+            max_len=max_len)
+        if cfg.post_norms:
+            a = rmsnorm(a, bp["ln1_post"], eps, gn)
+        x = x + a
+        h = rmsnorm(x, bp["ln2"], eps, gn)
+        if kind == "moe":
+            m, aux = moe_mod.moe_apply(bp["moe"], h, cfg)
+        else:
+            m = mlp_apply(bp["mlp"], h, cfg)
+        if cfg.post_norms:
+            m = rmsnorm(m, bp["ln2_post"], eps, gn)
+        x = x + m
+        new_cache = {"attn": attn_cache} if attn_cache is not None else None
+        return x, new_cache, aux
+
+    if kind == "ssd":
+        o, c = ssm_mod.ssd_apply(bp["ssd"], x, cfg=cfg,
+                                 cache=cache.get("ssd") if cache else None,
+                                 mode=mode)
+        return x + o, ({"ssd": c} if c is not None else None), aux
+
+    if kind == "rglru":
+        h = rmsnorm(x, bp["ln1"], eps, gn)
+        o, c = rglru_mod.rglru_apply(
+            bp["rglru"], h, cfg=cfg,
+            cache=cache.get("rglru") if cache else None, mode=mode)
+        x = x + o
+        h = rmsnorm(x, bp["ln2"], eps, gn)
+        x = x + mlp_apply(bp["mlp"], h, cfg)
+        return x, ({"rglru": c} if c is not None else None), aux
+
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+def forward(params: PyTree, tokens: jax.Array, cfg, *,
+            embeds: Optional[jax.Array] = None,
+            cache: Optional[PyTree] = None,
+            mode: str = "train",
+            max_len: Optional[int] = None
+            ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+    """Run the decoder stack.
+
+    Returns (h: (B, T, D) final hidden states, new_cache, aux_loss).
+    ``embeds`` are the stub-frontend embeddings ([vlm]/[audio]) prepended to
+    the token embeddings (train/prefill only).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    offset = cache["length"] if cache is not None and mode == "decode" else 0
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(dtype), x], axis=1)
+    S = x.shape[1]
+    positions = offset + jnp.arange(S)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + sinusoidal_pos(positions, cfg.d_model)[None].astype(dtype)
+    x = constrain(x, ("batch", "seq", None))
+
+    pattern = cfg.layer_pattern
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def group_body(x, gp, gcache):
+        new_c: Dict = {}
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pattern):
+            x, c, a = _apply_block(
+                kind, gp[str(i)], x, cfg=cfg, positions=positions,
+                cache=(gcache[str(i)] if gcache is not None else None),
+                mode=mode, max_len=max_len)
+            aux += a
+            if c is not None:
+                new_c[str(i)] = c
+        return x, (new_c if new_c else None), aux
+
+    if mode == "train":
+        def body(carry, gp):
+            x, aux = carry
+            x, _, a = group_body(x, gp, None)
+            return (x, aux + a), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["groups"])
+        new_cache = None
+    elif mode == "prefill":
+        def body(carry, gp):
+            x, aux = carry
+            x, c, a = group_body(x, gp, None)
+            return (x, aux + a), c
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), gcaches = jax.lax.scan(body, (x, aux0), params["groups"])
+        new_cache = {"groups": gcaches, "length": jnp.asarray(S, jnp.int32)}
+    else:  # decode
+        def body(x, xs):
+            gp, gc = xs
+            x, c, _ = group_body(x, gp, gc)
+            return x, c
+        x, gcaches = jax.lax.scan(body, x, (params["groups"],
+                                            cache["groups"]))
+        new_cache = {"groups": gcaches, "length": offset + S}
+        aux = aux0
+
+    # tail blocks (unscanned remainder of the pattern, e.g. RG-2b's R,R)
+    if cfg.tail_pattern:
+        tail_cache: Dict = {}
+        for i, kind in enumerate(cfg.tail_pattern):
+            tc = cache["tail"][str(i)] if (cache is not None and
+                                           mode == "decode") else None
+            x, c, a = _apply_block(kind, params["tail"][str(i)], x, cfg=cfg,
+                                   positions=positions, cache=tc, mode=mode,
+                                   max_len=max_len)
+            aux += a
+            if c is not None:
+                tail_cache[str(i)] = c
+        if new_cache is not None and tail_cache:
+            new_cache["tail"] = tail_cache
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps, cfg.gemma_norm)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------- #
+# entry points: train loss / prefill / decode
+# --------------------------------------------------------------------------- #
+def loss_fn(params: PyTree, batch: Dict, cfg) -> Tuple[jax.Array, Dict]:
+    """Causal-LM loss.  batch = {"tokens": (B, S_tok)[, "embeds": (B,F,D)]}"""
+    tokens = batch["tokens"]
+    embeds = batch.get("embeds")
+    h, _, aux = forward(params, tokens, cfg, embeds=embeds, mode="train")
+    F = cfg.frontend_tokens if embeds is not None else 0
+    if F > 0:
+        hp = h[:, F - 1:-1]
+        labels = tokens
+    else:
+        hp = h[:, :-1]
+        labels = tokens[:, 1:]
+    ce = chunked_cross_entropy(hp, labels, unembed_matrix(params, cfg), cfg)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def _head(h_last: jax.Array, params: PyTree, cfg) -> jax.Array:
+    logits = h_last @ unembed_matrix(params, cfg).astype(h_last.dtype)
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def prefill(params: PyTree, tokens: jax.Array, cfg, *,
+            embeds: Optional[jax.Array] = None,
+            max_len: Optional[int] = None
+            ) -> Tuple[jax.Array, PyTree]:
+    """Process a prompt; returns (last-position logits (B, V), cache).
+
+    ``max_len`` pre-sizes full-attention caches so decode can append."""
+    h, cache, _ = forward(params, tokens, cfg, embeds=embeds, mode="prefill",
+                          max_len=max_len)
+    return _head(h[:, -1], params, cfg), cache
+
+
+def decode_step(params: PyTree, cache: PyTree, tokens: jax.Array, cfg
+                ) -> Tuple[jax.Array, PyTree]:
+    """One decode step.  tokens: (B, 1) → (logits (B, V), new cache)."""
+    h, new_cache, _ = forward(params, tokens, cfg, cache=cache, mode="decode")
+    return _head(h[:, -1], params, cfg), new_cache

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (Optimizer, adamw, momentum, sgd,
+                                    apply_updates, global_norm, clip_by_norm)
+from repro.optim.schedules import constant, cosine, warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "momentum", "sgd", "apply_updates",
+           "global_norm", "clip_by_norm", "constant", "cosine",
+           "warmup_cosine"]

@@ -1,0 +1,104 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+API shape mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, new_state)``;
+``apply_updates(params, updates)``.  All states live in f32 master copies so
+bf16-param training still accumulates exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _lr_at(lr: Union[float, Schedule], step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_norm(grads: PyTree, max_norm: float) -> PyTree:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads)
+
+
+def sgd(lr: Union[float, Schedule]) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        eta = _lr_at(lr, state["step"])
+        upd = jax.tree.map(lambda g: (-eta * g.astype(jnp.float32))
+                           .astype(g.dtype), grads)
+        return upd, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Union[float, Schedule], beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params)}
+
+    def update(grads, state, params=None):
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        eta = _lr_at(lr, state["step"])
+        upd = jax.tree.map(lambda m, g: (-eta * m).astype(g.dtype), mu, grads)
+        return upd, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(z, params),
+                "nu": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *
+                          g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                          jnp.square(g.astype(jnp.float32)), state["nu"],
+                          grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        eta = _lr_at(lr, state["step"])
+
+        def upd(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            u = -eta * (mhat / (jnp.sqrt(vhat) + eps)
+                        + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        return jax.tree.map(upd, mu, nu, params), \
+            {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (AxisRules, constrain, make_rules,
+                                     spec_for, use_rules, current_rules)
+
+__all__ = ["AxisRules", "constrain", "make_rules", "spec_for", "use_rules",
+           "current_rules"]

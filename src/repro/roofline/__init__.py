@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (HW, collective_bytes, roofline_report,
+                                     RooflineReport)
+
+__all__ = ["HW", "collective_bytes", "roofline_report", "RooflineReport"]

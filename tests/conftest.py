@@ -1,0 +1,10 @@
+import os
+
+# smoke tests and benches must see the real single CPU device — the 512-way
+# override belongs ONLY to launch/dryrun.py.  Tests that need a small mesh
+# spawn subprocesses (see test_dryrun_small.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

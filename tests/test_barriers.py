@@ -1,0 +1,84 @@
+"""Barrier predicate semantics (paper §6.1, Algorithms 1–2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.barriers import (ASP, BSP, PBSP, PSSP, SSP, make_barrier)
+
+
+def rng():
+    return np.random.default_rng(0)
+
+
+class TestClassic:
+    def test_bsp_blocks_leader(self):
+        # a worker ahead of anyone may not advance
+        assert not BSP().can_pass(3, [3, 3, 2], rng())
+        assert BSP().can_pass(3, [3, 3, 3], rng())
+
+    def test_bsp_is_ssp_zero(self):
+        steps = [5, 5, 4]
+        assert BSP().can_pass(5, steps, rng()) == \
+            SSP(staleness=0).can_pass(5, steps, rng())
+
+    def test_ssp_staleness_window(self):
+        s = SSP(staleness=4)
+        assert s.can_pass(6, [2, 6, 6], rng())       # lag 4 ≤ 4
+        assert not s.can_pass(7, [2, 6, 6], rng())   # lag 5 > 4
+
+    def test_asp_always_passes(self):
+        assert ASP().can_pass(100, [0, 0, 0], rng())
+
+
+class TestProbabilistic:
+    def test_pbsp_full_sample_equals_bsp(self):
+        steps = list(range(10))
+        b = PBSP(sample_size=10)
+        for my in (0, 5, 9):
+            assert b.can_pass(my, steps, rng()) == \
+                BSP().can_pass(my, steps, rng())
+
+    def test_sample_size_zero_is_asp(self):
+        b = PBSP(sample_size=0)
+        assert b.can_pass(99, [0] * 8, rng())
+
+    def test_pssp_generalises(self):
+        # pSSP with S=V, s=0 reduces to BSP (paper §6.1)
+        steps = [4, 4, 5]
+        b = PSSP(staleness=0, sample_size=3)
+        assert b.can_pass(4, steps, rng()) == BSP().can_pass(4, steps, rng())
+
+    def test_sampling_probabilistic_pass(self):
+        # one straggler among 100: a β=1 sample should often miss it
+        steps = [0] + [10] * 99
+        b = PBSP(sample_size=1)
+        r = np.random.default_rng(1)
+        passes = sum(b.can_pass(10, steps, r) for _ in range(200))
+        assert 150 < passes < 200   # ~99% pass rate
+
+
+class TestJaxPath:
+    def test_can_pass_jax_matches_python(self):
+        b = PSSP(staleness=2, sample_size=3)
+        my = jnp.asarray([5, 3])
+        sampled = jnp.asarray([[3, 4, 5], [5, 5, 5]])
+        out = b.can_pass_jax(my, sampled)
+        assert out.tolist() == [True, True]
+        out2 = b.can_pass_jax(jnp.asarray([7]), jnp.asarray([[3, 4, 5]]))
+        assert out2.tolist() == [False]
+
+    def test_valid_mask(self):
+        b = PBSP(sample_size=4)
+        my = jnp.asarray([5])
+        sampled = jnp.asarray([[0, 5, 5, 5]])
+        valid = jnp.asarray([[False, True, True, True]])
+        assert b.can_pass_jax(my, sampled, valid).tolist() == [True]
+
+
+def test_factory_staleness_only_for_ssp_family():
+    assert make_barrier("bsp", staleness=7).staleness == 0
+    assert make_barrier("pbsp", staleness=7, sample_size=3).staleness == 0
+    assert make_barrier("ssp", staleness=7).staleness == 7
+    assert make_barrier("pssp", staleness=7, sample_size=3).sample_size == 3
+    with pytest.raises(ValueError):
+        make_barrier("nope")

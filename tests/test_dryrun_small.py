@@ -1,0 +1,77 @@
+"""Dry-run machinery on a small in-process host mesh (8 fake devices).
+
+The full 512-device production dry-run runs via
+``python -m repro.launch.dryrun`` (results in results/dryrun); here we
+verify the same pipeline — rules → abstract inputs → lower → compile →
+roofline — works end-to-end for representative archs at reduced scale, in
+a subprocess so the forced device count cannot leak into other tests.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json, sys
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config, reduced, INPUT_SHAPES
+    from repro.parallel.sharding import make_rules, use_rules
+    from repro.launch.steps import dryrun_inputs
+    from repro.roofline.analysis import roofline_report
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    arch, shape_name, multipod = sys.argv[1], sys.argv[2], sys.argv[3] == "1"
+    cfg = reduced(get_config(arch), n_layers=4, d_model=256)
+    shape = dataclasses.replace(INPUT_SHAPES[shape_name],
+                                seq_len=512, global_batch=8)
+    if multipod:
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    else:
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rules = make_rules(cfg, shape, mesh)
+    with use_rules(rules):
+        args, step, donate = dryrun_inputs(cfg, shape, rules)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)
+    rep = roofline_report({"flops": cost.flops, "bytes accessed": cost.bytes},
+                          hlo, chips=mesh.devices.size,
+                          model_flops_total=1.0)
+    ma = compiled.memory_analysis()
+    print(json.dumps({
+        "flops": cost.flops, "bytes": cost.bytes,
+        "coll": cost.coll_total, "bottleneck": rep.bottleneck,
+        "temp": ma.temp_size_in_bytes,
+    }))
+""")
+
+CASES = [
+    ("qwen2-0.5b", "train_4k", False),
+    ("gemma2-27b", "train_4k", False),
+    ("qwen3-moe-30b-a3b", "train_4k", False),
+    ("mamba2-780m", "decode_32k", False),
+    ("recurrentgemma-2b", "prefill_32k", False),
+    ("h2o-danube-1.8b", "train_4k", True),     # multi-pod axis
+]
+
+
+@pytest.mark.parametrize("arch,shape,multipod", CASES)
+def test_small_mesh_lower_compile(arch, shape, multipod, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, arch, shape, "1" if multipod else "0"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["flops"] > 0
+    assert rec["bytes"] > 0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")

@@ -1,0 +1,37 @@
+"""Engine/barrier combination matrix (paper §4.1, Table 1)."""
+import pytest
+
+from repro.core.engines import (MapReduceEngine, P2PEngine,
+                                ParameterServerEngine, valid_combinations)
+
+
+def test_ps_engine_hosts_everything():
+    for b in ("bsp", "ssp", "asp", "pbsp", "pssp"):
+        r = ParameterServerEngine(b).run(n_nodes=32, duration=4.0, dim=8)
+        assert r.mean_progress > 0
+
+
+def test_p2p_rejects_global_state_barriers():
+    # BSP/SSP need centralised state — invalid on the p2p engine (§4.1)
+    with pytest.raises(ValueError):
+        P2PEngine("bsp")
+    with pytest.raises(ValueError):
+        P2PEngine("ssp")
+
+
+def test_p2p_runs_probabilistic():
+    r = P2PEngine("pbsp").run(n_nodes=32, duration=4.0, dim=8)
+    assert r.mean_progress > 0
+    assert r.control_messages > 0    # overlay sampling cost
+
+
+def test_mapreduce_is_bsp():
+    eng = MapReduceEngine()
+    assert eng.barrier.name == "bsp"
+    r = eng.run(n_nodes=16, duration=4.0, dim=8)
+    assert int(r.steps.max() - r.steps.min()) <= 1
+
+
+def test_combination_table():
+    assert "p2p" in valid_combinations("pssp")
+    assert "p2p" not in valid_combinations("bsp")

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.rmsnorm import rmsnorm_tpu
+from repro.kernels.ssd_scan import ssd_scan_tpu
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(atol=5e-3, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,H,hd,window,cap", [
+    (128, 2, 64, None, None),
+    (256, 4, 64, None, None),
+    (256, 2, 128, 64, None),
+    (128, 2, 64, None, 30.0),
+    (256, 1, 64, 128, 50.0),
+    (384, 2, 32, None, None),       # non-pow2 sequence (3 blocks of 128)
+])
+def test_flash_vs_oracle(S, H, hd, window, cap, dtype):
+    q = jax.random.normal(KEY, (2, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, S, H, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, S, H, hd), dtype)
+    got = ops.attention(q, k, v, window=window, softcap=cap,
+                        impl="interpret")
+    want = ref.attention_ref(q, k, v, window=window, softcap=cap)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **tol(dtype))
+
+
+def test_flash_block_shapes_swept():
+    q = jax.random.normal(KEY, (1, 4, 256, 64))
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        got = flash_attention_tpu(q, q, q, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+        want = ref.attention_ref(q.transpose(0, 2, 1, 3),
+                                 q.transpose(0, 2, 1, 3),
+                                 q.transpose(0, 2, 1, 3))
+        np.testing.assert_allclose(got.transpose(0, 2, 1, 3), want,
+                                   atol=2e-5, rtol=1e-4)
+
+
+def test_flash_tile_skipping_correct():
+    """pl.when-skipped tiles must not corrupt the accumulation (SWA)."""
+    q = jax.random.normal(KEY, (1, 1, 512, 64))
+    got = flash_attention_tpu(q, q, q, causal=True, window=128,
+                              block_q=128, block_k=128, interpret=True)
+    want = ref.attention_ref(q.transpose(0, 2, 1, 3),
+                             q.transpose(0, 2, 1, 3),
+                             q.transpose(0, 2, 1, 3), window=128)
+    np.testing.assert_allclose(got.transpose(0, 2, 1, 3), want,
+                               atol=2e-5, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# SSD scan
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,hd,N,chunk", [
+    (128, 64, 32, 64),
+    (256, 64, 128, 128),
+    (256, 32, 64, 64),
+])
+def test_ssd_vs_sequential_oracle(S, hd, N, chunk, dtype):
+    BH = 4
+    xdt = (jax.random.normal(KEY, (BH, S, hd)) * 0.5).astype(dtype)
+    dA = (-jax.random.uniform(jax.random.fold_in(KEY, 3), (BH, S)) * 0.1
+          ).astype(dtype)
+    Bm = (jax.random.normal(jax.random.fold_in(KEY, 4), (BH, S, N)) * 0.3
+          ).astype(dtype)
+    Cm = (jax.random.normal(jax.random.fold_in(KEY, 5), (BH, S, N)) * 0.3
+          ).astype(dtype)
+    got = ssd_scan_tpu(xdt, dA, Bm, Cm, chunk=chunk, interpret=True)
+    want = ops.ssd(xdt, dA, Bm, Cm, impl="cpu")
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32),
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-3)
+
+
+def test_ssd_chunk_invariance():
+    """The chunked dual form must be invariant to the chunk size."""
+    BH, S, hd, N = 2, 256, 32, 16
+    xdt = jax.random.normal(KEY, (BH, S, hd)) * 0.5
+    dA = -jax.random.uniform(jax.random.fold_in(KEY, 1), (BH, S)) * 0.2
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 2), (BH, S, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 3), (BH, S, N)) * 0.3
+    outs = [ssd_scan_tpu(xdt, dA, Bm, Cm, chunk=c, interpret=True)
+            for c in (32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# rmsnorm
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 128), (3, 100, 512), (2, 7, 896)])
+def test_rmsnorm_vs_oracle(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 6), (shape[-1],))
+    got = rmsnorm_tpu(x, w, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **tol(dtype))
+
+
+# --------------------------------------------------------------------------- #
+# XLA flash path (models/flash.py custom VJP) vs oracle incl. gradients
+# --------------------------------------------------------------------------- #
+def test_xla_flash_custom_vjp_grads():
+    from repro.models.flash import flash_attention
+    q = jax.random.normal(KEY, (2, 256, 4, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 256, 4, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 256, 4, 32))
+
+    for window, cap in [(None, None), (64, None), (None, 30.0)]:
+        f = lambda *a: jnp.sum(jnp.sin(
+            flash_attention(*a, True, window, cap, 128, 128)))
+        g = lambda *a: jnp.sum(jnp.sin(ref.attention_ref(
+            *a, window=window, softcap=cap)))
+        d1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        d2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(d1, d2):
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)

@@ -1,0 +1,44 @@
+"""CLI launcher smoke tests (train/serve/dryrun entry points)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_cli(mod, *args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-m", mod, *args],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+def test_train_plain():
+    out = run_cli("repro.launch.train", "--arch", "qwen2-0.5b", "--reduced",
+                  "--steps", "6", "--batch", "2", "--seq", "64",
+                  "--d-model", "128", "--vocab", "128", "--log-every", "2")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "loss" in out.stdout
+
+
+def test_train_psp_barrier_and_checkpoint(tmp_path):
+    out = run_cli("repro.launch.train", "--arch", "qwen2-0.5b", "--reduced",
+                  "--steps", "6", "--batch", "2", "--seq", "64",
+                  "--d-model", "128", "--vocab", "128",
+                  "--barrier", "pbsp", "--workers", "2",
+                  "--ckpt-dir", str(tmp_path))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "mean_step" in out.stdout
+    assert any(f.endswith(".npz") for f in os.listdir(tmp_path))
+
+
+def test_serve_cli():
+    out = run_cli("repro.launch.serve", "--arch", "mamba2-780m", "--reduced",
+                  "--requests", "2", "--batch", "2", "--prompt-len", "8",
+                  "--max-new", "4")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "tok/s" in out.stdout

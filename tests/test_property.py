@@ -1,0 +1,128 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.barriers import ASP, BSP, PBSP, PSSP, SSP
+from repro.core.bounds import mean_lag_bound, psp_lag_pmf, variance_lag_bound
+from repro.core.sampling import sample_steps_jax
+from repro.models.layers import chunked_cross_entropy, rmsnorm
+from repro.kernels import ref
+
+steps_strategy = st.lists(st.integers(0, 50), min_size=2, max_size=32)
+
+
+class TestBarrierProperties:
+    @given(steps_strategy, st.integers(0, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_pssp_no_stricter_than_pbsp(self, steps, s):
+        """Monotonicity: larger staleness can only make passing easier."""
+        rng = np.random.default_rng(0)
+        my = max(steps)
+        loose = PSSP(staleness=s, sample_size=len(steps))
+        strict = PBSP(sample_size=len(steps))
+        if strict.can_pass(my, steps, np.random.default_rng(0)):
+            assert loose.can_pass(my, steps, np.random.default_rng(0))
+
+    @given(steps_strategy)
+    @settings(max_examples=50, deadline=None)
+    def test_minimum_always_passes(self, steps):
+        """The slowest worker can never be barrier-blocked."""
+        rng = np.random.default_rng(1)
+        my = min(steps)
+        for barrier in (BSP(), SSP(staleness=3), ASP(),
+                        PBSP(sample_size=4), PSSP(staleness=2,
+                                                  sample_size=4)):
+            assert barrier.can_pass(my, steps, rng)
+
+    @given(steps_strategy, st.integers(1, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_sample_subsets_full_view(self, steps, beta):
+        """If the classic barrier passes, any sampled version passes too
+        (a subset of constraints cannot be stricter)."""
+        my = max(steps)
+        if SSP(staleness=4).can_pass(my, steps, np.random.default_rng(0)):
+            assert PSSP(staleness=4, sample_size=beta).can_pass(
+                my, steps, np.random.default_rng(2))
+
+
+class TestTheoryProperties:
+    @given(st.floats(0.05, 0.95), st.integers(1, 64), st.integers(0, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_pmf_valid(self, F_r, beta, r):
+        f = np.zeros(201)
+        f[: r + 1] = F_r / (r + 1)
+        f[r + 1:] = (1 - F_r) / (200 - r)
+        p = psp_lag_pmf(f, beta=beta, r=r, T=200)
+        assert abs(p.sum() - 1) < 1e-8
+        assert (p >= -1e-12).all()
+
+    @given(st.floats(0.1, 0.9), st.integers(0, 6))
+    @settings(max_examples=40, deadline=None)
+    def test_bounds_monotone_in_beta_at_fixed_a(self, a, r):
+        # the paper's Fig-4/5 monotonicity statement holds at fixed
+        # a = F(r)^β with per-curve F(r) = a^{1/β}
+        T = 5000
+        ms = [mean_lag_bound(a ** (1 / b), b, r, T) for b in (1, 4, 16, 64)]
+        vs = [variance_lag_bound(a ** (1 / b), b, r, T)
+              for b in (1, 4, 16, 64)]
+        assert all(x >= y - 1e-9 for x, y in zip(ms, ms[1:]))
+        assert all(x >= y - 1e-9 for x, y in zip(vs, vs[1:]))
+
+
+class TestSamplingProperties:
+    @given(st.integers(2, 24), st.integers(1, 8), st.integers(0, 1000))
+    @settings(max_examples=40, deadline=None)
+    def test_sample_steps_jax_bounds(self, w, beta, seed):
+        beta = min(beta, w - 1)
+        steps = jnp.arange(w, dtype=jnp.int32) * 3
+        sampled, valid = sample_steps_jax(jax.random.PRNGKey(seed), steps,
+                                          beta)
+        assert sampled.shape == (w, beta)
+        vals = set(np.asarray(steps).tolist())
+        assert set(np.asarray(sampled).ravel().tolist()) <= vals
+
+
+class TestNumericsProperties:
+    @given(st.integers(1, 4), st.integers(2, 40), st.integers(8, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_rmsnorm_scale_invariant_structure(self, b, s, d):
+        x = jax.random.normal(jax.random.PRNGKey(b), (b, s, d))
+        w = jnp.ones((d,))
+        y = rmsnorm(x, w)
+        # RMS of output rows ≈ 1
+        rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, -1))
+        assert bool(jnp.all(jnp.abs(rms - 1.0) < 1e-2))
+        # positive-homogeneous: rmsnorm(c·x) == rmsnorm(x)
+        y2 = rmsnorm(3.7 * x, w)
+        assert bool(jnp.allclose(y, y2, atol=1e-4))
+
+    @given(st.integers(2, 6), st.integers(4, 32))
+    @settings(max_examples=20, deadline=None)
+    def test_chunked_ce_matches_direct(self, b, s):
+        import dataclasses
+        from repro.configs import get_config, reduced
+        cfg = reduced(get_config("qwen2-0.5b"))
+        cfg = dataclasses.replace(cfg, logit_softcap=None)
+        d, v = 16, 32
+        h = jax.random.normal(jax.random.PRNGKey(0), (b, s, d))
+        u = jax.random.normal(jax.random.PRNGKey(1), (d, v))
+        labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, v)
+        got = chunked_cross_entropy(h, labels, u, cfg, chunk=8)
+        logits = (h @ u).astype(jnp.float32)
+        want = jnp.mean(jax.nn.logsumexp(logits, -1) -
+                        jnp.take_along_axis(logits, labels[..., None],
+                                            -1)[..., 0])
+        assert abs(float(got - want)) < 1e-4
+
+    @given(st.integers(16, 128))
+    @settings(max_examples=15, deadline=None)
+    def test_attention_rows_sum_to_one(self, s):
+        """Attention output of constant V must be that constant."""
+        s = (s // 16) * 16
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, s, 2, 16))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, s, 2, 16))
+        v = jnp.ones((1, s, 2, 16))
+        o = ref.attention_ref(q, k, v)
+        assert bool(jnp.allclose(o, 1.0, atol=1e-5))

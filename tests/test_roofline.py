@@ -1,0 +1,88 @@
+"""HLO cost analyzer: trip-count multiplication validated on known cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import HW, collective_bytes, roofline_report
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def test_plain_matmul_flops():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = jax.jit(lambda x, y: x @ y).lower(a, a).compile()
+    r = analyze_hlo(c.as_text())
+    assert r.flops == 2 * 256 ** 3
+
+
+def test_scan_trip_count_multiplied():
+    w = jax.ShapeDtypeStruct((8, 512, 512), jnp.float32)
+    x = jax.ShapeDtypeStruct((512,), jnp.float32)
+
+    def f(ws, x):
+        return jax.lax.scan(lambda c, wi: (wi @ c, None), x, ws)[0]
+
+    c = jax.jit(f).lower(w, x).compile()
+    r = analyze_hlo(c.as_text())
+    assert r.flops == 8 * 2 * 512 ** 2
+    assert 8 in r.while_trips.values()
+    # builtin cost_analysis counts the body once — document the gap
+    assert c.cost_analysis()["flops"] < r.flops
+
+
+def test_nested_scan():
+    w = jax.ShapeDtypeStruct((4, 3, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((64,), jnp.float32)
+
+    def f(ws, x):
+        def outer(c, wrow):
+            def inner(ci, wi):
+                return wi @ ci, None
+            return jax.lax.scan(inner, c, wrow)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    c = jax.jit(f).lower(w, x).compile()
+    r = analyze_hlo(c.as_text())
+    assert r.flops == 4 * 3 * 2 * 64 ** 2
+
+
+def test_bytes_scale_with_trips():
+    w = jax.ShapeDtypeStruct((16, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128,), jnp.float32)
+
+    def f(ws, x):
+        return jax.lax.scan(lambda c, wi: (jnp.tanh(wi @ c), None), x, ws)[0]
+
+    c = jax.jit(f).lower(w, x).compile()
+    r = analyze_hlo(c.as_text())
+    # at least the 16 weight slices must be read
+    assert r.bytes >= 16 * 128 * 128 * 4
+
+
+def test_collective_regex_parse():
+    hlo = """
+ENTRY %main (a: f32[16,1024]) -> f32[16,1024] {
+  %a = f32[16,1024]{1,0} parameter(0)
+  %ag = f32[256,1024]{1,0} all-gather(%a), dimensions={0}
+  %ar = f32[16,1024]{1,0} all-reduce(%a), to_apply=%sum
+  ROOT %cp = f32[16,1024]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    # the quick regex variant falls back to OUTPUT size when operand
+    # shapes aren't inline (all-gather output = 256 rows);
+    # analyze_hlo resolves operands through the instruction table.
+    c = collective_bytes(hlo)
+    assert c["all-gather"] == 256 * 1024 * 4
+    assert c["all-reduce"] == 16 * 1024 * 4
+    assert c["collective-permute"] == 16 * 1024 * 4
+    r = analyze_hlo(hlo)
+    assert r.coll["all-gather"] == 16 * 1024 * 4
+
+
+def test_roofline_report_terms():
+    rep = roofline_report({"flops": 197e12, "bytes accessed": 819e9},
+                          "", chips=256, model_flops_total=197e12 * 256)
+    assert abs(rep.compute_s - 1.0) < 1e-9
+    assert abs(rep.memory_s - 1.0) < 1e-9
+    assert rep.bottleneck in ("compute", "memory")
+    assert abs(rep.useful_ratio - 1.0) < 1e-9

@@ -1,0 +1,91 @@
+"""The sampling primitive + structured overlay (paper §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.overlay import ChordOverlay, FullMembershipOverlay
+from repro.core.sampling import CentralSampler, OverlaySampler, \
+    sample_steps_jax
+
+
+class TestOverlay:
+    def test_population_estimate(self):
+        ov = ChordOverlay(seed=0)
+        for i in range(500):
+            ov.join(i)
+        est = ov.estimate_population(probes=64)
+        assert 250 < est < 1000    # density estimator is unbiased-ish
+
+    def test_uniform_sampling(self):
+        ov = ChordOverlay(seed=1)
+        for i in range(64):
+            ov.join(i)
+        counts = np.zeros(64)
+        for _ in range(400):
+            for p in ov.sample(4):
+                counts[p] += 1
+        # successor sampling is gap-proportional (approximately uniform
+        # for uniform ids): nearly all nodes reachable, none dominant
+        assert (counts > 0).sum() >= 0.9 * len(counts)
+        assert counts.max() < 30 * counts.mean()
+
+    def test_churn(self):
+        ov = ChordOverlay(seed=2)
+        ids = [ov.join(i) for i in range(16)]
+        ov.leave(ids[3])
+        assert len(ov) == 15
+        assert 3 not in ov.sample(15)
+
+    def test_lookup_cost_logarithmic(self):
+        ov = ChordOverlay(seed=3)
+        for i in range(1024):
+            ov.join(i)
+        assert ov.lookup_hops(0) == 10
+
+    def test_sample_excludes_self(self):
+        ov = ChordOverlay(seed=4)
+        for i in range(8):
+            ov.join(i)
+        for _ in range(20):
+            assert 0 not in ov.sample(7, exclude=0)
+
+
+class TestSamplers:
+    def test_central_full_view(self):
+        s = CentralSampler(seed=0)
+        out = s.sample([1, 2, 3], beta=None)
+        assert list(out.steps) == [1, 2, 3]
+        assert out.cost_hops == 0
+
+    def test_central_counting_process_is_free(self):
+        # paper §5: centralised sampling "is as trivial as a counting process"
+        s = CentralSampler(seed=0)
+        assert s.sample(list(range(100)), beta=10).cost_hops == 0
+
+    def test_overlay_sampling_charges_hops(self):
+        ov = FullMembershipOverlay(100, seed=0)
+        s = OverlaySampler(ov)
+        out = s.sample(np.arange(100), beta=10)
+        assert out.cost_hops > 0
+        assert len(out.steps) == 10
+
+
+class TestJaxSampling:
+    def test_shapes_and_no_self(self):
+        steps = jnp.arange(16, dtype=jnp.int32)
+        sampled, valid = sample_steps_jax(jax.random.PRNGKey(0), steps, 4)
+        assert sampled.shape == (16, 4) and bool(valid.all())
+        for w in range(16):
+            assert w not in sampled[w].tolist()   # exclude_self
+
+    def test_without_replacement(self):
+        steps = jnp.arange(8, dtype=jnp.int32)
+        sampled, _ = sample_steps_jax(jax.random.PRNGKey(1), steps, 7)
+        for w in range(8):
+            row = sampled[w].tolist()
+            assert len(set(row)) == 7
+
+    def test_beta_zero(self):
+        sampled, valid = sample_steps_jax(jax.random.PRNGKey(2),
+                                          jnp.arange(4, dtype=jnp.int32), 0)
+        assert sampled.shape == (4, 0)

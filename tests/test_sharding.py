@@ -1,0 +1,77 @@
+"""Logical-axis rules resolution (divisibility-aware degradation)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.parallel.sharding import AxisRules, make_rules
+
+
+class FakeMesh:
+    """Duck-typed mesh: .shape mapping + .axis_names, no devices needed."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        self.devices = np.empty(tuple(shape.values()), dtype=object)
+
+
+def rules_for(arch="gemma2-27b", shape="train_4k", mesh=None):
+    mesh = mesh or FakeMesh({"data": 16, "model": 16})
+    return make_rules(get_config(arch), INPUT_SHAPES[shape], mesh)
+
+
+def test_weight_specs():
+    r = rules_for()
+    # mlp w_gate (d_model, d_ff): FSDP over data, TP over model
+    assert r.spec(("d_model_w", "d_ff_w"), (4608, 36864)) == \
+        P(("data",), ("model",))
+    # embed (vocab, d_model)
+    assert r.spec(("vocab_w", "d_model_w"), (256000, 4608)) == \
+        P(("model",), ("data",))
+
+
+def test_divisibility_degradation():
+    r = rules_for("qwen2-0.5b")
+    # kv=2 doesn't divide model=16 → replicated
+    assert r.spec(("d_model_w", "kv_heads_w", None), (896, 2, 64)) == \
+        P(("data",), None, None)
+    # 14 heads don't divide 16 → replicated (padding happens in attn_apply)
+    assert r.spec(("d_model_w", "heads_w", None), (896, 14, 64)) == \
+        P(("data",), None, None)
+    # padded activation heads DO shard
+    assert r.spec(("attn_batch", "qseq", "heads", None),
+                  (256, 4096, 16, 64)) == \
+        P(("data",), None, ("model",), None)
+
+
+def test_axis_used_once():
+    r = rules_for()
+    # if a leading dim consumes `data`, later dims must not reuse it
+    spec = r.spec(("batch", "d_model_w"), (256, 4608))
+    assert spec == P(("data",), None)
+
+
+def test_decode_cache_rules():
+    r = rules_for("qwen3-moe-30b-a3b", "decode_32k")
+    assert r.spec(("cache_batch", "cache_seq", "kv_heads", None),
+                  (128, 32768, 4, 128)) == \
+        P(("data",), ("model",), None, None)
+    # long_500k: batch 1 undividable → cache spread over data+model
+    r = rules_for("mamba2-780m", "long_500k")
+    assert r.spec(("cache_batch", "cache_seq", "kv_heads", None),
+                  (1, 524288, 1, 64)) == \
+        P(None, ("data", "model"), None, None)
+
+
+def test_multi_pod_batch():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    r = rules_for(mesh=mesh)
+    assert r.spec(("batch", "seq", None), (256, 4096, 4608)) == \
+        P(("pod", "data"), None, None)
+
+
+def test_no_mesh_is_noop():
+    r = AxisRules({"batch": ("data",)}, None)
+    assert r.spec(("batch",), (8,)) == P(None)

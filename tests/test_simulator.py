@@ -1,0 +1,111 @@
+"""Actor-system simulator: reproduces the paper's qualitative results."""
+import numpy as np
+import pytest
+
+from repro.core.barriers import make_barrier
+from repro.core.simulator import SimConfig, run_simulation
+
+
+def run(barrier, **kw):
+    defaults = dict(n_nodes=100, duration=20.0, dim=32, seed=3)
+    defaults.update(kw)
+    return run_simulation(SimConfig(barrier=barrier, **defaults))
+
+
+@pytest.fixture(scope="module")
+def five():
+    return {name: run(make_barrier(name, staleness=4, sample_size=2))
+            for name in ("bsp", "ssp", "asp", "pbsp", "pssp")}
+
+
+class TestFig1:
+    def test_progress_ordering(self, five):
+        # Fig 1a: BSP slowest, ASP fastest, SSP between; probabilistic
+        # versions improve on their classic counterparts
+        assert five["bsp"].mean_progress < five["ssp"].mean_progress \
+            < five["asp"].mean_progress
+        assert five["pbsp"].mean_progress > five["bsp"].mean_progress
+        assert five["pssp"].mean_progress > five["ssp"].mean_progress
+
+    def test_dispersion_ordering(self, five):
+        # Fig 1b/1d: ASP widest spread; BSP tightest
+        spread = {k: int(v.steps.max() - v.steps.min())
+                  for k, v in five.items()}
+        assert spread["bsp"] <= 1
+        assert spread["ssp"] <= 4 + 1
+        assert spread["asp"] > spread["pssp"] >= spread["pbsp"]
+
+    def test_all_converge(self, five):
+        for name, r in five.items():
+            assert r.final_error < 0.1, (name, r.final_error)
+
+    def test_sample_size_sweep_tightens(self):
+        # Fig 1c: larger sample size → tighter step distribution
+        spreads = []
+        for beta in (0, 2, 16):
+            bar = (make_barrier("asp") if beta == 0 else
+                   make_barrier("pbsp", sample_size=beta))
+            r = run(bar)
+            spreads.append(int(r.steps.max() - r.steps.min()))
+        assert spreads[0] > spreads[1] >= spreads[2]
+
+    def test_update_counts_track_progress(self, five):
+        # Fig 1e: faster barriers generate more server updates
+        assert five["asp"].total_updates > five["pbsp"].total_updates \
+            > five["bsp"].total_updates
+
+
+class TestFig2Stragglers:
+    def test_bsp_ssp_sensitive_probabilistic_robust(self):
+        base, frac = {}, {}
+        for name in ("bsp", "ssp", "asp", "pbsp"):
+            bar = make_barrier(name, staleness=4, sample_size=1)
+            base[name] = run(bar, seed=5).mean_progress
+            frac[name] = run(bar, seed=5,
+                             straggler_frac=0.1).mean_progress
+        rel = {k: frac[k] / base[k] for k in base}
+        # classic barriers crushed by 10% 4×-slow nodes; ASP unaffected;
+        # pBSP (β=1% of nodes, as in the paper) in the robust group
+        assert rel["bsp"] < 0.5
+        assert rel["ssp"] < 0.6
+        assert rel["asp"] > 0.85
+        assert rel["pbsp"] > 2 * rel["bsp"]
+
+    def test_slowness_sweep(self):
+        # Fig 2c: BSP dominated by slowness multiplier; pBSP much less
+        bsp, pbsp = [], []
+        for slow in (1.0, 8.0):
+            bsp.append(run(make_barrier("bsp"), seed=9, straggler_frac=0.05,
+                           straggler_slowdown=slow).mean_progress)
+            pbsp.append(run(make_barrier("pbsp", sample_size=1), seed=9,
+                            straggler_frac=0.05,
+                            straggler_slowdown=slow).mean_progress)
+        assert bsp[1] / bsp[0] < 0.35
+        assert pbsp[1] / pbsp[0] > 0.55
+
+
+class TestDistributedScenario:
+    def test_p2p_sampling_equivalent_progress(self):
+        bar = make_barrier("pssp", staleness=4, sample_size=2)
+        central = run(bar)
+        dist = run(bar, distributed_sampling=True)
+        assert abs(central.mean_progress - dist.mean_progress) \
+            < 0.15 * central.mean_progress
+        # distributed sampling pays control-plane hops; centralised doesn't
+        assert dist.control_messages > 0
+        assert central.control_messages == 0
+
+    def test_churn(self):
+        bar = make_barrier("pbsp", sample_size=2)
+        r = run(bar, churn_leave_rate=0.5, churn_join_rate=0.5,
+                distributed_sampling=True)
+        assert r.mean_progress > 0
+        assert np.isfinite(r.final_error)
+
+
+def test_determinism():
+    bar = make_barrier("pssp", staleness=4, sample_size=2)
+    r1 = run(bar, seed=11)
+    r2 = run(bar, seed=11)
+    assert np.array_equal(r1.steps, r2.steps)
+    assert r1.final_error == r2.final_error
