@@ -4,17 +4,23 @@ Each function returns a dict of series suitable for CSV/JSON dumping and a
 one-line derived summary; ``benchmarks.run`` orchestrates them.  Default
 scale is CI-friendly (200 nodes / 20 s); ``full=True`` reproduces the
 paper's 1000-node / 40 s setting with β = 1% of the system size.
+
+Every figure is a *sweep* — barrier × scenario parameter — so all of them
+are routed through the vectorized batch engine
+(:func:`repro.core.vector_sim.run_sweep`): one call advances every scenario
+of a figure simultaneously instead of looping the event-driven simulator.
 """
 from __future__ import annotations
 
-import time
+import functools
 from typing import Dict
 
 import numpy as np
 
 from repro.configs.psp_linear import PSPLinearConfig
 from repro.core.barriers import make_barrier
-from repro.core.simulator import SimConfig, run_simulation
+from repro.core.simulator import SimConfig
+from repro.core.vector_sim import run_sweep
 
 FIVE = ("bsp", "ssp", "asp", "pbsp", "pssp")
 
@@ -30,18 +36,23 @@ def _bar(name: str, c: PSPLinearConfig):
                         sample_size=c.sample_size)
 
 
-def _run(name: str, c: PSPLinearConfig, **kw):
-    cfg = SimConfig(n_nodes=c.n_nodes, duration=c.duration, dim=c.dim,
-                    barrier=_bar(name, c), seed=c.seed, **kw)
-    return run_simulation(cfg)
+def _cfg(name: str, c: PSPLinearConfig, **kw) -> SimConfig:
+    return SimConfig(n_nodes=c.n_nodes, duration=c.duration, dim=c.dim,
+                     barrier=_bar(name, c), seed=c.seed, **kw)
+
+
+@functools.lru_cache(maxsize=2)
+def _fig1_sweep(full: bool):
+    """Figs 1a/1d/1e share the same five runs — sweep once per scale."""
+    c = _scale(full)
+    return c, run_sweep([_cfg(name, c) for name in FIVE])
 
 
 def fig1_progress(full: bool = False) -> Dict:
     """Fig 1a/1b: final step distribution of the five strategies."""
-    c = _scale(full)
+    c, results = _fig1_sweep(full)
     out = {}
-    for name in FIVE:
-        r = _run(name, c)
+    for name, r in zip(FIVE, results):
         out[name] = {"mean": float(r.mean_progress),
                      "min": int(r.steps.min()), "max": int(r.steps.max()),
                      "cdf_steps": np.sort(r.steps).tolist()[:: max(1,
@@ -52,12 +63,14 @@ def fig1_progress(full: bool = False) -> Dict:
 def fig1_sample_sweep(full: bool = False) -> Dict:
     """Fig 1c: pBSP parameterised by sample size 0 → 64."""
     c = _scale(full)
+    betas = (0, 1, 2, 4, 16, 64)
+    cfgs = [SimConfig(n_nodes=c.n_nodes, duration=c.duration, dim=c.dim,
+                      barrier=(make_barrier("asp") if beta == 0 else
+                               make_barrier("pbsp", sample_size=beta)),
+                      seed=c.seed)
+            for beta in betas]
     out = {}
-    for beta in (0, 1, 2, 4, 16, 64):
-        bar = make_barrier("asp") if beta == 0 else \
-            make_barrier("pbsp", sample_size=beta)
-        r = run_simulation(SimConfig(n_nodes=c.n_nodes, duration=c.duration,
-                                     dim=c.dim, barrier=bar, seed=c.seed))
+    for beta, r in zip(betas, run_sweep(cfgs)):
         out[f"beta={beta}"] = {"mean": float(r.mean_progress),
                                "spread": int(r.steps.max() - r.steps.min())}
     return out
@@ -65,10 +78,9 @@ def fig1_sample_sweep(full: bool = False) -> Dict:
 
 def fig1_error(full: bool = False) -> Dict:
     """Fig 1d: normalized L2 model error over time."""
-    c = _scale(full)
+    _, results = _fig1_sweep(full)
     out = {}
-    for name in FIVE:
-        r = _run(name, c)
+    for name, r in zip(FIVE, results):
         out[name] = {"times": r.times.tolist(),
                      "errors": r.errors.tolist(),
                      "final": float(r.final_error)}
@@ -77,10 +89,9 @@ def fig1_error(full: bool = False) -> Dict:
 
 def fig1_messages(full: bool = False) -> Dict:
     """Fig 1e: cumulative updates received by the server."""
-    c = _scale(full)
+    _, results = _fig1_sweep(full)
     out = {}
-    for name in FIVE:
-        r = _run(name, c)
+    for name, r in zip(FIVE, results):
         out[name] = {"times": r.times.tolist(),
                      "updates": r.server_updates.tolist(),
                      "total": int(r.total_updates)}
@@ -90,12 +101,13 @@ def fig1_messages(full: bool = False) -> Dict:
 def fig2_stragglers(full: bool = False) -> Dict:
     """Fig 2a/2b: straggler-fraction sweep 0 → 30% (4× slow)."""
     c = _scale(full)
+    fracs = (0.0, 0.05, 0.1, 0.2, 0.3)
+    results = run_sweep([_cfg(name, c, straggler_frac=frac)
+                         for name in FIVE for frac in fracs])
     out = {}
-    for name in FIVE:
-        base = None
-        rows = []
-        for frac in (0.0, 0.05, 0.1, 0.2, 0.3):
-            r = _run(name, c, straggler_frac=frac)
+    for i, name in enumerate(FIVE):
+        rows, base = [], None
+        for frac, r in zip(fracs, results[i * len(fracs):]):
             if base is None:
                 base = (r.mean_progress, r.final_error)
             rows.append({"frac": frac,
@@ -108,12 +120,14 @@ def fig2_stragglers(full: bool = False) -> Dict:
 def fig2_slowness(full: bool = False) -> Dict:
     """Fig 2c: 5% stragglers, slowness 1× → 16×."""
     c = _scale(full)
+    slows = (1.0, 2.0, 4.0, 8.0, 16.0)
+    results = run_sweep([_cfg(name, c, straggler_frac=0.05,
+                              straggler_slowdown=slow)
+                         for name in FIVE for slow in slows])
     out = {}
-    for name in FIVE:
-        rows = []
-        base = None
-        for slow in (1.0, 2.0, 4.0, 8.0, 16.0):
-            r = _run(name, c, straggler_frac=0.05, straggler_slowdown=slow)
+    for i, name in enumerate(FIVE):
+        rows, base = [], None
+        for slow, r in zip(slows, results[i * len(slows):]):
             if base is None:
                 base = r.mean_progress
             rows.append({"slowness": slow,
@@ -123,17 +137,22 @@ def fig2_slowness(full: bool = False) -> Dict:
 
 
 def fig3_scalability(full: bool = False) -> Dict:
-    """Fig 3: 5% stragglers, system size 100 → 1000 (fixed 10-node sample)."""
+    """Fig 3: 5% stragglers, system size 100 → 1000 (fixed 10-node sample).
+
+    Sizes form distinct structural groups; ``run_sweep`` batches each size
+    across all five barriers automatically.
+    """
     sizes = (100, 250, 500, 1000) if full else (50, 100, 200)
+    duration = 40.0 if full else 20.0
+    results = run_sweep([SimConfig(
+        n_nodes=n, duration=duration, dim=100,
+        barrier=make_barrier(name, staleness=4, sample_size=10),
+        straggler_frac=0.05, seed=0)
+        for name in FIVE for n in sizes])
     out = {}
-    for name in FIVE:
-        rows = []
-        base = None
-        for n in sizes:
-            bar = make_barrier(name, staleness=4, sample_size=10)
-            r = run_simulation(SimConfig(
-                n_nodes=n, duration=20.0 if not full else 40.0,
-                dim=100, barrier=bar, straggler_frac=0.05, seed=0))
+    for i, name in enumerate(FIVE):
+        rows, base = [], None
+        for n, r in zip(sizes, results[i * len(sizes):]):
             if base is None:
                 base = r.mean_progress
             rows.append({"n": n, "progress_pct": float(

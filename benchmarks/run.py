@@ -15,7 +15,7 @@ import json
 import os
 import time
 
-from benchmarks import fig45_bounds, figures
+from benchmarks import fig45_bounds, figures, sweep_bench
 from benchmarks.roofline_bench import print_table, table
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -67,11 +67,14 @@ BENCHES = [
     ("fig2_stragglers", figures.fig2_stragglers, _derived_fig2),
     ("fig2_slowness", figures.fig2_slowness, _derived_fig2c),
     ("fig3_scalability", figures.fig3_scalability, _derived_fig3),
-    ("fig4_mean_bound", lambda full=False: fig45_bounds.fig4_mean_bound(),
+    ("fig4_mean_bound", fig45_bounds.fig4_mean_bound,
      lambda res: fig45_bounds.derived_summary()),
     ("fig5_variance_bound",
      lambda full=False: fig45_bounds.fig5_variance_bound(),
      lambda res: fig45_bounds.derived_summary()),
+    ("sweep_engine", sweep_bench.sweep_speedup,
+     lambda res: f"speedup={res['speedup']:.1f}x "
+                 f"max_dev={res['max_progress_deviation']:.3f}"),
 ]
 
 

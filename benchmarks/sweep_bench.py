@@ -1,0 +1,79 @@
+"""Sweep-engine benchmark: event-driven loop vs vectorized batch engine.
+
+Runs the same Fig-2-style scenario matrix (five barriers × five straggler
+fractions, matched seeds) twice — once as a Python loop over the
+discrete-event :func:`~repro.core.simulator.run_simulation` (the *before*),
+once through the vectorized :func:`~repro.core.vector_sim.run_sweep` (the
+*after*) — checks the two engines agree at the distribution level, and
+records wall-clock plus speedup in ``BENCH_sweep.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.sweep_bench [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+from repro.core.barriers import make_barrier
+from repro.core.simulator import SimConfig, run_simulation
+from repro.core.vector_sim import run_sweep
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
+
+FIVE = ("bsp", "ssp", "asp", "pbsp", "pssp")
+FRACS = (0.0, 0.05, 0.1, 0.2, 0.3)
+
+
+def _configs(full: bool):
+    n, dur, dim = (1000, 40.0, 100) if full else (100, 20.0, 32)
+    beta = max(1, n // 100)
+    return [SimConfig(n_nodes=n, duration=dur, dim=dim, seed=3,
+                      straggler_frac=frac,
+                      barrier=make_barrier(name, staleness=4,
+                                           sample_size=beta))
+            for name in FIVE for frac in FRACS]
+
+
+def sweep_speedup(full: bool = False) -> Dict:
+    """Time the Fig-2 sweep on both engines and dump ``BENCH_sweep.json``."""
+    cfgs = _configs(full)
+    run_sweep(cfgs[:2])                         # warm-up (BLAS, imports)
+    t0 = time.time()
+    vec = run_sweep(cfgs)
+    vector_s = time.time() - t0
+    t0 = time.time()
+    ev = [run_simulation(c) for c in cfgs]
+    event_s = time.time() - t0
+    rel = [v.mean_progress / max(e.mean_progress, 1e-9)
+           for e, v in zip(ev, vec)]
+    res = {
+        "sweep": "fig2_stragglers",
+        "n_configs": len(cfgs),
+        "n_nodes": cfgs[0].n_nodes,
+        "duration_s": cfgs[0].duration,
+        "before": {"engine": "event-driven loop", "seconds": event_s},
+        "after": {"engine": "vectorized run_sweep", "seconds": vector_s},
+        "speedup": event_s / max(vector_s, 1e-9),
+        "max_progress_deviation": max(abs(r - 1.0) for r in rel),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args(argv)
+    res = sweep_speedup(full=a.full)
+    print(f"event={res['before']['seconds']:.2f}s "
+          f"vector={res['after']['seconds']:.2f}s "
+          f"speedup={res['speedup']:.1f}x "
+          f"max_dev={res['max_progress_deviation']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

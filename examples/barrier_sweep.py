@@ -1,9 +1,13 @@
 """Barrier-control sweep on a real model: the paper's Fig-1 trade-off,
 measured on an actual transformer (not the linear-model simulator).
 
-For each barrier, trains the same reduced transformer with 25% injected
-stragglers and reports loss reached vs virtual wall-clock — the
-convergence-speed/accuracy trade-off PSP is designed to win.
+Stage 1 ranks all barriers cheaply with the **vectorized sweep engine**
+(:func:`repro.core.vector_sim.run_sweep` — every barrier × seed scenario
+advances simultaneously on the linear task); stage 2 then confirms the
+trade-off on a live transformer: for each barrier, trains the same reduced
+model with 25% injected stragglers and reports loss reached vs virtual
+wall-clock — the convergence-speed/accuracy trade-off PSP is designed to
+win.
 
     PYTHONPATH=src python examples/barrier_sweep.py
 """
@@ -12,15 +16,39 @@ import dataclasses
 import jax
 
 from repro.configs import get_config, reduced
+from repro.core.barriers import make_barrier
+from repro.core.simulator import SimConfig
 from repro.core.spmd_psp import PSPConfig, psp_init, psp_train_step
+from repro.core.vector_sim import run_sweep
 from repro.data import SyntheticLM
 from repro.models import init_model, loss_fn
 from repro.optim import adamw, clip_by_norm
 
 W, TICKS = 4, 120
+BARRIERS = ("bsp", "ssp", "asp", "pbsp", "pssp")
+
+
+def simulator_presweep():
+    """One batched run over barriers × seeds on the linear task."""
+    seeds = (0, 1, 2)
+    cfgs = [SimConfig(n_nodes=64, duration=10.0, dim=32, seed=s,
+                      straggler_frac=0.25,
+                      barrier=make_barrier(n, staleness=3, sample_size=2))
+            for n in BARRIERS for s in seeds]
+    results = run_sweep(cfgs)
+    print(f"{'barrier':8s} {'steps/node':>10s} {'spread':>7s} {'err':>8s}"
+          f"   (simulator, {len(cfgs)} scenarios batched)")
+    for i, name in enumerate(BARRIERS):
+        rs = results[i * len(seeds):(i + 1) * len(seeds)]
+        mean = sum(r.mean_progress for r in rs) / len(rs)
+        spread = max(int(r.steps.max() - r.steps.min()) for r in rs)
+        err = max(r.final_error for r in rs)
+        print(f"{name:8s} {mean:10.1f} {spread:7d} {err:8.4f}")
+    print()
 
 
 def main():
+    simulator_presweep()
     cfg = reduced(get_config("qwen2-0.5b"))
     cfg = dataclasses.replace(cfg, vocab_size=256, n_layers=2, d_model=128,
                               remat=False)

@@ -8,6 +8,7 @@ library:
 * :mod:`repro.core.overlay` — structured overlay backing distributed sampling
 * :mod:`repro.core.bounds` — Theorems 1–3 bounds (Figs 4–5)
 * :mod:`repro.core.simulator` — discrete-event Actor-system repro (Figs 1–3)
+* :mod:`repro.core.vector_sim` — vectorized batched sweep engine (fast path)
 * :mod:`repro.core.engines` — map-reduce / parameter-server / p2p engines
 * :mod:`repro.core.spmd_psp` — TPU-native PSP for pjit/shard_map training
 """
@@ -17,10 +18,12 @@ from repro.core.bounds import (mean_lag_bound, psp_lag_pmf, regret_tail_bound,
                                variance_lag_bound)
 from repro.core.sampling import CentralSampler, OverlaySampler, sample_steps_jax
 from repro.core.simulator import SimConfig, SimResult, run_simulation
+from repro.core.vector_sim import VectorSimulator, run_sweep
 
 __all__ = [
     "ASP", "BSP", "PBSP", "PSSP", "SSP", "BarrierControl", "make_barrier",
     "mean_lag_bound", "psp_lag_pmf", "regret_tail_bound", "variance_lag_bound",
     "CentralSampler", "OverlaySampler", "sample_steps_jax",
     "SimConfig", "SimResult", "run_simulation",
+    "VectorSimulator", "run_sweep",
 ]

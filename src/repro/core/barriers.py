@@ -82,10 +82,20 @@ class BarrierControl:
         it is a uniform sample of size β (without replacement), which in the
         real system is produced by the structured overlay
         (:mod:`repro.core.overlay`).
+
+        ``self_index`` is the deciding worker's position in ``steps``.  The
+        paper's sampling primitive draws β *other* workers (§6.4: "a worker
+        samples β out of P workers"), so when given, the worker is removed
+        from the sampling pool before drawing — a worker must never draw
+        itself into its own β-sample (it would trivially satisfy the
+        predicate).  The full-view policies keep ``steps`` intact: a worker's
+        own lag is zero, so its presence is harmless there.
         """
         steps = np.asarray(steps)
         if self.sample_size is None:
             return steps
+        if self_index is not None:
+            steps = np.delete(steps, self_index)
         beta = min(self.sample_size, len(steps))
         if beta == 0:
             return steps[:0]
@@ -93,12 +103,16 @@ class BarrierControl:
         return steps[idx]
 
     def can_pass(self, my_step: int, steps: Sequence[int],
-                 rng: np.random.Generator) -> bool:
+                 rng: np.random.Generator,
+                 self_index: Optional[int] = None) -> bool:
         """Worker-centric barrier check: may a worker at ``my_step`` advance?
 
-        ``steps`` is the (full) step vector the policy may sample from.
+        ``steps`` is the (full) step vector the policy may sample from;
+        ``self_index`` (optional) is the worker's own position in it, which
+        probabilistic policies exclude from the sample — matching
+        ``sample_steps_jax(..., exclude_self=True)`` on the jnp path.
         """
-        sampled = self.view(steps, rng)
+        sampled = self.view(steps, rng, self_index=self_index)
         if sampled.size == 0:
             return True
         return bool(np.all(my_step - sampled <= self.staleness))
@@ -155,7 +169,7 @@ class ASP(BarrierControl):
     def view(self, steps, rng, self_index=None):  # noqa: D102
         return np.asarray(steps)[:0]  # S = ∅
 
-    def can_pass(self, my_step, steps, rng):  # noqa: D102
+    def can_pass(self, my_step, steps, rng, self_index=None):  # noqa: D102
         return True
 
     def can_pass_jax(self, my_step, sampled_steps, valid=None):  # noqa: D102

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.barriers import ASP, BSP, BarrierControl, make_barrier
 from repro.core.simulator import SimConfig, SimResult, run_simulation
+from repro.core.vector_sim import run_sweep
 
 __all__ = [
     "Engine",
@@ -62,13 +63,16 @@ class Engine:
     def __init__(self, barrier: BarrierControl | str = "bsp", **overrides):
         if isinstance(barrier, str):
             barrier = make_barrier(barrier)
+        self._check_combination(barrier)
+        self.barrier = barrier
+        self.overrides = overrides
+
+    def _check_combination(self, barrier: BarrierControl) -> None:
         if self.name != "base" and self.name not in _COMBINATIONS[barrier.name]:
             raise ValueError(
                 f"{barrier.name} cannot run on the {self.name} engine "
                 f"(paper §4.1: needs one of {_COMBINATIONS[barrier.name]}); "
                 "only ASP and PSP support distributed barrier state")
-        self.barrier = barrier
-        self.overrides = overrides
 
     # the four shared APIs (paper §4) — semantic no-op hooks that the
     # simulator enacts; exposed so applications can be written against them.
@@ -82,12 +86,31 @@ class Engine:
     def push(self):
         raise NotImplementedError("driven by the simulator's event loop")
 
-    def run(self, **cfg_kwargs) -> SimResult:
+    def _config(self, **cfg_kwargs) -> SimConfig:
         cfg_kwargs = {**self.overrides, **cfg_kwargs}
-        cfg = SimConfig(barrier=self.barrier,
-                        distributed_sampling=self.distributed_states,
-                        **cfg_kwargs)
-        return run_simulation(cfg)
+        barrier = cfg_kwargs.pop("barrier", self.barrier)
+        if isinstance(barrier, str):
+            barrier = make_barrier(barrier)
+        self._check_combination(barrier)
+        return SimConfig(barrier=barrier,
+                         distributed_sampling=self.distributed_states,
+                         **cfg_kwargs)
+
+    def run(self, **cfg_kwargs) -> SimResult:
+        return run_simulation(self._config(**cfg_kwargs))
+
+    def run_sweep(self, sweep: Iterable[dict], **common) -> List[SimResult]:
+        """Run a scenario sweep through the vectorized batch engine.
+
+        ``sweep`` is an iterable of per-scenario :class:`SimConfig` override
+        dicts (each may also carry a ``barrier`` name or instance);
+        ``common`` applies to every scenario.  Scenarios sharing a
+        structural shape are advanced simultaneously
+        (:func:`repro.core.vector_sim.run_sweep`); results come back in
+        sweep order.
+        """
+        cfgs = [self._config(**{**common, **kw}) for kw in sweep]
+        return run_sweep(cfgs)
 
 
 class MapReduceEngine(Engine):

@@ -22,9 +22,21 @@ Faithfulness notes
 * Barrier evaluation is either **centralised** (server-side counting process)
   or **distributed** (each node samples β peers through the structured
   overlay) — both scenarios of §5.
+* Barrier sampling is **worker-centric and self-excluding** (§6.4): a worker
+  deciding whether to advance samples β *other* workers — on both paths the
+  deciding node is excluded from the pool (centralised via
+  ``CentralSampler(exclude=...)`` with the index remapped through the alive
+  mask under churn; distributed via the overlay's ``exclude``), matching
+  ``sample_steps_jax(..., exclude_self=True)`` on the SPMD path.  A worker
+  that could draw itself would trivially satisfy the predicate.
 * Control-plane cost is tracked separately from update messages, matching the
   paper's Fig-1e methodology ("we ignore control messages ... negligible
   compared to the size of model updates").
+
+This event-driven simulator is the **semantic reference**; scenario sweeps
+should go through the vectorized batch engine
+(:func:`repro.core.vector_sim.run_sweep`), which advances many
+configurations simultaneously and is equivalence-tested against this one.
 """
 from __future__ import annotations
 
@@ -183,14 +195,21 @@ class Simulator:
             self.control_messages += sample.cost_hops
             pool = sample.steps
         else:
-            sample = self.sampler.sample(alive_steps, beta, exclude=None)
+            # The paper's worker-centric check samples β *other* workers
+            # (§6.4), so the deciding node is excluded from the pool.  Under
+            # churn ``alive_steps`` is compressed, so remap the node's index
+            # through the alive mask.
+            self_index = node if all_alive else \
+                int(np.count_nonzero(self.alive[:node]))
+            sample = self.sampler.sample(alive_steps, beta,
+                                         exclude=self_index)
             # centralised: counting process at the server — no extra messages
             pool = sample.steps
         if pool.size == 0:
             return True
         return bool(np.all(self.steps[node] - pool <= self.barrier.staleness))
 
-    def _try_advance(self, node: int) -> None:
+    def _try_advance(self, node: int, from_poll: bool = False) -> None:
         """Barrier check; on success begin the node's next step."""
         if not self.alive[node]:
             return
@@ -199,14 +218,17 @@ class Simulator:
             self._pull_model(node)
             self._push(self.now + self._step_duration(node), _FINISH, node)
         else:
-            if node not in self._waiting:
+            newly_waiting = node not in self._waiting
+            if newly_waiting:
                 self._waiting[node] = int(self.steps[node])
-            if not self._full_view:
-                # sampled barriers re-draw a fresh sample after a poll interval
+            if not self._full_view and (newly_waiting or from_poll):
+                # sampled barriers re-draw a fresh sample after a poll
+                # interval; wake-triggered re-checks of an already-waiting
+                # node must not spawn a second poll chain
                 self._push(self.now + self.cfg.poll_interval, _POLL, node)
 
     def _wake_waiters(self) -> None:
-        """Deterministic barriers re-check when the global min step moves."""
+        """Re-check all waiters (global-min movement or membership change)."""
         if not self._waiting:
             return
         for node in list(self._waiting):
@@ -237,11 +259,19 @@ class Simulator:
         alive_ids = np.flatnonzero(self.alive)
         if len(alive_ids) > 2:
             node = int(self.rng.choice(alive_ids))
+            was_min = int(self.steps[node]) == int(self.steps[alive_ids].min())
             self.alive[node] = False
             if self.overlay is not None:
                 self.overlay.leave(self.node_ids[node])
             self._waiting.pop(node, None)
-            self._wake_waiters() if self._full_view else None
+            # Full-view waiters have no poll chain — they are only woken by
+            # the global min *moving* on a finish, which a departed node's
+            # step never does, so a leave must wake them or they can block
+            # forever.  Sampled waiters re-poll on their own; the eager
+            # re-check when the departed node was the global minimum just
+            # spares them the remaining poll interval.
+            if self._full_view or was_min:
+                self._wake_waiters()
         if self.cfg.churn_leave_rate > 0:
             self._push(self.now + self.rng.exponential(
                 1.0 / self.cfg.churn_leave_rate), _LEAVE)
@@ -280,7 +310,7 @@ class Simulator:
                 self._on_finish(node)
             elif kind == _POLL:
                 if node in self._waiting:
-                    self._try_advance(node)
+                    self._try_advance(node, from_poll=True)
             elif kind == _MEASURE:
                 self._on_measure()
             elif kind == _LEAVE:

@@ -1,0 +1,374 @@
+"""Vectorized batched sweep engine — the evaluation layer's fast path.
+
+The paper's headline results (Figs 1–3) are *sweeps*: barrier policy ×
+straggler fraction × slowness × system size × seed.  The discrete-event
+:class:`~repro.core.simulator.Simulator` processes one Python event at a
+time, so a full scenario matrix costs minutes; this module advances **all P
+nodes and a batch of B configurations simultaneously** with NumPy array ops
+on a fixed time grid, cutting sweep wall-clock by an order of magnitude
+while keeping the event-driven simulator as the semantic reference
+(``tests/test_vector_sim.py`` holds the distribution-level equivalence
+test).
+
+Sweep API
+---------
+:func:`run_sweep` is the entry point::
+
+    from repro.core.simulator import SimConfig
+    from repro.core.vector_sim import run_sweep
+
+    configs = [SimConfig(barrier=make_barrier(b), straggler_frac=f, seed=s)
+               for b in ("bsp", "pbsp") for f in (0.0, 0.1) for s in range(4)]
+    results = run_sweep(configs)          # -> list[SimResult], input order
+
+Configurations are grouped by structural key (``n_nodes``, ``dim``,
+``batch``, ``duration``, ``measure_interval``, ``poll_interval``); each
+group runs as one batched :class:`VectorSimulator`, everything else (seed,
+learning rate, straggler settings, barrier policy, noise, distributed
+sampling) is batched per-row.  Configs the vector engine cannot express
+(churn) transparently fall back to the event-driven reference.
+
+Simulation model (one grid tick of width ``dt``)
+------------------------------------------------
+1. **Finish** — nodes whose busy-until clock expired push their update
+   (gradient of the linear task at their *pulled* model — SGD updates
+   commute within a tick because each depends only on the puller's stale
+   view), advance their step counter, and become *deciding*.
+2. **Decide** — all deciding nodes evaluate their barrier predicate in one
+   masked batch: ASP rows always pass; full-view rows (BSP/SSP) pass iff
+   ``step − min(steps) ≤ staleness``; sampled rows (pBSP/pSSP) draw β
+   peers **without replacement, excluding themselves** (the worker-centric
+   semantics of paper §6.4, matching
+   ``sample_steps_jax(..., exclude_self=True)``) and pass iff no sampled
+   peer lags more than ``staleness`` behind.
+3. **Start** — passing nodes pull the server model and draw their next
+   step duration, anchored at their *continuous* ready time (not the grid
+   tick), so grid quantisation does not systematically slow progress.
+   Blocked sampled rows re-poll after ``poll_interval`` exactly like the
+   event simulator; blocked full-view rows re-check every tick (the grid
+   analogue of the event simulator's min-moved wakeup).
+4. **Measure** — error/update traces are recorded on the same
+   ``measure_interval`` grid as :class:`SimResult` expects.
+
+Determinism: a sweep is deterministic given the config list (the batch
+shares one dynamics RNG seeded from all row seeds), and each row's *static*
+draw — ground-truth model, node speeds, straggler assignment — replays the
+event simulator's per-seed init stream exactly.  Per-row dynamics noise
+(minibatches, step-duration jitter, β-samples) is shared across the batch,
+so a row's trajectory matches the event simulator at the distribution level
+(mean progress, lag pmf shape, final error), not sample-path level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.barriers import ASP
+from repro.core.simulator import SimConfig, SimResult, run_simulation
+
+__all__ = ["VectorSimulator", "run_sweep"]
+
+_EPS = 1e-9
+
+
+def _group_key(cfg: SimConfig) -> Tuple:
+    """Structural fields that must agree within one vectorized batch."""
+    return (cfg.n_nodes, cfg.dim, cfg.batch, float(cfg.duration),
+            float(cfg.measure_interval), float(cfg.poll_interval))
+
+
+def _vectorizable(cfg: SimConfig) -> bool:
+    """Churn needs the event-driven membership machinery — fall back."""
+    return cfg.churn_join_rate == 0.0 and cfg.churn_leave_rate == 0.0
+
+
+class VectorSimulator:
+    """Batched fixed-grid simulator over B same-shape configurations."""
+
+    def __init__(self, configs: Sequence[SimConfig],
+                 dt: Optional[float] = None):
+        if not configs:
+            raise ValueError("empty config batch")
+        keys = {_group_key(c) for c in configs}
+        if len(keys) > 1:
+            raise ValueError(f"heterogeneous batch: {keys} "
+                             "(use run_sweep, which groups automatically)")
+        for c in configs:
+            if not _vectorizable(c):
+                raise ValueError("churn is not vectorizable; use run_sweep "
+                                 "(falls back to the event-driven simulator)")
+        self.configs = list(configs)
+        B = len(configs)
+        c0 = configs[0]
+        P, d = c0.n_nodes, c0.dim
+        self.B, self.P, self.d, self.batch = B, P, d, c0.batch
+        self.duration = float(c0.duration)
+        self.poll_interval = float(c0.poll_interval)
+        self.measure_interval = float(c0.measure_interval)
+        self.dt = float(dt) if dt is not None else self.poll_interval
+        if self.dt > self.poll_interval + 1e-12:
+            # a node can finish/decide at most once per tick, so a coarse
+            # grid silently caps throughput and skips poll attempts —
+            # results would be wrong, not just coarse
+            raise ValueError(
+                f"dt={self.dt} must not exceed poll_interval="
+                f"{self.poll_interval}")
+
+        # ---- per-row static state: replay the event simulator's init ---- #
+        self.w_true = np.empty((B, d))
+        self.compute_time = np.empty((B, P))
+        self.lr = np.empty(B)
+        self.noise_std = np.empty(B)
+        self.staleness = np.zeros(B, dtype=np.int64)
+        self.beta = np.full(B, -1, dtype=np.int64)    # -1 = full view
+        self.is_asp = np.zeros(B, dtype=bool)
+        self.distributed = np.zeros(B, dtype=bool)
+        for b, cfg in enumerate(configs):
+            rng = np.random.default_rng(cfg.seed)
+            self.w_true[b] = rng.normal(size=d) / np.sqrt(d)
+            speed = 1.0 + cfg.compute_jitter * (rng.random(P) - 0.5)
+            n_slow = int(round(cfg.straggler_frac * P))
+            slow_ids = rng.choice(P, size=n_slow, replace=False)
+            speed[slow_ids] *= cfg.straggler_slowdown
+            self.compute_time[b] = cfg.base_compute * speed
+            self.lr[b] = cfg.lr if cfg.lr is not None else 0.5 / P
+            self.noise_std[b] = cfg.noise_std
+            bar = cfg.barrier
+            self.staleness[b] = bar.staleness
+            self.is_asp[b] = isinstance(bar, ASP)
+            if not self.is_asp[b] and bar.sample_size is not None:
+                self.beta[b] = bar.sample_size
+            self.distributed[b] = cfg.distributed_sampling
+        self.full_view = (self.beta < 0) & ~self.is_asp
+        self.sampled = self.beta >= 0
+        self.w_true_norm = np.linalg.norm(self.w_true, axis=1)
+
+        # one dynamics stream for the whole batch, seeded from all rows;
+        # SFC64 because bulk draws are the engine's hottest path
+        self.rng = np.random.Generator(np.random.SFC64(
+            np.random.SeedSequence([int(c.seed) for c in configs]
+                                   + [B, P, d])))
+
+        # ---- dynamic state ---------------------------------------------- #
+        self.w = np.zeros((B, d))
+        self.pulled = np.zeros((B, P, d))
+        self.steps = np.zeros((B, P), dtype=np.int64)
+        self.computing = np.ones((B, P), dtype=bool)
+        #: finish time while computing / next barrier-check time while not
+        self.event_time = self.compute_time * (0.5 + self.rng.random((B, P)))
+        #: continuous anchor of the node's current decision attempt
+        self.ready = self.event_time.copy()
+        self.blocked = np.zeros((B, P), dtype=bool)
+        self.total_updates = np.zeros(B, dtype=np.int64)
+        self.control_messages = np.zeros(B, dtype=np.int64)
+        # per-draw control cost of the structured overlay (β lookups of
+        # O(log N) hops + β step queries), matching OverlaySampler
+        self._hops_per_peer = max(1, int(np.ceil(np.log2(max(P, 2))))) + 1
+
+        self.m_times = np.arange(0.0, self.duration + 1e-9,
+                                 self.measure_interval)
+        self._trace_err: List[np.ndarray] = []
+        self._trace_upd: List[np.ndarray] = []
+
+    # ------------------------------------------------------------------ #
+    def _measure(self) -> None:
+        err = (np.linalg.norm(self.w - self.w_true, axis=1)
+               / self.w_true_norm)
+        self._trace_err.append(err)
+        self._trace_upd.append(self.total_updates.copy())
+
+    def _apply_updates(self, b_idx: np.ndarray, p_idx: np.ndarray) -> None:
+        """Batched SGD pushes for every node that finished this tick.
+
+        The residual is computed directly as X·(w_pulled − w*) − σ·ε, which
+        folds the label draw into one projection; minibatch draws are f32
+        (the simulation's noise floor is orders of magnitude above f32 eps).
+        """
+        K = b_idx.size
+        X = self.rng.standard_normal((K, self.batch, self.d),
+                                     dtype=np.float32)
+        diff = (self.pulled[b_idx, p_idx]
+                - self.w_true[b_idx]).astype(np.float32)
+        eps = self.rng.standard_normal((K, self.batch), dtype=np.float32)
+        resid = (np.einsum("kbd,kd->kb", X, diff)
+                 - self.noise_std[b_idx, None].astype(np.float32) * eps)
+        grads = np.einsum("kb,kbd->kd", resid, X) / self.batch
+        # updates within a tick commute: each gradient depends only on the
+        # node's pulled (stale) model, so the server sum is order-free.
+        # b_idx comes from np.nonzero and is therefore sorted, so the
+        # per-row sums are contiguous segments (reduceat ≫ np.add.at).
+        rows, starts = np.unique(b_idx, return_index=True)
+        self.w[rows] -= (self.lr[rows, None]
+                         * np.add.reduceat(grads.astype(np.float64),
+                                           starts, axis=0))
+        self.total_updates += np.bincount(b_idx, minlength=self.B)
+
+    def _sample_peers(self, bb: np.ndarray, pp: np.ndarray,
+                      k: int) -> np.ndarray:
+        """i64[K, k] peer indices: uniform without replacement, self excluded.
+
+        For k ≪ P this is vectorized rejection sampling (draw k iid indices
+        over the P−1 non-self slots, redraw rows with within-row collisions)
+        — O(K·k) versus the O(K·P) of a full argpartition, which remains the
+        fallback for dense samples.
+        """
+        K = bb.size
+        if 3 * k >= self.P:
+            scores = self.rng.random((K, self.P))
+            scores[np.arange(K), pp] = 2.0
+            return np.argpartition(scores, k - 1, axis=1)[:, :k]
+        draw = self.rng.integers(0, self.P - 1, size=(K, k))
+        draw += draw >= pp[:, None]          # skip over the self slot
+        if k > 1:
+            for _ in range(16):
+                srt = np.sort(draw, axis=1)
+                dup = (srt[:, 1:] == srt[:, :-1]).any(axis=1)
+                if not dup.any():
+                    break
+                rows = np.flatnonzero(dup)
+                redo = self.rng.integers(0, self.P - 1, size=(rows.size, k))
+                redo += redo >= pp[rows, None]
+                draw[rows] = redo
+        return draw
+
+    def _barrier_pass(self, cand: np.ndarray) -> np.ndarray:
+        """Masked barrier predicates; bool[B, P], valid where ``cand``."""
+        passed = np.zeros((self.B, self.P), dtype=bool)
+        passed[self.is_asp] = True
+        if self.full_view.any():
+            fv_steps = self.steps[self.full_view]
+            lag = fv_steps - fv_steps.min(axis=1, keepdims=True)
+            passed[self.full_view] = \
+                lag <= self.staleness[self.full_view, None]
+        sm = cand & self.sampled[:, None]
+        b_idx, p_idx = np.nonzero(sm)
+        if b_idx.size:
+            betas = self.beta[b_idx]
+            for beta in np.unique(betas):
+                pick = betas == beta
+                bb, pp = b_idx[pick], p_idx[pick]
+                k = min(int(beta), self.P - 1)
+                if k <= 0:
+                    passed[bb, pp] = True   # S = ∅ degenerates to ASP
+                    continue
+                take = self._sample_peers(bb, pp, k)
+                peer_steps = self.steps[bb[:, None], take]
+                my = self.steps[bb, pp]
+                passed[bb, pp] = np.all(
+                    my[:, None] - peer_steps
+                    <= self.staleness[bb][:, None], axis=1)
+                dist = self.distributed[bb]
+                if dist.any():
+                    self.control_messages += (
+                        k * self._hops_per_peer
+                        * np.bincount(bb[dist], minlength=self.B))
+        return passed
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> List[SimResult]:
+        dt = self.dt
+        ticks = np.arange(dt, self.duration + 1e-9, dt)
+        if ticks.size == 0 or ticks[-1] < self.duration - 1e-9:
+            ticks = np.append(ticks, self.duration)
+        self._measure()                      # t = 0 trace point
+        m_next = 1
+
+        for t in ticks:
+            # 1. finishes: push updates, advance steps, become "deciding"
+            fin = self.computing & (self.event_time <= t + _EPS)
+            # latest finish per row this tick: a full-view waiter unblocked
+            # this tick was gated by (at most) that finish, so anchoring
+            # there instead of the tick boundary removes the systematic
+            # dt/2-per-round quantisation loss for BSP/SSP
+            row_unblock = np.full(self.B, t)
+            if fin.any():
+                b_idx, p_idx = np.nonzero(fin)
+                rows, starts = np.unique(b_idx, return_index=True)
+                row_last = np.maximum.reduceat(self.event_time[fin], starts)
+                row_unblock[rows] = np.minimum(row_last, t)
+                self._apply_updates(b_idx, p_idx)
+                self.steps[fin] += 1
+                self.computing[fin] = False
+                self.ready[fin] = self.event_time[fin]  # true finish time
+                self.blocked[fin] = False
+
+            # 2. barrier decisions for every due deciding node
+            cand = ~self.computing & (self.event_time <= t + _EPS)
+            if cand.any():
+                passed = self._barrier_pass(cand)
+                start = cand & passed
+                if start.any():
+                    b_idx, p_idx = np.nonzero(start)
+                    # anchor at the continuous ready time; a full-view node
+                    # unblocked by a peer's finish starts at that finish
+                    # (the grid analogue of the event simulator's
+                    # min-moved wakeup)
+                    t0 = np.where(self.blocked[start]
+                                  & self.full_view[b_idx],
+                                  np.maximum(row_unblock[b_idx],
+                                             self.ready[start]),
+                                  self.ready[start])
+                    self.pulled[b_idx, p_idx] = self.w[b_idx]
+                    dur = (self.compute_time[b_idx, p_idx]
+                           * (0.5 + self.rng.random(b_idx.size)))
+                    self.event_time[start] = t0 + dur
+                    self.computing[start] = True
+                    self.blocked[start] = False
+                fail = cand & ~passed
+                if fail.any():
+                    self.blocked[fail] = True
+                    # sampled rows re-poll on the poll cadence; full-view
+                    # rows stay due and re-check next tick
+                    sm_fail = fail & self.sampled[:, None]
+                    self.ready[sm_fail] += self.poll_interval
+                    self.event_time[sm_fail] = self.ready[sm_fail]
+
+            # 3. error / server-update traces on the measurement grid
+            while m_next < self.m_times.size and \
+                    self.m_times[m_next] <= t + _EPS:
+                self._measure()
+                m_next += 1
+
+        errs = np.stack(self._trace_err, axis=1)        # [B, M]
+        upds = np.stack(self._trace_upd, axis=1)        # [B, M]
+        final_err = (np.linalg.norm(self.w - self.w_true, axis=1)
+                     / self.w_true_norm)
+        out = []
+        for b in range(self.B):
+            out.append(SimResult(
+                steps=self.steps[b].copy(),
+                times=self.m_times[: errs.shape[1]].copy(),
+                errors=errs[b].copy(),
+                server_updates=upds[b].copy(),
+                control_messages=int(self.control_messages[b]),
+                total_updates=int(self.total_updates[b]),
+                mean_progress=float(self.steps[b].mean()),
+                final_error=float(final_err[b]),
+            ))
+        return out
+
+
+# --------------------------------------------------------------------------- #
+def run_sweep(configs: Sequence[SimConfig], *,
+              dt: Optional[float] = None) -> List[SimResult]:
+    """Run a batch of simulations, vectorizing wherever possible.
+
+    Configs are grouped by structural shape and each group is advanced as
+    one :class:`VectorSimulator`; configs the vector engine cannot express
+    (churn) run on the event-driven reference.  Results come back in input
+    order.
+    """
+    results: List[Optional[SimResult]] = [None] * len(configs)
+    groups: Dict[Tuple, List[int]] = {}
+    for i, cfg in enumerate(configs):
+        if _vectorizable(cfg):
+            groups.setdefault(_group_key(cfg), []).append(i)
+        else:
+            results[i] = run_simulation(cfg)
+    for idx in groups.values():
+        batch = VectorSimulator([configs[i] for i in idx], dt=dt).run()
+        for i, res in zip(idx, batch):
+            results[i] = res
+    return results  # type: ignore[return-value]

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+``hypothesis`` is an optional test-only dependency (see ``pyproject.toml``'s
+``[test]`` extra); the whole module is skipped when it is absent so that the
+tier-1 suite collects cleanly on minimal environments.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.barriers import ASP, BSP, PBSP, PSSP, SSP
 from repro.core.bounds import mean_lag_bound, psp_lag_pmf, variance_lag_bound

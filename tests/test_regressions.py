@@ -1,0 +1,135 @@
+"""Regression tests for simulator barrier-semantics bugfixes.
+
+1. **Self-sampling** — a worker must never draw *itself* into its β-sample
+   (paper §6.4 samples β *other* workers); with self-sampling a worker
+   trivially satisfies the barrier and drifts ahead.
+2. **Churn wake** — when a departed node was the global step minimum, its
+   frozen step must not keep blocking waiters (full-view SSP waiters were
+   only woken by the min *moving*, which a dead node's step never does).
+"""
+import numpy as np
+import pytest
+
+from repro.core.barriers import PBSP, PSSP, SSP, make_barrier
+from repro.core.sampling import CentralSampler
+from repro.core.simulator import SimConfig, Simulator, run_simulation
+
+
+class TestSelfSamplingExcluded:
+    def test_pbsp_beta1_two_nodes_is_bsp(self):
+        """β=1, P=2 makes self-sampling deterministic: the only valid
+        sample is the *other* node, so pBSP(β=1) must behave exactly like
+        BSP — lockstep, spread ≤ 1.  With the self-sampling bug the leader
+        passes ~every other poll and drifts unboundedly ahead."""
+        r = run_simulation(SimConfig(
+            n_nodes=2, duration=10.0, dim=8, seed=0,
+            barrier=make_barrier("pbsp", sample_size=1)))
+        assert int(r.steps.max() - r.steps.min()) <= 1
+
+    def test_view_never_contains_self(self):
+        steps = np.arange(10) * 100          # distinct markers
+        bar = PBSP(sample_size=4)
+        rng = np.random.default_rng(0)
+        for self_index in (0, 3, 9):
+            for _ in range(50):
+                view = bar.view(steps, rng, self_index=self_index)
+                assert steps[self_index] not in view
+
+    def test_can_pass_excludes_self(self):
+        # my own step is the only one within staleness: with self excluded
+        # the sampled peer is always the straggler, so the check must fail
+        bar = PBSP(sample_size=1)
+        rng = np.random.default_rng(0)
+        for _ in range(25):
+            assert not bar.can_pass(10, [10, 0], rng, self_index=0)
+
+    def test_full_view_keeps_whole_vector(self):
+        # classic barriers still evaluate the full state (self is harmless)
+        bar = SSP(staleness=4)
+        view = bar.view([1, 2, 3], np.random.default_rng(0), self_index=1)
+        assert view.tolist() == [1, 2, 3]
+
+    def test_central_sampler_exclude(self):
+        s = CentralSampler(seed=0)
+        steps = np.arange(8) * 10
+        for _ in range(30):
+            out = s.sample(steps, beta=3, exclude=5)
+            assert 50 not in out.steps
+            assert 5 not in out.worker_ids
+
+    def test_simulator_centralised_path_excludes_self(self, monkeypatch):
+        """The simulator must pass the deciding node's index through to the
+        sampler on the centralised path."""
+        sim = Simulator(SimConfig(n_nodes=4, dim=4, seed=0,
+                                  barrier=make_barrier("pbsp",
+                                                       sample_size=2)))
+        seen = []
+        orig = sim.sampler.sample
+
+        def spy(steps, beta, exclude=None):
+            seen.append(exclude)
+            return orig(steps, beta, exclude=exclude)
+
+        monkeypatch.setattr(sim.sampler, "sample", spy)
+        sim._can_pass(2)
+        assert seen == [2]
+
+
+class _LeaveRig:
+    """Deterministic stand-in for the simulator RNG inside ``_on_leave``."""
+
+    def __init__(self, leave_node):
+        self._leave_node = leave_node
+
+    def choice(self, ids):
+        return self._leave_node
+
+    def exponential(self, scale):
+        return 1.0
+
+    def random(self, *a, **kw):
+        return 0.5
+
+
+class TestChurnWake:
+    def _blocked_sim(self, barrier):
+        cfg = SimConfig(n_nodes=4, dim=4, seed=0, barrier=barrier,
+                        churn_leave_rate=0.1)
+        sim = Simulator(cfg)
+        sim.steps = np.array([0, 10, 10, 10], dtype=np.int64)
+        sim._waiting = {1: 10, 2: 10, 3: 10}
+        sim.rng = _LeaveRig(leave_node=0)
+        return sim
+
+    def test_leave_of_straggler_wakes_full_view_waiters(self):
+        sim = self._blocked_sim(SSP(staleness=4))
+        assert sim._full_view
+        sim._on_leave()
+        assert not sim.alive[0]
+        assert sim._waiting == {}        # all three waiters released
+
+    def test_leave_of_straggler_wakes_sampled_waiters(self):
+        """Pre-fix only full-view barriers re-checked on leave; a departed
+        global-minimum straggler must also wake sampled-barrier waiters."""
+        sim = self._blocked_sim(PSSP(staleness=4, sample_size=2))
+        assert not sim._full_view
+        sim._on_leave()
+        assert not sim.alive[0]
+        assert sim._waiting == {}
+
+    def test_leave_of_non_minimum_keeps_sampled_waiters_polling(self):
+        sim = self._blocked_sim(PSSP(staleness=4, sample_size=2))
+        sim.steps = np.array([0, 10, 10, 10], dtype=np.int64)
+        sim.rng = _LeaveRig(leave_node=2)   # not the straggler
+        sim._waiting = {1: 10, 3: 10}
+        sim._on_leave()
+        # blocked by the still-alive straggler: nothing released eagerly
+        assert 1 in sim._waiting and 3 in sim._waiting
+
+    def test_churn_run_stays_live(self):
+        r = run_simulation(SimConfig(
+            n_nodes=16, duration=8.0, dim=8, seed=1,
+            barrier=SSP(staleness=2),
+            churn_leave_rate=0.5, churn_join_rate=0.5))
+        assert r.mean_progress > 0
+        assert np.isfinite(r.final_error)

@@ -39,6 +39,7 @@ class TestFig1:
         for name, r in five.items():
             assert r.final_error < 0.1, (name, r.final_error)
 
+    @pytest.mark.slow
     def test_sample_size_sweep_tightens(self):
         # Fig 1c: larger sample size → tighter step distribution
         spreads = []
@@ -55,7 +56,10 @@ class TestFig1:
             > five["bsp"].total_updates
 
 
+@pytest.mark.slow
 class TestFig2Stragglers:
+    """Event-driven straggler sweeps — the vectorized engine covers these
+    sweep paths in the CI fast lane (see tests/test_vector_sim.py)."""
     def test_bsp_ssp_sensitive_probabilistic_robust(self):
         base, frac = {}, {}
         for name in ("bsp", "ssp", "asp", "pbsp"):

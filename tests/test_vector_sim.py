@@ -1,0 +1,153 @@
+"""Vectorized sweep engine: equivalence with the event-driven reference,
+sweep API semantics, determinism, grouping and fallback behaviour."""
+import numpy as np
+import pytest
+
+from repro.core.barriers import make_barrier
+from repro.core.engines import P2PEngine, ParameterServerEngine
+from repro.core.simulator import SimConfig, run_simulation
+from repro.core.vector_sim import VectorSimulator, run_sweep
+
+FIVE = ("bsp", "ssp", "asp", "pbsp", "pssp")
+
+
+def _cfg(name, **kw):
+    defaults = dict(n_nodes=64, duration=10.0, dim=16, seed=7)
+    defaults.update(kw)
+    return SimConfig(barrier=make_barrier(name, staleness=4, sample_size=2),
+                     **defaults)
+
+
+@pytest.fixture(scope="module")
+def matched():
+    cfgs = [_cfg(n) for n in FIVE]
+    return ([run_simulation(c) for c in cfgs], run_sweep(cfgs))
+
+
+class TestEquivalence:
+    """Distribution-level match on matched seeds (acceptance criterion)."""
+
+    def test_mean_progress_within_tolerance(self, matched):
+        event, vector = matched
+        for name, e, v in zip(FIVE, event, vector):
+            assert abs(v.mean_progress - e.mean_progress) <= \
+                0.10 * e.mean_progress + 1.0, (name, e.mean_progress,
+                                               v.mean_progress)
+
+    def test_final_error_within_tolerance(self, matched):
+        event, vector = matched
+        for name, e, v in zip(FIVE, event, vector):
+            assert abs(v.final_error - e.final_error) < 0.05, name
+
+    def test_lag_pmf_shape(self, matched):
+        """Same qualitative lag structure: tight for (p)BSP, bounded for
+        (p)SSP, heavy-tailed for ASP — and close pmf mass on the head."""
+        event, vector = matched
+        spreads_e = {n: int(r.steps.max() - r.steps.min())
+                     for n, r in zip(FIVE, event)}
+        spreads_v = {n: int(r.steps.max() - r.steps.min())
+                     for n, r in zip(FIVE, vector)}
+        for s in (spreads_e, spreads_v):
+            assert s["bsp"] <= 1
+            assert s["ssp"] <= 5
+            assert s["asp"] > s["pssp"] >= s["pbsp"]
+        # mean lag within tolerance (the pmf head itself is phase-sensitive
+        # at the horizon cutoff for lockstep barriers)
+        for name, e, v in zip(FIVE, event, vector):
+            lag_e = float((e.steps.max() - e.steps).mean())
+            lag_v = float((v.steps.max() - v.steps).mean())
+            assert abs(lag_e - lag_v) <= 0.15 * lag_e + 1.0, \
+                (name, lag_e, lag_v)
+
+    def test_update_counts_match(self, matched):
+        event, vector = matched
+        for name, e, v in zip(FIVE, event, vector):
+            assert abs(v.total_updates - e.total_updates) <= \
+                0.10 * e.total_updates + 16, name
+
+
+class TestSweepAPI:
+    def test_results_in_input_order_across_groups(self):
+        # interleave two structural groups; order must be preserved
+        cfgs = [_cfg("pbsp", n_nodes=16), _cfg("bsp", n_nodes=32),
+                _cfg("asp", n_nodes=16), _cfg("ssp", n_nodes=32)]
+        results = run_sweep(cfgs)
+        assert [len(r.steps) for r in results] == [16, 32, 16, 32]
+        assert all(r.mean_progress > 0 for r in results)
+
+    def test_determinism(self):
+        cfgs = [_cfg(n, duration=5.0) for n in FIVE]
+        r1, r2 = run_sweep(cfgs), run_sweep(cfgs)
+        for a, b in zip(r1, r2):
+            assert np.array_equal(a.steps, b.steps)
+            assert np.array_equal(a.errors, b.errors)
+            assert a.total_updates == b.total_updates
+
+    def test_churn_falls_back_to_event_sim(self):
+        cfgs = [_cfg("pbsp", duration=5.0),
+                _cfg("pbsp", duration=5.0, churn_leave_rate=0.5,
+                     churn_join_rate=0.5)]
+        results = run_sweep(cfgs)
+        assert all(r.mean_progress > 0 for r in results)
+        assert all(np.isfinite(r.final_error) for r in results)
+
+    def test_heterogeneous_batch_rejected_directly(self):
+        with pytest.raises(ValueError):
+            VectorSimulator([_cfg("bsp", n_nodes=8),
+                             _cfg("bsp", n_nodes=16)])
+
+    def test_coarse_grid_rejected(self):
+        # dt > poll_interval would silently cap throughput at one
+        # step/node/tick and skip poll attempts — must be refused
+        cfg = _cfg("pbsp", duration=2.0)
+        with pytest.raises(ValueError):
+            VectorSimulator([cfg], dt=10 * cfg.poll_interval)
+        run_sweep([cfg], dt=0.5 * cfg.poll_interval)   # finer is fine
+
+    def test_trace_grid_matches_event_sim(self):
+        cfg = _cfg("asp", duration=5.0)
+        v = run_sweep([cfg])[0]
+        e = run_simulation(cfg)
+        assert np.allclose(v.times, e.times)
+        assert v.errors.shape == e.errors.shape
+        assert v.server_updates[-1] == v.total_updates
+
+    def test_distributed_sampling_charges_control_plane(self):
+        central = run_sweep([_cfg("pssp", duration=5.0)])[0]
+        dist = run_sweep([_cfg("pssp", duration=5.0,
+                               distributed_sampling=True)])[0]
+        assert central.control_messages == 0
+        assert dist.control_messages > 0
+
+    def test_lr_stability_default(self):
+        # default lr = 0.5/P keeps the quadratic task stable at any P
+        for n in (8, 128):
+            r = run_sweep([_cfg("asp", n_nodes=n, duration=5.0)])[0]
+            assert r.final_error < 1.0
+
+
+class TestEngineSweep:
+    def test_ps_engine_run_sweep(self):
+        eng = ParameterServerEngine("pssp")
+        res = eng.run_sweep(
+            [{"straggler_frac": f} for f in (0.0, 0.1)],
+            n_nodes=32, duration=4.0, dim=8)
+        assert len(res) == 2
+        assert all(r.mean_progress > 0 for r in res)
+
+    def test_engine_sweep_barrier_override(self):
+        eng = ParameterServerEngine("pssp")
+        res = eng.run_sweep([{"barrier": "bsp"}, {"barrier": "asp"}],
+                            n_nodes=32, duration=4.0, dim=8)
+        assert int(res[0].steps.max() - res[0].steps.min()) <= 1
+        assert res[1].mean_progress > res[0].mean_progress
+
+    def test_engine_sweep_rejects_invalid_combination(self):
+        with pytest.raises(ValueError):
+            P2PEngine("pbsp").run_sweep([{"barrier": "bsp"}],
+                                        n_nodes=16, duration=2.0, dim=8)
+
+    def test_p2p_engine_sweep_pays_hops(self):
+        res = P2PEngine("pbsp").run_sweep([{}], n_nodes=32, duration=4.0,
+                                          dim=8)
+        assert res[0].control_messages > 0
