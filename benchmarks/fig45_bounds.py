@@ -21,7 +21,8 @@ BETAS = (1, 5, 100)
 R, T = 4, 10_000
 
 
-def empirical_mean_lags(full: bool = False) -> Dict[int, float]:
+def empirical_mean_lags(full: bool = False,
+                        backend: str = "numpy") -> Dict[int, float]:
     """Simulated mean lag for each β (one vectorized pSSP sweep)."""
     n, dur = (1000, 40.0) if full else (200, 10.0)
     cfgs = [SimConfig(n_nodes=n, duration=dur, dim=32, seed=0,
@@ -29,16 +30,16 @@ def empirical_mean_lags(full: bool = False) -> Dict[int, float]:
                                            sample_size=beta))
             for beta in BETAS]
     out = {}
-    for beta, r in zip(BETAS, run_sweep(cfgs)):
+    for beta, r in zip(BETAS, run_sweep(cfgs, backend=backend)):
         out[beta] = float((r.steps.max() - r.steps).mean())
     return out
 
 
-def fig4_mean_bound(full: bool = False) -> Dict:
+def fig4_mean_bound(full: bool = False, backend: str = "numpy") -> Dict:
     """x-axis is a = F(r)^β (the paper's Fig-4 axis; the discontinuities it
     discusses live at a=0 and a=1); per curve F(r) = a^{1/β}."""
     grid = np.linspace(0.02, 0.98, 49)
-    lags = empirical_mean_lags(full)
+    lags = empirical_mean_lags(full, backend)
     out = {}
     for beta in BETAS:
         out[f"beta={beta}"] = {

@@ -9,11 +9,18 @@ Every figure is a *sweep* — barrier × scenario parameter — so all of them
 are routed through the vectorized batch engine
 (:func:`repro.core.vector_sim.run_sweep`): one call advances every scenario
 of a figure simultaneously instead of looping the event-driven simulator.
+Each figure accepts ``backend="numpy"|"jax"`` and forwards it to
+:func:`run_sweep`; :func:`fig1_error_bands` adds mean ± std bands over
+seeds (one batched call — seeds are just extra rows).  Bands default to
+the numpy backend, which decorrelates rows via finisher-ordered stream
+consumption (the jax backend shares dynamics draws across rows: exact
+per-row marginals, but cross-row correlation would understate seed-to-seed
+spread).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, Sequence
 
 import numpy as np
 
@@ -37,20 +44,21 @@ def _bar(name: str, c: PSPLinearConfig):
 
 
 def _cfg(name: str, c: PSPLinearConfig, **kw) -> SimConfig:
+    kw.setdefault("seed", c.seed)
     return SimConfig(n_nodes=c.n_nodes, duration=c.duration, dim=c.dim,
-                     barrier=_bar(name, c), seed=c.seed, **kw)
+                     barrier=_bar(name, c), **kw)
 
 
-@functools.lru_cache(maxsize=2)
-def _fig1_sweep(full: bool):
+@functools.lru_cache(maxsize=4)
+def _fig1_sweep(full: bool, backend: str = "numpy"):
     """Figs 1a/1d/1e share the same five runs — sweep once per scale."""
     c = _scale(full)
-    return c, run_sweep([_cfg(name, c) for name in FIVE])
+    return c, run_sweep([_cfg(name, c) for name in FIVE], backend=backend)
 
 
-def fig1_progress(full: bool = False) -> Dict:
+def fig1_progress(full: bool = False, backend: str = "numpy") -> Dict:
     """Fig 1a/1b: final step distribution of the five strategies."""
-    c, results = _fig1_sweep(full)
+    c, results = _fig1_sweep(full, backend)
     out = {}
     for name, r in zip(FIVE, results):
         out[name] = {"mean": float(r.mean_progress),
@@ -60,7 +68,7 @@ def fig1_progress(full: bool = False) -> Dict:
     return out
 
 
-def fig1_sample_sweep(full: bool = False) -> Dict:
+def fig1_sample_sweep(full: bool = False, backend: str = "numpy") -> Dict:
     """Fig 1c: pBSP parameterised by sample size 0 → 64."""
     c = _scale(full)
     betas = (0, 1, 2, 4, 16, 64)
@@ -70,15 +78,15 @@ def fig1_sample_sweep(full: bool = False) -> Dict:
                       seed=c.seed)
             for beta in betas]
     out = {}
-    for beta, r in zip(betas, run_sweep(cfgs)):
+    for beta, r in zip(betas, run_sweep(cfgs, backend=backend)):
         out[f"beta={beta}"] = {"mean": float(r.mean_progress),
                                "spread": int(r.steps.max() - r.steps.min())}
     return out
 
 
-def fig1_error(full: bool = False) -> Dict:
+def fig1_error(full: bool = False, backend: str = "numpy") -> Dict:
     """Fig 1d: normalized L2 model error over time."""
-    _, results = _fig1_sweep(full)
+    _, results = _fig1_sweep(full, backend)
     out = {}
     for name, r in zip(FIVE, results):
         out[name] = {"times": r.times.tolist(),
@@ -87,9 +95,9 @@ def fig1_error(full: bool = False) -> Dict:
     return out
 
 
-def fig1_messages(full: bool = False) -> Dict:
+def fig1_messages(full: bool = False, backend: str = "numpy") -> Dict:
     """Fig 1e: cumulative updates received by the server."""
-    _, results = _fig1_sweep(full)
+    _, results = _fig1_sweep(full, backend)
     out = {}
     for name, r in zip(FIVE, results):
         out[name] = {"times": r.times.tolist(),
@@ -98,12 +106,39 @@ def fig1_messages(full: bool = False) -> Dict:
     return out
 
 
-def fig2_stragglers(full: bool = False) -> Dict:
+def fig1_error_bands(full: bool = False, seeds: Sequence[int] = (0, 1, 2, 3),
+                     backend: str = "numpy") -> Dict:
+    """Fig 1d with mean ± std bands over seeds.
+
+    One batched :func:`run_sweep` call advances all barrier × seed rows
+    simultaneously; per barrier the band is ``mean ± std`` of the error
+    trace across seeds (``lo``/``hi`` clipped at 0 — errors are norms).
+    """
+    c = _scale(full)
+    cfgs = [_cfg(name, c, seed=s) for name in FIVE for s in seeds]
+    results = run_sweep(cfgs, backend=backend)
+    out = {}
+    for i, name in enumerate(FIVE):
+        rs = results[i * len(seeds):(i + 1) * len(seeds)]
+        errs = np.stack([r.errors for r in rs])          # [S, M]
+        mean, std = errs.mean(axis=0), errs.std(axis=0)
+        out[name] = {"times": rs[0].times.tolist(),
+                     "mean": mean.tolist(),
+                     "std": std.tolist(),
+                     "lo": np.maximum(mean - std, 0.0).tolist(),
+                     "hi": (mean + std).tolist(),
+                     "final_mean": float(mean[-1]),
+                     "final_std": float(std[-1])}
+    return out
+
+
+def fig2_stragglers(full: bool = False, backend: str = "numpy") -> Dict:
     """Fig 2a/2b: straggler-fraction sweep 0 → 30% (4× slow)."""
     c = _scale(full)
     fracs = (0.0, 0.05, 0.1, 0.2, 0.3)
     results = run_sweep([_cfg(name, c, straggler_frac=frac)
-                         for name in FIVE for frac in fracs])
+                         for name in FIVE for frac in fracs],
+                        backend=backend)
     out = {}
     for i, name in enumerate(FIVE):
         rows, base = [], None
@@ -117,13 +152,14 @@ def fig2_stragglers(full: bool = False) -> Dict:
     return out
 
 
-def fig2_slowness(full: bool = False) -> Dict:
+def fig2_slowness(full: bool = False, backend: str = "numpy") -> Dict:
     """Fig 2c: 5% stragglers, slowness 1× → 16×."""
     c = _scale(full)
     slows = (1.0, 2.0, 4.0, 8.0, 16.0)
     results = run_sweep([_cfg(name, c, straggler_frac=0.05,
                               straggler_slowdown=slow)
-                         for name in FIVE for slow in slows])
+                         for name in FIVE for slow in slows],
+                        backend=backend)
     out = {}
     for i, name in enumerate(FIVE):
         rows, base = [], None
@@ -136,7 +172,7 @@ def fig2_slowness(full: bool = False) -> Dict:
     return out
 
 
-def fig3_scalability(full: bool = False) -> Dict:
+def fig3_scalability(full: bool = False, backend: str = "numpy") -> Dict:
     """Fig 3: 5% stragglers, system size 100 → 1000 (fixed 10-node sample).
 
     Sizes form distinct structural groups; ``run_sweep`` batches each size
@@ -148,7 +184,7 @@ def fig3_scalability(full: bool = False) -> Dict:
         n_nodes=n, duration=duration, dim=100,
         barrier=make_barrier(name, staleness=4, sample_size=10),
         straggler_frac=0.05, seed=0)
-        for name in FIVE for n in sizes])
+        for name in FIVE for n in sizes], backend=backend)
     out = {}
     for i, name in enumerate(FIVE):
         rows, base = [], None

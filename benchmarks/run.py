@@ -37,6 +37,12 @@ def _derived_fig1_msg(res):
             f"{res['asp']['total'] / max(res['bsp']['total'], 1):.1f}x")
 
 
+def _derived_fig1_bands(res):
+    best = min(res, key=lambda k: res[k]["final_mean"])
+    return (f"lowest_error={best}:{res[best]['final_mean']:.4f}"
+            f"±{res[best]['final_std']:.4f}")
+
+
 def _derived_fig2(res):
     worst = res["bsp"][-1]["progress_ratio"]
     rob = res["pbsp"][-1]["progress_ratio"]
@@ -63,6 +69,12 @@ BENCHES = [
     ("fig1_progress", figures.fig1_progress, _derived_fig1),
     ("fig1_sample_sweep", figures.fig1_sample_sweep, _derived_sweep),
     ("fig1_error", figures.fig1_error, _derived_fig1_err),
+    # bands are pinned to the numpy backend regardless of --backend: the
+    # jax backend shares dynamics draws across rows, which would understate
+    # seed-to-seed spread (see benchmarks/figures.py docstring)
+    ("fig1_error_bands",
+     lambda full=False, backend="numpy": figures.fig1_error_bands(full=full),
+     _derived_fig1_bands),
     ("fig1_messages", figures.fig1_messages, _derived_fig1_msg),
     ("fig2_stragglers", figures.fig2_stragglers, _derived_fig2),
     ("fig2_slowness", figures.fig2_slowness, _derived_fig2c),
@@ -70,7 +82,7 @@ BENCHES = [
     ("fig4_mean_bound", fig45_bounds.fig4_mean_bound,
      lambda res: fig45_bounds.derived_summary()),
     ("fig5_variance_bound",
-     lambda full=False: fig45_bounds.fig5_variance_bound(),
+     lambda full=False, backend="numpy": fig45_bounds.fig5_variance_bound(),
      lambda res: fig45_bounds.derived_summary()),
     ("sweep_engine", sweep_bench.sweep_speedup,
      lambda res: f"speedup={res['speedup']:.1f}x "
@@ -83,6 +95,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (1000 nodes, 40s)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"),
+                    help="grid engine for the figure sweeps")
     ap.add_argument("--skip-roofline", action="store_true")
     a = ap.parse_args(argv)
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -92,7 +106,7 @@ def main(argv=None) -> None:
         if a.only and name != a.only:
             continue
         t0 = time.time()
-        res = fn(full=a.full)
+        res = fn(full=a.full, backend=a.backend)
         us = (time.time() - t0) * 1e6
         with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
             json.dump(res, f)

@@ -28,16 +28,22 @@ W, TICKS = 4, 120
 BARRIERS = ("bsp", "ssp", "asp", "pbsp", "pssp")
 
 
-def simulator_presweep():
-    """One batched run over barriers × seeds on the linear task."""
+def simulator_presweep(backend="jax"):
+    """One batched run over barriers × seeds on the linear task.
+
+    Runs on the jax grid backend by default — the whole barrier × seed
+    matrix advances inside one jitted ``lax.scan``, so stage 1 exercises
+    the same jax stack as the stage-2 SPMD trainer.
+    """
     seeds = (0, 1, 2)
     cfgs = [SimConfig(n_nodes=64, duration=10.0, dim=32, seed=s,
                       straggler_frac=0.25,
                       barrier=make_barrier(n, staleness=3, sample_size=2))
             for n in BARRIERS for s in seeds]
-    results = run_sweep(cfgs)
+    results = run_sweep(cfgs, backend=backend)
     print(f"{'barrier':8s} {'steps/node':>10s} {'spread':>7s} {'err':>8s}"
-          f"   (simulator, {len(cfgs)} scenarios batched)")
+          f"   (simulator, {len(cfgs)} scenarios batched, "
+          f"{backend} backend)")
     for i, name in enumerate(BARRIERS):
         rs = results[i * len(seeds):(i + 1) * len(seeds)]
         mean = sum(r.mean_progress for r in rs) / len(rs)

@@ -99,18 +99,20 @@ class Engine:
     def run(self, **cfg_kwargs) -> SimResult:
         return run_simulation(self._config(**cfg_kwargs))
 
-    def run_sweep(self, sweep: Iterable[dict], **common) -> List[SimResult]:
+    def run_sweep(self, sweep: Iterable[dict], *, backend: str = "numpy",
+                  **common) -> List[SimResult]:
         """Run a scenario sweep through the vectorized batch engine.
 
         ``sweep`` is an iterable of per-scenario :class:`SimConfig` override
         dicts (each may also carry a ``barrier`` name or instance);
         ``common`` applies to every scenario.  Scenarios sharing a
         structural shape are advanced simultaneously
-        (:func:`repro.core.vector_sim.run_sweep`); results come back in
-        sweep order.
+        (:func:`repro.core.vector_sim.run_sweep`); ``backend`` selects the
+        grid engine (``"numpy"`` array ops or ``"jax"`` jit + ``lax.scan``);
+        results come back in sweep order either way.
         """
         cfgs = [self._config(**{**common, **kw}) for kw in sweep]
-        return run_sweep(cfgs)
+        return run_sweep(cfgs, backend=backend)
 
 
 class MapReduceEngine(Engine):

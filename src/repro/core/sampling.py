@@ -13,8 +13,13 @@ Backends:
   Used by the simulator's *distributed* scenario.
 * :class:`CentralSampler` — the *centralised* scenario: the server holds the
   step vector, sampling "is as trivial as a counting process" (paper §5).
-* :func:`sample_steps_jax` — jittable sampling of a step vector for the SPMD
-  trainer; seeded, without replacement (per-worker independent permutations).
+* :func:`sample_steps_jax` — jittable sampling of a step vector; seeded,
+  without replacement (per-worker independent draws).  One primitive serves
+  the SPMD trainer and the vectorized simulator's jax backend
+  (:mod:`repro.core.vector_sim_jax`): the index core is
+  :func:`sample_peer_indices_jax`, with
+  :func:`sample_alive_peer_indices_jax` as the membership-masked variant
+  for churn scenarios.
 """
 from __future__ import annotations
 
@@ -31,6 +36,8 @@ __all__ = [
     "StepSample",
     "CentralSampler",
     "OverlaySampler",
+    "sample_alive_peer_indices_jax",
+    "sample_peer_indices_jax",
     "sample_steps_jax",
 ]
 
@@ -106,6 +113,91 @@ class OverlaySampler:
         return self.overlay.estimate_population()
 
 
+def sample_peer_indices_jax(
+    key: jax.Array,
+    n: int,
+    beta: int,
+    *,
+    exclude_self: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Jittable peer-index sampling: the index core of the β primitive.
+
+    For each of the ``n`` workers, draws ``k = min(β, n)`` peer *indices*
+    uniformly without replacement (independent per worker).  Shared by the
+    SPMD trainer (:func:`sample_steps_jax`) and the vectorized simulator's
+    jax backend (:mod:`repro.core.vector_sim_jax`), so both systems exercise
+    one sampling primitive.
+
+    β = 1 short-circuits to a single uniform draw per worker (the paper's
+    canonical β = 1% regime); larger β takes the k smallest of a uniform
+    score matrix (top-k, not a full argsort).
+
+    Returns:
+      take: i32[n, k] — sampled peer indices.
+      valid: bool[n, k] — False where β exceeded the peer population.
+    """
+    k = min(beta, n)
+    pop = n - 1 if exclude_self else n
+    if k <= 0:
+        z = jnp.zeros((n, 0))
+        return z.astype(jnp.int32), z.astype(bool)
+    if k == 1 and exclude_self:
+        # one uniform over the n−1 non-self slots, shifted past self;
+        # clamped so the degenerate n = 1 population (valid = False)
+        # still yields an in-range index, like the top-k path
+        draw = jnp.floor(jax.random.uniform(key, (n,))
+                         * max(n - 1, 1)).astype(jnp.int32)
+        take = jnp.minimum(draw + (draw >= jnp.arange(n, dtype=jnp.int32)),
+                           n - 1)[:, None]
+    else:
+        scores = jax.random.uniform(key, (n, n))
+        if exclude_self:
+            scores = jnp.fill_diagonal(scores, 2.0, inplace=False)
+        _, take = jax.lax.top_k(-scores, k)   # k smallest scores = sample
+    valid = jnp.broadcast_to(jnp.arange(k) < pop, (n, k))
+    return take.astype(jnp.int32), valid
+
+
+def sample_alive_peer_indices_jax(
+    key: jax.Array,
+    alive: jax.Array,
+    beta: int,
+    *,
+    exclude_self: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Membership-masked variant of :func:`sample_peer_indices_jax`.
+
+    For each worker, draws up to ``min(β, n)`` peers uniformly without
+    replacement from the **alive** peer set (churn scenarios: every row of
+    a scenario batch has its own alive mask, so indices cannot be shared).
+    A slot is invalid where β exceeded the row's alive-peer population —
+    the jittable analogue of the event engine's
+    ``beta = min(beta, len(pool))`` over a compressed alive pool.
+
+    Args:
+      key: PRNG key.
+      alive: bool[..., n] — membership mask(s); leading dims are batched.
+      beta: sample size β ≥ 0.
+      exclude_self: do not let a worker sample itself.
+
+    Returns:
+      take: i32[..., n, k] peer indices, k = min(β, n).
+      valid: bool[..., n, k] — False on dead-peer / exhausted-pool slots.
+    """
+    *lead, n = alive.shape
+    k = min(beta, n)
+    if k <= 0:
+        z = jnp.zeros((*lead, n, 0))
+        return z.astype(jnp.int32), z.astype(bool)
+    scores = jax.random.uniform(key, (*lead, n, n))
+    masked = ~alive[..., None, :]
+    if exclude_self:
+        masked = masked | jnp.eye(n, dtype=bool)
+    scores = jnp.where(masked, 2.0, scores)
+    neg, take = jax.lax.top_k(-scores, k)   # k smallest scores = sample
+    return take.astype(jnp.int32), -neg < 1.5
+
+
 def sample_steps_jax(
     key: jax.Array,
     steps: jax.Array,
@@ -113,7 +205,7 @@ def sample_steps_jax(
     *,
     exclude_self: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Jittable sampling primitive for the SPMD trainer.
+    """Jittable sampling primitive for the SPMD trainer and sweep engine.
 
     For each of the W workers, draws β peers uniformly **without replacement**
     (independent per worker, as each node samples locally in the distributed
@@ -124,31 +216,23 @@ def sample_steps_jax(
       steps: i32[W] — all workers' step counters (cheap to all-gather: 4W
         bytes; this is the *only* globally exchanged control state, and in the
         fully distributed deployment even this is replaced by β point queries).
+        May also be i32[B, W]: a scenario batch (the vectorized sweep
+        engine's jax backend); one index draw is shared across the B rows —
+        each row's marginal stays an exact uniform β-sample — and the
+        sampled steps are gathered per row.
       beta: sample size β ≥ 0.
       exclude_self: do not let a worker sample itself (it trivially satisfies
         the predicate).
 
     Returns:
-      sampled_steps: i32[W, β]
-      valid: bool[W, β] — False where β exceeded the peer population.
+      sampled_steps: i32[W, k] (or i32[B, W, k]) with k = min(β, W)
+      valid: bool of the same shape — False where β exceeded the peer
+        population.
     """
-    w = steps.shape[0]
-    if beta == 0:
-        return (jnp.zeros((w, 0), dtype=steps.dtype),
-                jnp.zeros((w, 0), dtype=bool))
-
-    keys = jax.random.split(key, w)
-
-    def one(worker_idx, k):
-        # Uniform scores; self is pushed to the end when excluded.
-        scores = jax.random.uniform(k, (w,))
-        if exclude_self:
-            scores = scores.at[worker_idx].set(2.0)
-        order = jnp.argsort(scores)          # ascending: β smallest = sample
-        take = order[:beta]
-        pop = w - 1 if exclude_self else w
-        valid = jnp.arange(beta) < pop
-        return steps[take], valid
-
-    sampled, valid = jax.vmap(one)(jnp.arange(w), keys)
-    return sampled, valid
+    w = steps.shape[-1]
+    take, valid = sample_peer_indices_jax(key, w, beta,
+                                          exclude_self=exclude_self)
+    if steps.ndim == 2:
+        return steps[:, take], jnp.broadcast_to(valid, (steps.shape[0],)
+                                                + valid.shape)
+    return steps[take], valid

@@ -51,7 +51,8 @@ from repro.core.barriers import ASP, BSP, BarrierControl
 from repro.core.overlay import ChordOverlay, FullMembershipOverlay
 from repro.core.sampling import CentralSampler, OverlaySampler
 
-__all__ = ["SimConfig", "SimResult", "Simulator", "run_simulation"]
+__all__ = ["SimConfig", "SimResult", "Simulator", "run_simulation",
+           "draw_static_state", "sample_poisson_times"]
 
 
 @dataclasses.dataclass
@@ -96,6 +97,44 @@ class SimResult:
         return pmf / pmf.sum()
 
 
+def draw_static_state(cfg: SimConfig,
+                      rng: np.random.Generator) -> Tuple[np.ndarray,
+                                                         np.ndarray]:
+    """Per-seed static draw: ground truth + per-node mean step times.
+
+    Both the event-driven simulator and the vectorized batch engines
+    (:mod:`repro.core.vector_sim`) replay this exact stream per config, so a
+    config's ground-truth model, node speeds and straggler assignment are
+    identical across engines — only the *dynamics* noise differs (and only
+    at the sample-path level).
+    """
+    w_true = rng.normal(size=cfg.dim) / np.sqrt(cfg.dim)
+    speed = 1.0 + cfg.compute_jitter * (rng.random(cfg.n_nodes) - 0.5)
+    n_slow = int(round(cfg.straggler_frac * cfg.n_nodes))
+    slow_ids = rng.choice(cfg.n_nodes, size=n_slow, replace=False)
+    speed[slow_ids] *= cfg.straggler_slowdown
+    return w_true, cfg.base_compute * speed
+
+
+def sample_poisson_times(rng: np.random.Generator, rate: float,
+                         duration: float) -> np.ndarray:
+    """Event times of a Poisson process on (0, duration]: exponential gaps.
+
+    This is the churn arrival/departure model of the event simulator
+    (each ``_on_leave``/``_on_join`` re-arms at an exponential gap, i.e. a
+    Poisson process independent of system state); the batched engines
+    pre-sample the whole schedule from it.
+    """
+    if rate <= 0.0:
+        return np.empty(0)
+    times: List[float] = []
+    t = rng.exponential(1.0 / rate)
+    while t <= duration:
+        times.append(t)
+        t += rng.exponential(1.0 / rate)
+    return np.asarray(times)
+
+
 # event kinds
 _FINISH, _POLL, _MEASURE, _JOIN, _LEAVE = range(5)
 
@@ -110,7 +149,7 @@ class Simulator:
         self.lr = cfg.lr if cfg.lr is not None else 0.5 / P
 
         # --- linear-regression ground truth & server model ---------------- #
-        self.w_true = self.rng.normal(size=d) / np.sqrt(d)
+        self.w_true, self.compute_time = draw_static_state(cfg, self.rng)
         self.w = np.zeros(d)
         self.w_true_norm = float(np.linalg.norm(self.w_true))
 
@@ -120,11 +159,6 @@ class Simulator:
         self._all_alive = (cfg.churn_leave_rate == 0.0
                            and cfg.churn_join_rate == 0.0)
         self.pulled_w: List[np.ndarray] = [self.w.copy() for _ in range(P)]
-        speed = 1.0 + cfg.compute_jitter * (self.rng.random(P) - 0.5)
-        n_slow = int(round(cfg.straggler_frac * P))
-        slow_ids = self.rng.choice(P, size=n_slow, replace=False)
-        speed[slow_ids] *= cfg.straggler_slowdown
-        self.compute_time = cfg.base_compute * speed  # per-node mean step time
 
         # --- barrier / sampling backends ----------------------------------- #
         self.barrier = cfg.barrier

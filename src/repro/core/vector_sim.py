@@ -4,11 +4,11 @@ The paper's headline results (Figs 1–3) are *sweeps*: barrier policy ×
 straggler fraction × slowness × system size × seed.  The discrete-event
 :class:`~repro.core.simulator.Simulator` processes one Python event at a
 time, so a full scenario matrix costs minutes; this module advances **all P
-nodes and a batch of B configurations simultaneously** with NumPy array ops
-on a fixed time grid, cutting sweep wall-clock by an order of magnitude
-while keeping the event-driven simulator as the semantic reference
-(``tests/test_vector_sim.py`` holds the distribution-level equivalence
-test).
+nodes and a batch of B configurations simultaneously** on a fixed time
+grid, cutting sweep wall-clock by an order of magnitude while keeping the
+event-driven simulator as the semantic reference
+(``tests/test_vector_sim.py`` and ``tests/test_vector_sim_jax.py`` hold the
+distribution-level equivalence suites).
 
 Sweep API
 ---------
@@ -19,26 +19,50 @@ Sweep API
 
     configs = [SimConfig(barrier=make_barrier(b), straggler_frac=f, seed=s)
                for b in ("bsp", "pbsp") for f in (0.0, 0.1) for s in range(4)]
-    results = run_sweep(configs)          # -> list[SimResult], input order
+    results = run_sweep(configs)                  # NumPy grid engine
+    results = run_sweep(configs, backend="jax")   # jit + lax.scan engine
 
 Configurations are grouped by structural key (``n_nodes``, ``dim``,
-``batch``, ``duration``, ``measure_interval``, ``poll_interval``); each
-group runs as one batched :class:`VectorSimulator`, everything else (seed,
-learning rate, straggler settings, barrier policy, noise, distributed
-sampling) is batched per-row.  Configs the vector engine cannot express
-(churn) transparently fall back to the event-driven reference.
+``batch``, ``duration``, ``measure_interval``, ``poll_interval``, churn
+on/off); each group runs as one batched :class:`VectorSimulator`,
+everything else (seed, learning rate, straggler settings, barrier policy,
+noise, distributed sampling, churn rates) is batched per-row.  Results come
+back in input order regardless of backend or grouping.
+
+Backend matrix
+--------------
+===========  ==========================  ==========================
+backend      no churn                    churn (alive-masked rows)
+===========  ==========================  ==========================
+``numpy``    array ops per grid tick     same + per-tick event batch
+``jax``      one jitted ``lax.scan``     same, per-row masked samples
+===========  ==========================  ==========================
+
+Both backends handle churn natively — nothing falls back to the event
+engine.  The jax backend expresses one grid tick as a pure function over
+the ``(B, P)`` state pytree (:mod:`repro.core.vector_sim_jax`) and reuses
+:func:`repro.core.sampling.sample_steps_jax` /
+``sample_peer_indices_jax(exclude_self=True)`` for the β-sample decide
+step, so the simulator and the SPMD trainer share one sampling primitive.
 
 Simulation model (one grid tick of width ``dt``)
 ------------------------------------------------
+0. **Churn** — pre-sampled Poisson leave/join events due this tick fire:
+   a leave kills a uniformly random alive node (only while more than two
+   are alive, as the event engine), a join revives a dead node at the
+   current max alive step and lets it decide this tick.  Departed nodes neither finish nor decide;
+   the full-view minimum is re-derived from the alive-masked step matrix
+   every tick, so a departed global-min straggler unblocks waiters on the
+   next tick — the grid analogue of the event engine's ``_on_leave`` wake.
 1. **Finish** — nodes whose busy-until clock expired push their update
    (gradient of the linear task at their *pulled* model — SGD updates
    commute within a tick because each depends only on the puller's stale
    view), advance their step counter, and become *deciding*.
 2. **Decide** — all deciding nodes evaluate their barrier predicate in one
    masked batch: ASP rows always pass; full-view rows (BSP/SSP) pass iff
-   ``step − min(steps) ≤ staleness``; sampled rows (pBSP/pSSP) draw β
-   peers **without replacement, excluding themselves** (the worker-centric
-   semantics of paper §6.4, matching
+   ``step − min(alive steps) ≤ staleness``; sampled rows (pBSP/pSSP) draw β
+   **alive** peers without replacement, excluding themselves (the
+   worker-centric semantics of paper §6.4, matching
    ``sample_steps_jax(..., exclude_self=True)``) and pass iff no sampled
    peer lags more than ``staleness`` behind.
 3. **Start** — passing nodes pull the server model and draw their next
@@ -50,56 +74,63 @@ Simulation model (one grid tick of width ``dt``)
 4. **Measure** — error/update traces are recorded on the same
    ``measure_interval`` grid as :class:`SimResult` expects.
 
-Determinism: a sweep is deterministic given the config list (the batch
-shares one dynamics RNG seeded from all row seeds), and each row's *static*
-draw — ground-truth model, node speeds, straggler assignment — replays the
-event simulator's per-seed init stream exactly.  Per-row dynamics noise
-(minibatches, step-duration jitter, β-samples) is shared across the batch,
-so a row's trajectory matches the event simulator at the distribution level
-(mean progress, lag pmf shape, final error), not sample-path level.
+Determinism: a sweep is deterministic given the config list and backend
+(the batch shares one dynamics RNG seeded from all row seeds), and each
+row's *static* draw — ground-truth model, node speeds, straggler
+assignment — replays the event simulator's per-seed init stream exactly
+(:func:`repro.core.simulator.draw_static_state`) on **both** backends.
+Per-row dynamics noise (minibatches, step-duration jitter, β-samples,
+churn victims) is shared across the batch, so a row's trajectory matches
+the event simulator at the distribution level (mean progress, lag pmf
+shape, final error), not sample-path level; the numpy and jax backends
+likewise agree at the distribution level (different dynamics streams) —
+``tests/test_vector_sim_jax.py`` pins per-backend golden traces.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.barriers import ASP
-from repro.core.simulator import SimConfig, SimResult, run_simulation
+from repro.core.simulator import (SimConfig, SimResult, draw_static_state,
+                                  sample_poisson_times)
 
-__all__ = ["VectorSimulator", "run_sweep"]
+__all__ = ["VectorSimulator", "run_sweep", "BACKENDS"]
 
 _EPS = 1e-9
 
+BACKENDS = ("numpy", "jax")
+
 
 def _group_key(cfg: SimConfig) -> Tuple:
-    """Structural fields that must agree within one vectorized batch."""
+    """Structural fields that must agree within one vectorized batch.
+
+    Churn-ness is structural: churn batches carry alive masks and per-row
+    event schedules, and the jax backend specialises its tick function on
+    it (per-row masked sampling vs the shared-index fast path).
+    """
+    has_churn = cfg.churn_join_rate > 0.0 or cfg.churn_leave_rate > 0.0
     return (cfg.n_nodes, cfg.dim, cfg.batch, float(cfg.duration),
-            float(cfg.measure_interval), float(cfg.poll_interval))
-
-
-def _vectorizable(cfg: SimConfig) -> bool:
-    """Churn needs the event-driven membership machinery — fall back."""
-    return cfg.churn_join_rate == 0.0 and cfg.churn_leave_rate == 0.0
+            float(cfg.measure_interval), float(cfg.poll_interval), has_churn)
 
 
 class VectorSimulator:
     """Batched fixed-grid simulator over B same-shape configurations."""
 
     def __init__(self, configs: Sequence[SimConfig],
-                 dt: Optional[float] = None):
+                 dt: Optional[float] = None, backend: str = "numpy"):
         if not configs:
             raise ValueError("empty config batch")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"choose from {BACKENDS}")
         keys = {_group_key(c) for c in configs}
         if len(keys) > 1:
             raise ValueError(f"heterogeneous batch: {keys} "
                              "(use run_sweep, which groups automatically)")
-        for c in configs:
-            if not _vectorizable(c):
-                raise ValueError("churn is not vectorizable; use run_sweep "
-                                 "(falls back to the event-driven simulator)")
         self.configs = list(configs)
+        self.backend = backend
         B = len(configs)
         c0 = configs[0]
         P, d = c0.n_nodes, c0.dim
@@ -115,6 +146,8 @@ class VectorSimulator:
             raise ValueError(
                 f"dt={self.dt} must not exceed poll_interval="
                 f"{self.poll_interval}")
+        self.has_churn = any(c.churn_join_rate > 0.0
+                             or c.churn_leave_rate > 0.0 for c in configs)
 
         # ---- per-row static state: replay the event simulator's init ---- #
         self.w_true = np.empty((B, d))
@@ -127,12 +160,7 @@ class VectorSimulator:
         self.distributed = np.zeros(B, dtype=bool)
         for b, cfg in enumerate(configs):
             rng = np.random.default_rng(cfg.seed)
-            self.w_true[b] = rng.normal(size=d) / np.sqrt(d)
-            speed = 1.0 + cfg.compute_jitter * (rng.random(P) - 0.5)
-            n_slow = int(round(cfg.straggler_frac * P))
-            slow_ids = rng.choice(P, size=n_slow, replace=False)
-            speed[slow_ids] *= cfg.straggler_slowdown
-            self.compute_time[b] = cfg.base_compute * speed
+            self.w_true[b], self.compute_time[b] = draw_static_state(cfg, rng)
             self.lr[b] = cfg.lr if cfg.lr is not None else 0.5 / P
             self.noise_std[b] = cfg.noise_std
             bar = cfg.barrier
@@ -155,6 +183,7 @@ class VectorSimulator:
         self.w = np.zeros((B, d))
         self.pulled = np.zeros((B, P, d))
         self.steps = np.zeros((B, P), dtype=np.int64)
+        self.alive = np.ones((B, P), dtype=bool)
         self.computing = np.ones((B, P), dtype=bool)
         #: finish time while computing / next barrier-check time while not
         self.event_time = self.compute_time * (0.5 + self.rng.random((B, P)))
@@ -167,10 +196,30 @@ class VectorSimulator:
         # O(log N) hops + β step queries), matching OverlaySampler
         self._hops_per_peer = max(1, int(np.ceil(np.log2(max(P, 2))))) + 1
 
+        # ---- tick grid + measurement grid ------------------------------- #
+        ticks = np.arange(self.dt, self.duration + 1e-9, self.dt)
+        if ticks.size == 0 or ticks[-1] < self.duration - 1e-9:
+            ticks = np.append(ticks, self.duration)
+        self.ticks = ticks
         self.m_times = np.arange(0.0, self.duration + 1e-9,
                                  self.measure_interval)
         self._trace_err: List[np.ndarray] = []
         self._trace_upd: List[np.ndarray] = []
+
+        # ---- churn schedules: pre-sampled Poisson processes per row ----- #
+        # i64[T, B] event counts per tick (tick i covers (t_{i-1}, t_i]);
+        # empty rows for churn-free configs inside a churn batch
+        if self.has_churn:
+            edges = np.concatenate(([0.0], ticks))
+            self.leave_counts = np.zeros((ticks.size, B), dtype=np.int64)
+            self.join_counts = np.zeros((ticks.size, B), dtype=np.int64)
+            for b, cfg in enumerate(configs):
+                lt = sample_poisson_times(self.rng, cfg.churn_leave_rate,
+                                          self.duration)
+                jt = sample_poisson_times(self.rng, cfg.churn_join_rate,
+                                          self.duration)
+                self.leave_counts[:, b] = np.histogram(lt, bins=edges)[0]
+                self.join_counts[:, b] = np.histogram(jt, bins=edges)[0]
 
     # ------------------------------------------------------------------ #
     def _measure(self) -> None:
@@ -212,7 +261,7 @@ class VectorSimulator:
         For k ≪ P this is vectorized rejection sampling (draw k iid indices
         over the P−1 non-self slots, redraw rows with within-row collisions)
         — O(K·k) versus the O(K·P) of a full argpartition, which remains the
-        fallback for dense samples.
+        fallback for dense samples.  No-churn path: every peer is alive.
         """
         K = bb.size
         if 3 * k >= self.P:
@@ -233,13 +282,34 @@ class VectorSimulator:
                 draw[rows] = redo
         return draw
 
+    def _sample_peers_masked(self, bb: np.ndarray, pp: np.ndarray,
+                             k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Churn path: k alive-peer indices + validity, self/dead excluded.
+
+        Masked argpartition over uniform scores; a slot is valid iff its
+        score stayed below the dead/self sentinel, which caps the effective
+        sample at the row's alive-peer count — exactly the event engine's
+        ``beta = min(beta, len(pool))`` under a compressed alive pool.
+        """
+        K = bb.size
+        scores = self.rng.random((K, self.P))
+        scores[~self.alive[bb]] = 2.0
+        scores[np.arange(K), pp] = 2.0
+        take = np.argpartition(scores, min(k, self.P - 1), axis=1)[:, :k]
+        valid = np.take_along_axis(scores, take, axis=1) < 1.5
+        return take, valid
+
     def _barrier_pass(self, cand: np.ndarray) -> np.ndarray:
         """Masked barrier predicates; bool[B, P], valid where ``cand``."""
         passed = np.zeros((self.B, self.P), dtype=bool)
         passed[self.is_asp] = True
         if self.full_view.any():
             fv_steps = self.steps[self.full_view]
-            lag = fv_steps - fv_steps.min(axis=1, keepdims=True)
+            # min over *alive* steps: a departed straggler's frozen counter
+            # must not gate waiters (the event engine's churn-wake fix)
+            masked = np.where(self.alive[self.full_view], fv_steps,
+                              np.iinfo(np.int64).max)
+            lag = fv_steps - masked.min(axis=1, keepdims=True)
             passed[self.full_view] = \
                 lag <= self.staleness[self.full_view, None]
         sm = cand & self.sampled[:, None]
@@ -253,86 +323,136 @@ class VectorSimulator:
                 if k <= 0:
                     passed[bb, pp] = True   # S = ∅ degenerates to ASP
                     continue
-                take = self._sample_peers(bb, pp, k)
+                if self.has_churn:
+                    take, valid = self._sample_peers_masked(bb, pp, k)
+                    n_sampled = valid.sum(axis=1)
+                else:
+                    take = self._sample_peers(bb, pp, k)
+                    valid = np.ones_like(take, dtype=bool)
+                    n_sampled = np.full(bb.size, k)
                 peer_steps = self.steps[bb[:, None], take]
                 my = self.steps[bb, pp]
                 passed[bb, pp] = np.all(
-                    my[:, None] - peer_steps
-                    <= self.staleness[bb][:, None], axis=1)
+                    (my[:, None] - peer_steps
+                     <= self.staleness[bb][:, None]) | ~valid, axis=1)
                 dist = self.distributed[bb]
                 if dist.any():
                     self.control_messages += (
-                        k * self._hops_per_peer
-                        * np.bincount(bb[dist], minlength=self.B))
+                        self._hops_per_peer
+                        * np.bincount(bb[dist], weights=n_sampled[dist],
+                                      minlength=self.B).astype(np.int64))
         return passed
 
     # ------------------------------------------------------------------ #
-    def run(self) -> List[SimResult]:
-        dt = self.dt
-        ticks = np.arange(dt, self.duration + 1e-9, dt)
-        if ticks.size == 0 or ticks[-1] < self.duration - 1e-9:
-            ticks = np.append(ticks, self.duration)
-        self._measure()                      # t = 0 trace point
-        m_next = 1
+    # churn: batched leave/join event processing
+    # ------------------------------------------------------------------ #
+    def _churn_leave(self, rows: np.ndarray) -> None:
+        """One leave event in each flagged row: kill a random alive node.
 
-        for t in ticks:
-            # 1. finishes: push updates, advance steps, become "deciding"
-            fin = self.computing & (self.event_time <= t + _EPS)
-            # latest finish per row this tick: a full-view waiter unblocked
-            # this tick was gated by (at most) that finish, so anchoring
-            # there instead of the tick boundary removes the systematic
-            # dt/2-per-round quantisation loss for BSP/SSP
-            row_unblock = np.full(self.B, t)
-            if fin.any():
-                b_idx, p_idx = np.nonzero(fin)
-                rows, starts = np.unique(b_idx, return_index=True)
-                row_last = np.maximum.reduceat(self.event_time[fin], starts)
-                row_unblock[rows] = np.minimum(row_last, t)
-                self._apply_updates(b_idx, p_idx)
-                self.steps[fin] += 1
-                self.computing[fin] = False
-                self.ready[fin] = self.event_time[fin]  # true finish time
-                self.blocked[fin] = False
+        Fires only while more than two nodes are alive (the population can
+        drop to two), as the event engine; the event is consumed either
+        way (a too-small row just skips the effect).
+        """
+        rows = rows & (self.alive.sum(axis=1) > 2)
+        b = np.flatnonzero(rows)
+        if b.size == 0:
+            return
+        scores = self.rng.random((b.size, self.P))
+        scores[~self.alive[b]] = -1.0
+        victim = scores.argmax(axis=1)
+        self.alive[b, victim] = False
 
-            # 2. barrier decisions for every due deciding node
-            cand = ~self.computing & (self.event_time <= t + _EPS)
-            if cand.any():
-                passed = self._barrier_pass(cand)
-                start = cand & passed
-                if start.any():
-                    b_idx, p_idx = np.nonzero(start)
-                    # anchor at the continuous ready time; a full-view node
-                    # unblocked by a peer's finish starts at that finish
-                    # (the grid analogue of the event simulator's
-                    # min-moved wakeup)
-                    t0 = np.where(self.blocked[start]
-                                  & self.full_view[b_idx],
-                                  np.maximum(row_unblock[b_idx],
-                                             self.ready[start]),
-                                  self.ready[start])
-                    self.pulled[b_idx, p_idx] = self.w[b_idx]
-                    dur = (self.compute_time[b_idx, p_idx]
-                           * (0.5 + self.rng.random(b_idx.size)))
-                    self.event_time[start] = t0 + dur
-                    self.computing[start] = True
-                    self.blocked[start] = False
-                fail = cand & ~passed
-                if fail.any():
-                    self.blocked[fail] = True
-                    # sampled rows re-poll on the poll cadence; full-view
-                    # rows stay due and re-check next tick
-                    sm_fail = fail & self.sampled[:, None]
-                    self.ready[sm_fail] += self.poll_interval
-                    self.event_time[sm_fail] = self.ready[sm_fail]
+    def _churn_join(self, rows: np.ndarray, t: float) -> None:
+        """One join event per flagged row: revive a random dead node.
 
-            # 3. error / server-update traces on the measurement grid
-            while m_next < self.m_times.size and \
-                    self.m_times[m_next] <= t + _EPS:
-                self._measure()
-                m_next += 1
+        The joiner restarts at the current max alive step (the event
+        engine's fresh-start rule) and decides this tick.
+        """
+        rows = rows & ~self.alive.all(axis=1)
+        b = np.flatnonzero(rows)
+        if b.size == 0:
+            return
+        scores = self.rng.random((b.size, self.P))
+        scores[self.alive[b]] = -1.0
+        node = scores.argmax(axis=1)
+        self.alive[b, node] = True
+        fresh = np.where(self.alive[b], self.steps[b],
+                         np.iinfo(np.int64).min).max(axis=1)
+        self.steps[b, node] = fresh
+        self.computing[b, node] = False
+        self.event_time[b, node] = t
+        self.ready[b, node] = t
+        self.blocked[b, node] = False
 
-        errs = np.stack(self._trace_err, axis=1)        # [B, M]
-        upds = np.stack(self._trace_upd, axis=1)        # [B, M]
+    def _process_churn(self, t: float, leave_n: np.ndarray,
+                       join_n: np.ndarray) -> None:
+        """Fire this tick's pre-sampled leave/join events, batched per round
+        (several events per row per tick are possible but rare)."""
+        leave_n, join_n = leave_n.copy(), join_n.copy()
+        while (leave_n > 0).any() or (join_n > 0).any():
+            self._churn_leave(leave_n > 0)
+            self._churn_join(join_n > 0, t)
+            leave_n -= leave_n > 0
+            join_n -= join_n > 0
+
+    # ------------------------------------------------------------------ #
+    def _tick(self, t: float, tick_index: int) -> None:
+        """Advance the whole batch by one grid tick (phases 0–3)."""
+        if self.has_churn:
+            self._process_churn(t, self.leave_counts[tick_index],
+                                self.join_counts[tick_index])
+
+        # 1. finishes: push updates, advance steps, become "deciding"
+        fin = self.computing & self.alive & (self.event_time <= t + _EPS)
+        # latest finish per row this tick: a full-view waiter unblocked
+        # this tick was gated by (at most) that finish, so anchoring
+        # there instead of the tick boundary removes the systematic
+        # dt/2-per-round quantisation loss for BSP/SSP
+        row_unblock = np.full(self.B, t)
+        if fin.any():
+            b_idx, p_idx = np.nonzero(fin)
+            rows, starts = np.unique(b_idx, return_index=True)
+            row_last = np.maximum.reduceat(self.event_time[fin], starts)
+            row_unblock[rows] = np.minimum(row_last, t)
+            self._apply_updates(b_idx, p_idx)
+            self.steps[fin] += 1
+            self.computing[fin] = False
+            self.ready[fin] = self.event_time[fin]  # true finish time
+            self.blocked[fin] = False
+
+        # 2. barrier decisions for every due deciding node
+        cand = ~self.computing & self.alive & (self.event_time <= t + _EPS)
+        if cand.any():
+            passed = self._barrier_pass(cand)
+            start = cand & passed
+            if start.any():
+                b_idx, p_idx = np.nonzero(start)
+                # anchor at the continuous ready time; a full-view node
+                # unblocked by a peer's finish starts at that finish
+                # (the grid analogue of the event simulator's
+                # min-moved wakeup)
+                t0 = np.where(self.blocked[start]
+                              & self.full_view[b_idx],
+                              np.maximum(row_unblock[b_idx],
+                                         self.ready[start]),
+                              self.ready[start])
+                self.pulled[b_idx, p_idx] = self.w[b_idx]
+                dur = (self.compute_time[b_idx, p_idx]
+                       * (0.5 + self.rng.random(b_idx.size)))
+                self.event_time[start] = t0 + dur
+                self.computing[start] = True
+                self.blocked[start] = False
+            fail = cand & ~passed
+            if fail.any():
+                self.blocked[fail] = True
+                # sampled rows re-poll on the poll cadence; full-view
+                # rows stay due and re-check next tick
+                sm_fail = fail & self.sampled[:, None]
+                self.ready[sm_fail] += self.poll_interval
+                self.event_time[sm_fail] = self.ready[sm_fail]
+
+    def _results(self, errs: np.ndarray, upds: np.ndarray) -> List[SimResult]:
+        """Assemble per-row :class:`SimResult`\\ s from [B, M] traces."""
         final_err = (np.linalg.norm(self.w - self.w_true, axis=1)
                      / self.w_true_norm)
         out = []
@@ -344,31 +464,56 @@ class VectorSimulator:
                 server_updates=upds[b].copy(),
                 control_messages=int(self.control_messages[b]),
                 total_updates=int(self.total_updates[b]),
-                mean_progress=float(self.steps[b].mean()),
+                mean_progress=float(self.steps[b][self.alive[b]].mean()),
                 final_error=float(final_err[b]),
             ))
         return out
 
+    def run(self) -> List[SimResult]:
+        if self.backend == "jax":
+            from repro.core import vector_sim_jax
+            return vector_sim_jax.run_batch(self)
+
+        self._measure()                      # t = 0 trace point
+        m_next = 1
+        for i, t in enumerate(self.ticks):
+            self._tick(t, i)
+            # 3. error / server-update traces on the measurement grid
+            while m_next < self.m_times.size and \
+                    self.m_times[m_next] <= t + _EPS:
+                self._measure()
+                m_next += 1
+
+        errs = np.stack(self._trace_err, axis=1)        # [B, M]
+        upds = np.stack(self._trace_upd, axis=1)        # [B, M]
+        return self._results(errs, upds)
+
 
 # --------------------------------------------------------------------------- #
 def run_sweep(configs: Sequence[SimConfig], *,
-              dt: Optional[float] = None) -> List[SimResult]:
-    """Run a batch of simulations, vectorizing wherever possible.
+              dt: Optional[float] = None,
+              backend: str = "numpy") -> List[SimResult]:
+    """Run a batch of simulations on the vectorized grid engine.
 
-    Configs are grouped by structural shape and each group is advanced as
-    one :class:`VectorSimulator`; configs the vector engine cannot express
-    (churn) run on the event-driven reference.  Results come back in input
-    order.
+    Configs are grouped by structural shape (churn-ness included) and each
+    group is advanced as one :class:`VectorSimulator` — churn configs run
+    natively with per-row alive masks; nothing falls back to the
+    event-driven reference.  Results come back in input order, invariant to
+    ``backend`` and grouping.
+
+    Args:
+      configs: scenario list (any mix of shapes/barriers/churn).
+      dt: grid width; defaults to each group's ``poll_interval``.
+      backend: ``"numpy"`` (array ops per tick) or ``"jax"`` (one jitted
+        ``lax.scan`` over the tick grid, :mod:`repro.core.vector_sim_jax`).
     """
     results: List[Optional[SimResult]] = [None] * len(configs)
     groups: Dict[Tuple, List[int]] = {}
     for i, cfg in enumerate(configs):
-        if _vectorizable(cfg):
-            groups.setdefault(_group_key(cfg), []).append(i)
-        else:
-            results[i] = run_simulation(cfg)
+        groups.setdefault(_group_key(cfg), []).append(i)
     for idx in groups.values():
-        batch = VectorSimulator([configs[i] for i in idx], dt=dt).run()
+        batch = VectorSimulator([configs[i] for i in idx], dt=dt,
+                                backend=backend).run()
         for i, res in zip(idx, batch):
             results[i] = res
     return results  # type: ignore[return-value]

@@ -83,13 +83,18 @@ class TestSweepAPI:
             assert np.array_equal(a.errors, b.errors)
             assert a.total_updates == b.total_updates
 
-    def test_churn_falls_back_to_event_sim(self):
-        cfgs = [_cfg("pbsp", duration=5.0),
-                _cfg("pbsp", duration=5.0, churn_leave_rate=0.5,
-                     churn_join_rate=0.5)]
-        results = run_sweep(cfgs)
-        assert all(r.mean_progress > 0 for r in results)
-        assert all(np.isfinite(r.final_error) for r in results)
+    def test_churn_runs_natively_no_fallback(self):
+        # churn rows are a distinct structural group (alive masks + event
+        # schedules) but run on the vector engine — no event-sim fallback
+        churn = _cfg("pbsp", duration=5.0, churn_leave_rate=0.5,
+                     churn_join_rate=0.5)
+        direct = VectorSimulator([churn]).run()[0]     # accepted directly
+        sweep = run_sweep([_cfg("pbsp", duration=5.0), churn])
+        assert all(r.mean_progress > 0 for r in sweep)
+        assert all(np.isfinite(r.final_error) for r in sweep)
+        # deterministic engine: the sweep's churn row is the direct run
+        assert np.array_equal(direct.steps, sweep[1].steps)
+        assert direct.total_updates == sweep[1].total_updates
 
     def test_heterogeneous_batch_rejected_directly(self):
         with pytest.raises(ValueError):
