@@ -1,9 +1,17 @@
 """Benchmark harness — one entry per paper figure/table.
 
 Prints ``name,us_per_call,derived`` CSV (one line per benchmark) and dumps
-the full series to results/benchmarks/*.json.
+the full series to results/benchmarks/*.json.  Every figure sweep routes
+through the vectorized grid engine
+(:func:`repro.core.vector_sim.run_sweep`) on the backend selected by
+``--backend`` — numpy array ops, or the device-resident jax scan whose
+control-plane tick is the fused kernel of :mod:`repro.kernels.psp_tick`
+(churn and ragged shapes run natively on both; there is no event-engine
+fallback).  Flag reference and the figure → command map live in
+``docs/BENCHMARKS.md``.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1_progress]
+                                            [--backend numpy|jax]
 
 ``--full`` runs the paper-scale settings (1000 nodes / 40 s / β = 1%);
 default is a CI-friendly reduced scale with identical structure.

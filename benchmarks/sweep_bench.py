@@ -1,14 +1,18 @@
-"""Sweep-engine benchmark: event-driven loop vs the two grid backends.
+"""Sweep-engine benchmark: event-driven loop vs the grid backends.
 
 Runs the same Fig-2-style scenario matrix (five barriers × five straggler
-fractions, matched seeds) three times — once as a Python loop over the
-discrete-event :func:`~repro.core.simulator.run_simulation` (the *before*),
-once through the vectorized NumPy :func:`~repro.core.vector_sim.run_sweep`
-and once through its jax backend (jit + ``lax.scan``) — checks the engines
-agree at the distribution level, and records wall-clock plus speedups in
-``BENCH_sweep.json`` at the repo root.
+fractions, matched seeds) through every engine — a Python loop over the
+discrete-event :func:`~repro.core.simulator.run_simulation` (the
+*before*), the vectorized NumPy :func:`~repro.core.vector_sim.run_sweep`,
+its jax backend (one jitted ``lax.scan`` with the fused control-plane
+tick), and the Pallas tick kernel (``PSP_TICK_IMPL=interpret`` through
+the Pallas interpreter on CPU; the real Mosaic kernel when a TPU is
+attached) — checks the engines agree at the distribution level, and
+records wall-clock plus speedups in ``BENCH_sweep.json`` at the repo
+root.  Schema and regeneration flags are documented in
+``docs/BENCHMARKS.md``.
 
-    PYTHONPATH=src python -m benchmarks.sweep_bench [--full]
+    PYTHONPATH=src python -m benchmarks.sweep_bench [--full] [--no-pallas]
 """
 from __future__ import annotations
 
@@ -17,6 +21,8 @@ import json
 import os
 import time
 from typing import Dict
+
+import jax
 
 from repro.core.barriers import make_barrier
 from repro.core.simulator import SimConfig, run_simulation
@@ -29,6 +35,7 @@ FRACS = (0.0, 0.05, 0.1, 0.2, 0.3)
 
 
 def _configs(full: bool):
+    """The Fig-2 scenario matrix (paper scale under ``--full``)."""
     n, dur, dim = (1000, 40.0, 100) if full else (100, 20.0, 32)
     beta = max(1, n // 100)
     return [SimConfig(n_nodes=n, duration=dur, dim=dim, seed=3,
@@ -38,21 +45,51 @@ def _configs(full: bool):
             for name in FIVE for frac in FRACS]
 
 
-def sweep_speedup(full: bool = False, backend: str | None = None) -> Dict:
+def _timed_grid(cfgs, backend: str, impl: str | None = None):
+    """(seconds, results) for one grid engine, jit warm-up excluded."""
+    from repro.core import vector_sim_jax
+    env_before = os.environ.get("PSP_TICK_IMPL")
+    if impl is not None:
+        os.environ["PSP_TICK_IMPL"] = impl
+    try:
+        # numpy needs only a BLAS/import warm-up; jax jit-specialises on
+        # the batch shape, so its warm-up must run the full config list
+        run_sweep(cfgs if backend == "jax" else cfgs[:2], backend=backend)
+        t0 = time.time()
+        res = run_sweep(cfgs, backend=backend)
+        return time.time() - t0, res
+    finally:
+        if impl is not None:
+            if env_before is None:
+                os.environ.pop("PSP_TICK_IMPL", None)
+            else:
+                os.environ["PSP_TICK_IMPL"] = env_before
+        vector_sim_jax._compiled_scan.cache_clear()
+
+
+def sweep_speedup(full: bool = False, backend: str | None = None,
+                  pallas: bool = True) -> Dict:
     """Time the Fig-2 sweep on all engines and dump ``BENCH_sweep.json``.
 
     ``backend`` is accepted for harness uniformity and ignored — this
     benchmark's whole point is timing every engine against the others.
+    ``pallas=False`` skips the Pallas-tick row (it adds an extra
+    compile of the interpreted kernel on CPU).
     """
     cfgs = _configs(full)
     timings, per_engine = {}, {}
-    for be in ("numpy", "jax"):
-        # numpy needs only a BLAS/import warm-up; jax jit-specialises on
-        # the batch shape, so its warm-up must run the full config list
-        run_sweep(cfgs if be == "jax" else cfgs[:2], backend=be)
-        t0 = time.time()
-        per_engine[be] = run_sweep(cfgs, backend=be)
-        timings[be] = time.time() - t0
+    timings["numpy"], per_engine["numpy"] = _timed_grid(cfgs, "numpy")
+    # baseline jax row pins the jnp reference tick — on TPU "auto" would
+    # dispatch the Pallas kernel and the pallas row would compare the
+    # kernel against itself
+    timings["jax"], per_engine["jax"] = _timed_grid(cfgs, "jax", impl="ref")
+    if pallas:
+        # Pallas tick kernel: the interpreter lowers it to XLA on CPU, so
+        # this times kernel *semantics* end-to-end; on a TPU host the same
+        # row times the real fused Mosaic kernel (impl="auto")
+        impl = "auto" if jax.default_backend() == "tpu" else "interpret"
+        timings["pallas"], per_engine["pallas"] = \
+            _timed_grid(cfgs, "jax", impl=impl)
     t0 = time.time()
     ev = [run_simulation(c) for c in cfgs]
     timings["event"] = time.time() - t0
@@ -62,28 +99,42 @@ def sweep_speedup(full: bool = False, backend: str | None = None) -> Dict:
                for e, v in zip(ev, results)]
         return max(abs(r - 1.0) for r in rel)
 
+    engines = {
+        "event": {"seconds": timings["event"]},
+        "numpy": {"seconds": timings["numpy"],
+                  "speedup_vs_event":
+                      timings["event"] / max(timings["numpy"], 1e-9),
+                  "max_progress_deviation": max_dev(per_engine["numpy"])},
+        "jax": {"seconds": timings["jax"],
+                "speedup_vs_event":
+                    timings["event"] / max(timings["jax"], 1e-9),
+                "throughput_vs_numpy":
+                    timings["numpy"] / max(timings["jax"], 1e-9),
+                "max_progress_deviation": max_dev(per_engine["jax"])},
+    }
+    if pallas:
+        engines["pallas"] = {
+            "seconds": timings["pallas"],
+            "tick_impl": ("pallas" if jax.default_backend() == "tpu"
+                          else "interpret"),
+            "speedup_vs_event":
+                timings["event"] / max(timings["pallas"], 1e-9),
+            "throughput_vs_jax_ref":
+                timings["jax"] / max(timings["pallas"], 1e-9),
+            "max_progress_deviation": max_dev(per_engine["pallas"]),
+        }
     res = {
         "sweep": "fig2_stragglers",
         "n_configs": len(cfgs),
         "n_nodes": cfgs[0].n_nodes,
         "duration_s": cfgs[0].duration,
-        "engines": {
-            "event": {"seconds": timings["event"]},
-            "numpy": {"seconds": timings["numpy"],
-                      "speedup_vs_event":
-                          timings["event"] / max(timings["numpy"], 1e-9),
-                      "max_progress_deviation": max_dev(per_engine["numpy"])},
-            "jax": {"seconds": timings["jax"],
-                    "speedup_vs_event":
-                        timings["event"] / max(timings["jax"], 1e-9),
-                    "throughput_vs_numpy":
-                        timings["numpy"] / max(timings["jax"], 1e-9),
-                    "max_progress_deviation": max_dev(per_engine["jax"])},
-        },
+        "engines": engines,
         # acceptance headline: the jax backend must not trail numpy
         "speedup": timings["event"] / max(timings["jax"], 1e-9),
-        "max_progress_deviation": max(max_dev(per_engine["numpy"]),
-                                      max_dev(per_engine["jax"])),
+        # worst deviation of ANY grid engine (incl. the pallas row, which
+        # on TPU is the only place the Mosaic kernel's semantics show up)
+        "max_progress_deviation": max(max_dev(r)
+                                      for r in per_engine.values()),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(res, f, indent=1)
@@ -91,14 +142,22 @@ def sweep_speedup(full: bool = False, backend: str | None = None) -> Dict:
 
 
 def main(argv=None) -> None:
+    """CLI entry: ``python -m benchmarks.sweep_bench [--full] [--no-pallas]``."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="skip the Pallas-tick engine row")
     a = ap.parse_args(argv)
-    res = sweep_speedup(full=a.full)
+    res = sweep_speedup(full=a.full, pallas=not a.no_pallas)
     e = res["engines"]
+    extra = ""
+    if "pallas" in e:
+        extra = (f"pallas={e['pallas']['seconds']:.2f}s"
+                 f"({e['pallas']['tick_impl']}) ")
     print(f"event={e['event']['seconds']:.2f}s "
           f"numpy={e['numpy']['seconds']:.2f}s "
           f"jax={e['jax']['seconds']:.2f}s "
+          f"{extra}"
           f"jax_vs_numpy={e['jax']['throughput_vs_numpy']:.2f}x "
           f"max_dev={res['max_progress_deviation']:.3f}")
 

@@ -1,0 +1,170 @@
+"""The unified straggler/barrier model shared by every jnp execution path.
+
+Before this module existed the SPMD trainer (:mod:`repro.core.spmd_psp`)
+and the vectorized sweep engine's jax backend
+(:mod:`repro.core.vector_sim_jax`) each carried their own copy of the two
+decisions at the heart of PSP:
+
+* **may a worker advance?** — the barrier predicate, evaluated on the full
+  step vector (BSP/SSP), on a β-sample of it (pBSP/pSSP), or not at all
+  (ASP);
+* **how long does a local step take?** — the straggler model (a jittered
+  per-worker duration around a per-worker base speed).
+
+Duplicated models drift (Dynamic-SSP and Elastic-BSP both moved barrier
+decisions *into* the training step for exactly this reason), so this module
+is now the single source: :func:`full_view_allowed`,
+:func:`sampled_allowed` and :func:`step_duration` are the only jnp
+implementations of the predicates, and :class:`BarrierKernel` packages them
+behind the trainer-facing ``allowed(key, steps)`` call.
+``tests/test_barrier_kernel.py`` pins both consumers to these outputs.
+
+The β-sample itself routes through the shared sampling primitive
+(:func:`repro.core.sampling.sample_peer_indices_jax` /
+``sample_alive_peer_indices_jax``), so "which peers does a worker look at"
+also has exactly one definition.  The Pallas tick kernel
+(:mod:`repro.kernels.psp_tick`) fuses an algebraically identical rank-based
+form of :func:`sampled_allowed` on-device; ``tests/test_kernels.py`` holds
+the tick-for-tick equivalence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import (sample_alive_peer_indices_jax,
+                                 sample_peer_indices_jax)
+
+__all__ = ["BarrierKernel", "full_view_allowed", "sampled_allowed",
+           "step_duration"]
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def step_duration(u: jax.Array, base: jax.Array,
+                  jitter: float = 1.0) -> jax.Array:
+    """Duration of one local step: ``base · (1 + jitter·(u − ½))``.
+
+    ``u`` is uniform noise in [0, 1); ``base`` is the per-worker mean step
+    time (straggler slowdowns already folded in — the simulator bakes them
+    into ``compute_time`` at static-init, the trainer multiplies its
+    ``base_compute`` by the slowdown).  The simulator's historical
+    ``compute_time · (½ + u)`` is exactly ``jitter = 1``.
+    """
+    return base * (1.0 + jitter * (u - 0.5))
+
+
+def full_view_allowed(steps: jax.Array, staleness: jax.Array,
+                      alive: Optional[jax.Array] = None) -> jax.Array:
+    """Classic (BSP/SSP) predicate: ``step − min(alive steps) ≤ s``.
+
+    ``steps``: i32[..., W]; ``staleness`` broadcastable against it.  The
+    minimum is taken over **alive** workers only — a departed straggler's
+    frozen counter must never gate waiters (the churn-wake rule).
+    """
+    masked = steps if alive is None else jnp.where(alive, steps, _I32_MAX)
+    return steps - jnp.min(masked, axis=-1, keepdims=True) <= staleness
+
+
+def sampled_allowed(steps: jax.Array, staleness: jax.Array, k_max: int, *,
+                    beta: Optional[jax.Array] = None,
+                    key: Optional[jax.Array] = None,
+                    scores: Optional[jax.Array] = None,
+                    u: Optional[jax.Array] = None,
+                    alive: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Probabilistic (pBSP/pSSP) predicate on a β-sample of ``steps``.
+
+    Each worker draws up to ``k_max`` peers (self excluded, dead peers
+    excluded) through the shared sampling primitive and advances iff no
+    sampled peer lags more than ``staleness`` behind it — the paper's §6.4
+    worker-centric rule.
+
+    Args:
+      steps: i32[..., W] step counters (a leading scenario-batch dim is
+        allowed).
+      staleness: bound s, broadcastable against ``steps``.
+      k_max: static sample-slot count (≥ 1); the per-row effective β may be
+        smaller via ``beta``.
+      beta: optional per-row β, broadcastable against ``steps[..., None]``
+        slot masks; defaults to ``k_max`` everywhere.
+      key: PRNG key used when no pre-drawn noise is supplied.
+      scores: optional pre-drawn uniform score matrix ``[..., W, W]``
+        (shared-score shapes broadcast); forwarded to the sampling
+        primitive so fused kernels can consume the identical draw.
+      u: optional pre-drawn uniforms ``[..., W]`` for the β = 1 fast path
+        (mutually exclusive with ``scores``).
+      alive: optional bool[..., W] membership mask (churn / ragged rows).
+
+    Returns:
+      (allowed, n_sampled): bool[..., W] pass mask and i32[..., W] count of
+      peers actually consulted (the control-plane cost of the decision).
+    """
+    W = steps.shape[-1]
+    if alive is None:
+        take, valid = sample_peer_indices_jax(key, W, k_max, scores=scores,
+                                              u=u)
+        peer = steps[..., take] if steps.ndim > 1 else steps[take]
+        valid = jnp.broadcast_to(valid, peer.shape)
+    else:
+        take, valid = sample_alive_peer_indices_jax(key, alive, k_max,
+                                                    scores=scores)
+        peer = jnp.take_along_axis(
+            jnp.broadcast_to(steps[..., None, :], take.shape[:-1] + (W,)),
+            take, axis=-1)
+    if beta is not None:
+        valid = valid & (jnp.arange(take.shape[-1]) < beta[..., None])
+    lag_ok = steps[..., None] - peer <= staleness[..., None]
+    return jnp.all(lag_ok | ~valid, axis=-1), jnp.sum(valid, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BarrierKernel:
+    """Trainer-facing bundle of the unified barrier + straggler model.
+
+    One instance fixes a barrier policy (name, staleness bound s, sample
+    size β); :meth:`allowed` then answers "may each worker advance?" for a
+    step vector, and :meth:`step_duration` draws step durations — both pure
+    jnp, jit/scan-safe.  :mod:`repro.core.spmd_psp` routes its
+    ``_barrier_allowed`` / ``_duration`` through an instance of this class,
+    and the sweep engine's reference tick uses the same underlying
+    functions, so the two systems cannot silently diverge.
+    """
+
+    barrier: str = "pssp"           # bsp | ssp | asp | pbsp | pssp
+    staleness: int = 0              # bound s (SSP family)
+    beta: int = 0                   # sample slots (probabilistic family)
+
+    @property
+    def is_asp(self) -> bool:
+        """ASP never blocks (the predicate is ⊤)."""
+        return self.barrier == "asp"
+
+    @property
+    def is_full_view(self) -> bool:
+        """Classic barriers evaluate the full step vector."""
+        return self.barrier in ("bsp", "ssp")
+
+    def allowed(self, key: jax.Array, steps: jax.Array,
+                alive: Optional[jax.Array] = None) -> jax.Array:
+        """bool[..., W]: may each worker start its next step?"""
+        if self.is_asp:
+            return jnp.ones(steps.shape, bool)
+        s = jnp.asarray(self.staleness, steps.dtype)
+        if self.is_full_view:
+            return full_view_allowed(steps, s, alive)
+        k = min(self.beta, steps.shape[-1] - 1)
+        if k <= 0:                  # S = ∅ degenerates to ASP
+            return jnp.ones(steps.shape, bool)
+        ok, _ = sampled_allowed(steps, jnp.broadcast_to(s, steps.shape), k,
+                                key=key, alive=alive)
+        return ok
+
+    @staticmethod
+    def step_duration(u: jax.Array, base: jax.Array,
+                      jitter: float = 1.0) -> jax.Array:
+        """See :func:`step_duration` (re-exported for consumers)."""
+        return step_duration(u, base, jitter)

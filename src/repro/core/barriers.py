@@ -166,13 +166,16 @@ class ASP(BarrierControl):
     sample_size: Optional[int] = None
     name: str = "asp"
 
-    def view(self, steps, rng, self_index=None):  # noqa: D102
-        return np.asarray(steps)[:0]  # S = ∅
+    def view(self, steps, rng, self_index=None):
+        """ASP evaluates the empty subset (S = ∅)."""
+        return np.asarray(steps)[:0]
 
-    def can_pass(self, my_step, steps, rng, self_index=None):  # noqa: D102
+    def can_pass(self, my_step, steps, rng, self_index=None):
+        """ASP never blocks."""
         return True
 
-    def can_pass_jax(self, my_step, sampled_steps, valid=None):  # noqa: D102
+    def can_pass_jax(self, my_step, sampled_steps, valid=None):
+        """ASP never blocks (jnp path: all-True of the broadcast shape)."""
         lag = my_step[..., None] - sampled_steps
         return jnp.ones(jnp.broadcast_shapes(lag.shape[:-1]), dtype=bool)
 

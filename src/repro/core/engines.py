@@ -51,6 +51,7 @@ _COMBINATIONS = {
 
 
 def valid_combinations(barrier_name: str) -> Sequence[str]:
+    """Engines that can host ``barrier_name`` (paper §4.1 matrix)."""
     return _COMBINATIONS[barrier_name.lower()]
 
 
@@ -81,9 +82,11 @@ class Engine:
         return np.arange(n_params)
 
     def pull(self):
+        """Fetch the current model (enacted by the simulator)."""
         raise NotImplementedError("driven by the simulator's event loop")
 
     def push(self):
+        """Submit a local update (enacted by the simulator)."""
         raise NotImplementedError("driven by the simulator's event loop")
 
     def _config(self, **cfg_kwargs) -> SimConfig:
@@ -97,6 +100,7 @@ class Engine:
                          **cfg_kwargs)
 
     def run(self, **cfg_kwargs) -> SimResult:
+        """Run one discrete-event simulation under this engine's barrier."""
         return run_simulation(self._config(**cfg_kwargs))
 
     def run_sweep(self, sweep: Iterable[dict], *, backend: str = "numpy",
@@ -108,8 +112,10 @@ class Engine:
         ``common`` applies to every scenario.  Scenarios sharing a
         structural shape are advanced simultaneously
         (:func:`repro.core.vector_sim.run_sweep`); ``backend`` selects the
-        grid engine (``"numpy"`` array ops or ``"jax"`` jit + ``lax.scan``);
-        results come back in sweep order either way.
+        grid engine — ``"numpy"`` array ops, or ``"jax"``: one
+        device-resident ``lax.scan`` whose control-plane tick is the fused
+        kernel of :mod:`repro.kernels.psp_tick` (ragged shapes batch into
+        pow2-bucketed scans); results come back in sweep order either way.
         """
         cfgs = [self._config(**{**common, **kw}) for kw in sweep]
         return run_sweep(cfgs, backend=backend)

@@ -68,6 +68,7 @@ class ChordOverlay:
         return nid
 
     def leave(self, node_id: int) -> None:
+        """Remove a node from the ring."""
         self._ids.remove(node_id)
         del self._nodes[node_id]
 
@@ -152,9 +153,11 @@ class FullMembershipOverlay:
         return self._population
 
     def estimate_population(self, probes: int = 0) -> float:
+        """Full membership knows the population exactly."""
         return float(self._population)
 
     def sample(self, beta: int, exclude: Optional[int] = None) -> List[int]:
+        """Draw β uniform peers without replacement (self excluded)."""
         ids = np.arange(self._population)
         if exclude is not None:
             ids = ids[ids != exclude]
@@ -164,4 +167,5 @@ class FullMembershipOverlay:
         return list(self._rng.choice(ids, size=beta, replace=False))
 
     def sample_cost_hops(self, beta: int) -> int:
-        return beta  # one direct message per sampled peer
+        """One direct message per sampled peer."""
+        return beta

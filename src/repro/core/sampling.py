@@ -59,6 +59,7 @@ class CentralSampler:
 
     def sample(self, steps: Sequence[int], beta: Optional[int],
                exclude: Optional[int] = None) -> StepSample:
+        """Draw β of ``steps`` uniformly (server-side counting process)."""
         steps = np.asarray(steps)
         ids = np.arange(len(steps))
         if exclude is not None:
@@ -101,6 +102,7 @@ class OverlaySampler:
 
     def sample(self, steps: Sequence[int], beta: Optional[int],
                exclude: Optional[int] = None) -> StepSample:
+        """Draw β peers through the overlay, charging lookup hops."""
         steps = np.asarray(steps)
         if beta is None:
             beta = len(steps)
@@ -110,30 +112,43 @@ class OverlaySampler:
         return StepSample(steps[peer_ids], peer_ids, cost_hops=cost)
 
     def estimate_population(self) -> float:
+        """Estimate N from overlay density (paper §4.3)."""
         return self.overlay.estimate_population()
 
 
 def sample_peer_indices_jax(
-    key: jax.Array,
+    key: Optional[jax.Array],
     n: int,
     beta: int,
     *,
     exclude_self: bool = True,
+    scores: Optional[jax.Array] = None,
+    u: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Jittable peer-index sampling: the index core of the β primitive.
 
     For each of the ``n`` workers, draws ``k = min(β, n)`` peer *indices*
     uniformly without replacement (independent per worker).  Shared by the
-    SPMD trainer (:func:`sample_steps_jax`) and the vectorized simulator's
-    jax backend (:mod:`repro.core.vector_sim_jax`), so both systems exercise
-    one sampling primitive.
+    SPMD trainer (:func:`sample_steps_jax`), the unified barrier model
+    (:mod:`repro.core.barrier_kernel`) and the vectorized simulator's
+    jax backend (:mod:`repro.core.vector_sim_jax`), so every system
+    exercises one sampling primitive.
 
     β = 1 short-circuits to a single uniform draw per worker (the paper's
     canonical β = 1% regime); larger β takes the k smallest of a uniform
     score matrix (top-k, not a full argsort).
 
+    The uniform noise may be pre-drawn and passed in (``scores`` for the
+    top-k path, ``u`` for the β = 1 fast path, leading batch dims allowed)
+    — this is how the fused Pallas tick kernel
+    (:mod:`repro.kernels.psp_tick`) and this reference are held to the
+    *identical* sample: both consume the same draw, one by top-k selection,
+    one by an algebraically equivalent rank test.  When no noise is given
+    it is drawn from ``key`` exactly as before.
+
     Returns:
-      take: i32[n, k] — sampled peer indices.
+      take: i32[n, k] — sampled peer indices (leading batch dims follow
+        the supplied noise).
       valid: bool[n, k] — False where β exceeded the peer population.
     """
     k = min(beta, n)
@@ -145,40 +160,46 @@ def sample_peer_indices_jax(
         # one uniform over the n−1 non-self slots, shifted past self;
         # clamped so the degenerate n = 1 population (valid = False)
         # still yields an in-range index, like the top-k path
-        draw = jnp.floor(jax.random.uniform(key, (n,))
-                         * max(n - 1, 1)).astype(jnp.int32)
+        if u is None:
+            u = jax.random.uniform(key, (n,))
+        draw = jnp.floor(u * max(n - 1, 1)).astype(jnp.int32)
         take = jnp.minimum(draw + (draw >= jnp.arange(n, dtype=jnp.int32)),
-                           n - 1)[:, None]
+                           n - 1)[..., None]
     else:
-        scores = jax.random.uniform(key, (n, n))
+        if scores is None:
+            scores = jax.random.uniform(key, (n, n))
         if exclude_self:
-            scores = jnp.fill_diagonal(scores, 2.0, inplace=False)
+            scores = jnp.where(jnp.eye(n, dtype=bool), 2.0, scores)
         _, take = jax.lax.top_k(-scores, k)   # k smallest scores = sample
-    valid = jnp.broadcast_to(jnp.arange(k) < pop, (n, k))
+    valid = jnp.broadcast_to(jnp.arange(k) < pop, take.shape)
     return take.astype(jnp.int32), valid
 
 
 def sample_alive_peer_indices_jax(
-    key: jax.Array,
+    key: Optional[jax.Array],
     alive: jax.Array,
     beta: int,
     *,
     exclude_self: bool = True,
+    scores: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Membership-masked variant of :func:`sample_peer_indices_jax`.
 
     For each worker, draws up to ``min(β, n)`` peers uniformly without
     replacement from the **alive** peer set (churn scenarios: every row of
-    a scenario batch has its own alive mask, so indices cannot be shared).
+    a scenario batch has its own alive mask, so indices cannot be shared;
+    ragged batches: padded node slots are permanently dead).
     A slot is invalid where β exceeded the row's alive-peer population —
     the jittable analogue of the event engine's
     ``beta = min(beta, len(pool))`` over a compressed alive pool.
 
     Args:
-      key: PRNG key.
+      key: PRNG key (unused when ``scores`` is supplied).
       alive: bool[..., n] — membership mask(s); leading dims are batched.
       beta: sample size β ≥ 0.
       exclude_self: do not let a worker sample itself.
+      scores: optional pre-drawn uniform scores ``[..., n, n]`` — the same
+        draw a fused kernel consumes, see :func:`sample_peer_indices_jax`.
 
     Returns:
       take: i32[..., n, k] peer indices, k = min(β, n).
@@ -189,7 +210,8 @@ def sample_alive_peer_indices_jax(
     if k <= 0:
         z = jnp.zeros((*lead, n, 0))
         return z.astype(jnp.int32), z.astype(bool)
-    scores = jax.random.uniform(key, (*lead, n, n))
+    if scores is None:
+        scores = jax.random.uniform(key, (*lead, n, n))
     masked = ~alive[..., None, :]
     if exclude_self:
         masked = masked | jnp.eye(n, dtype=bool)

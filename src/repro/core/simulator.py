@@ -82,6 +82,8 @@ class SimConfig:
 
 @dataclasses.dataclass
 class SimResult:
+    """Measured outputs of one simulation (the paper's Fig-1 traces)."""
+
     steps: np.ndarray               # i64[P] final per-node progress
     times: np.ndarray               # f64[M] measurement grid
     errors: np.ndarray              # f64[M] normalized ‖w−w*‖/‖w*‖
@@ -92,6 +94,7 @@ class SimResult:
     final_error: float
 
     def lag_pmf(self) -> np.ndarray:
+        """Empirical pmf of final step lags behind the leader."""
         lags = self.steps.max() - self.steps
         pmf = np.bincount(lags).astype(np.float64)
         return pmf / pmf.sum()
@@ -326,6 +329,7 @@ class Simulator:
 
     # ------------------------------------------------------------------ #
     def run(self) -> SimResult:
+        """Drive the event loop to the horizon and assemble the result."""
         cfg = self.cfg
         for node in range(cfg.n_nodes):
             self._push(self._step_duration(node), _FINISH, node)

@@ -50,8 +50,8 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.barrier_kernel import BarrierKernel
 from repro.core.barriers import BarrierControl, make_barrier
-from repro.core.sampling import sample_steps_jax
 
 __all__ = ["PSPConfig", "PSPState", "psp_init", "psp_train_step",
            "make_psp_step_fn"]
@@ -76,17 +76,20 @@ class PSPConfig:
     contribution: str = "mean"     # "mean" | "sum" over pushing workers
 
     def make_barrier(self) -> BarrierControl:
+        """Instantiate the configured :class:`BarrierControl` policy."""
         return make_barrier(self.barrier, staleness=self.staleness,
                             sample_size=self.sample_size)
 
     @property
     def beta(self) -> int:
+        """Effective sample size β (0 for classic/ASP barriers)."""
         b = self.make_barrier()
         return 0 if b.sample_size is None else min(b.sample_size,
                                                    self.n_workers - 1)
 
     @property
     def effective_staleness(self) -> int:
+        """Staleness bound s after barrier-specific defaults apply."""
         b = self.make_barrier()
         return int(b.staleness)
 
@@ -97,7 +100,21 @@ class PSPConfig:
 
     @property
     def is_asp(self) -> bool:
+        """ASP never blocks (the barrier predicate is ⊤)."""
         return self.barrier == "asp"
+
+    @property
+    def barrier_kernel(self) -> BarrierKernel:
+        """The unified barrier/straggler model this trainer executes.
+
+        The same :class:`~repro.core.barrier_kernel.BarrierKernel`
+        semantics drive the vectorized sweep engine, so trainer and
+        simulator cannot silently diverge
+        (``tests/test_barrier_kernel.py``).
+        """
+        return BarrierKernel(barrier=self.barrier,
+                             staleness=self.effective_staleness,
+                             beta=self.beta)
 
 
 class PSPState(NamedTuple):
@@ -117,11 +134,17 @@ class PSPState(NamedTuple):
 
 
 def _duration(cfg: PSPConfig, key: jax.Array, slow: jax.Array) -> jax.Array:
-    """Seeded per-worker duration of one local step (virtual seconds)."""
+    """Seeded per-worker duration of one local step (virtual seconds).
+
+    Routed through the unified straggler model
+    (:func:`repro.core.barrier_kernel.step_duration`) — the same formula
+    the sweep engine's grid tick applies, with the straggler slowdown
+    folded into the per-worker base rate.
+    """
     w = slow.shape[0]
-    jit = 1.0 + cfg.compute_jitter * (jax.random.uniform(key, (w,)) - 0.5)
-    mult = jnp.where(slow, cfg.straggler_slowdown, 1.0)
-    return cfg.base_compute * jit * mult
+    base = cfg.base_compute * jnp.where(slow, cfg.straggler_slowdown, 1.0)
+    return BarrierKernel.step_duration(jax.random.uniform(key, (w,)), base,
+                                       cfg.compute_jitter)
 
 
 def psp_init(cfg: PSPConfig, params: PyTree, opt_init: Callable[[PyTree], PyTree],
@@ -152,18 +175,14 @@ def psp_init(cfg: PSPConfig, params: PyTree, opt_init: Callable[[PyTree], PyTree
 
 def _barrier_allowed(cfg: PSPConfig, key: jax.Array, step: jax.Array
                      ) -> jax.Array:
-    """bool[W]: may each worker start its next step, per the barrier?"""
-    w = step.shape[0]
-    if cfg.is_asp:
-        return jnp.ones((w,), bool)
-    if cfg.is_classic:
-        # full view: worker may advance iff it leads the slowest by ≤ s
-        lag = step[:, None] - step[None, :]
-        return jnp.all(lag <= cfg.effective_staleness, axis=1)
-    # probabilistic: β-sample per worker (the sampling primitive)
-    sampled, valid = sample_steps_jax(key, step, cfg.beta)
-    barrier = cfg.make_barrier()
-    return barrier.can_pass_jax(step, sampled, valid)
+    """bool[W]: may each worker start its next step, per the barrier?
+
+    Delegates to the unified barrier model
+    (:meth:`PSPConfig.barrier_kernel`): full-view masked-min for BSP/SSP,
+    a β-sample through the shared sampling primitive for pBSP/pSSP, ⊤ for
+    ASP — exactly the predicate the sweep engine's fused tick evaluates.
+    """
+    return cfg.barrier_kernel.allowed(key, step)
 
 
 def psp_train_step(

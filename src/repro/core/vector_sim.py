@@ -39,11 +39,18 @@ backend      no churn                    churn (alive-masked rows)
 ===========  ==========================  ==========================
 
 Both backends handle churn natively — nothing falls back to the event
-engine.  The jax backend expresses one grid tick as a pure function over
-the ``(B, P)`` state pytree (:mod:`repro.core.vector_sim_jax`) and reuses
-:func:`repro.core.sampling.sample_steps_jax` /
-``sample_peer_indices_jax(exclude_self=True)`` for the β-sample decide
-step, so the simulator and the SPMD trainer share one sampling primitive.
+engine.  The jax backend is device-resident: each grid tick's control
+plane (churn, finish bookkeeping, barrier decisions, start/re-poll) runs
+as one fused kernel — the Pallas tick of :mod:`repro.kernels.psp_tick` on
+TPU, its jnp twin on CPU — inside a single ``lax.scan`` over the whole
+grid (:mod:`repro.core.vector_sim_jax`), with β-samples from the shared
+:mod:`repro.core.sampling` primitives and barrier/straggler semantics
+single-sourced in :mod:`repro.core.barrier_kernel` (the same model the
+SPMD trainer uses).  The jax backend additionally merges structural
+groups that differ only in ``n_nodes`` or churn-ness (ragged P padded
+with permanently-dead alive-mask slots), so a mixed sweep compiles once
+per (dim, batch, grid) shape; see ``docs/ARCHITECTURE.md`` for the full
+engine map.
 
 Simulation model (one grid tick of width ``dt``)
 ------------------------------------------------
@@ -104,15 +111,33 @@ BACKENDS = ("numpy", "jax")
 
 
 def _group_key(cfg: SimConfig) -> Tuple:
-    """Structural fields that must agree within one vectorized batch.
+    """Structural fields that must agree within one numpy batch.
 
     Churn-ness is structural: churn batches carry alive masks and per-row
-    event schedules, and the jax backend specialises its tick function on
-    it (per-row masked sampling vs the shared-index fast path).
+    event schedules, and both backends specialise their tick on it
+    (per-row masked sampling vs the shared-index fast path).
     """
     has_churn = cfg.churn_join_rate > 0.0 or cfg.churn_leave_rate > 0.0
     return (cfg.n_nodes, cfg.dim, cfg.batch, float(cfg.duration),
             float(cfg.measure_interval), float(cfg.poll_interval), has_churn)
+
+
+def _merge_key(cfg: SimConfig) -> Tuple:
+    """Relaxed jax-backend grouping key: ragged P and churn-ness merge.
+
+    The jax backend pads heterogeneous ``n_nodes`` up to the group max and
+    runs the merged batch as **one** ``lax.scan`` — padded node slots are
+    permanently dead alive-mask entries — so a ragged sweep costs one
+    compile per bucket instead of one per structural shape.  P is
+    bucketed to the next power of two: that caps the padding waste of any
+    row at 2× (4× on the P² sampling terms) while still collapsing the
+    near-size shapes a scalability sweep produces.  Only the fields that
+    fix the tick/measurement grids and the data-plane shapes must still
+    agree exactly.
+    """
+    p_bucket = 1 << max(0, cfg.n_nodes - 1).bit_length()
+    return (p_bucket, cfg.dim, cfg.batch, float(cfg.duration),
+            float(cfg.measure_interval), float(cfg.poll_interval))
 
 
 class VectorSimulator:
@@ -126,14 +151,19 @@ class VectorSimulator:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"choose from {BACKENDS}")
         keys = {_group_key(c) for c in configs}
-        if len(keys) > 1:
+        if len(keys) > 1 and (backend != "jax"
+                              or len({_merge_key(c) for c in configs}) > 1):
             raise ValueError(f"heterogeneous batch: {keys} "
-                             "(use run_sweep, which groups automatically)")
+                             "(use run_sweep, which groups automatically; "
+                             "only the jax backend batches ragged P/churn)")
         self.configs = list(configs)
         self.backend = backend
         B = len(configs)
         c0 = configs[0]
-        P, d = c0.n_nodes, c0.dim
+        #: per-row true population; P is the padded batch width (jax only
+        #: — the numpy engine always runs structurally homogeneous batches)
+        self.n_true = np.array([c.n_nodes for c in configs], dtype=np.int64)
+        P, d = int(self.n_true.max()), c0.dim
         self.B, self.P, self.d, self.batch = B, P, d, c0.batch
         self.duration = float(c0.duration)
         self.poll_interval = float(c0.poll_interval)
@@ -150,8 +180,10 @@ class VectorSimulator:
                              or c.churn_leave_rate > 0.0 for c in configs)
 
         # ---- per-row static state: replay the event simulator's init ---- #
+        #: ragged padding mask: slot p exists in row b iff p < n_true[b]
+        self.valid_slot = np.arange(P) < self.n_true[:, None]
         self.w_true = np.empty((B, d))
-        self.compute_time = np.empty((B, P))
+        self.compute_time = np.ones((B, P))
         self.lr = np.empty(B)
         self.noise_std = np.empty(B)
         self.staleness = np.zeros(B, dtype=np.int64)
@@ -160,8 +192,11 @@ class VectorSimulator:
         self.distributed = np.zeros(B, dtype=bool)
         for b, cfg in enumerate(configs):
             rng = np.random.default_rng(cfg.seed)
-            self.w_true[b], self.compute_time[b] = draw_static_state(cfg, rng)
-            self.lr[b] = cfg.lr if cfg.lr is not None else 0.5 / P
+            self.w_true[b], ct = draw_static_state(cfg, rng)
+            self.compute_time[b, :cfg.n_nodes] = ct
+            # default lr scales with the row's TRUE population, not the
+            # padded batch width — grouping must not change results
+            self.lr[b] = cfg.lr if cfg.lr is not None else 0.5 / cfg.n_nodes
             self.noise_std[b] = cfg.noise_std
             bar = cfg.barrier
             self.staleness[b] = bar.staleness
@@ -183,7 +218,7 @@ class VectorSimulator:
         self.w = np.zeros((B, d))
         self.pulled = np.zeros((B, P, d))
         self.steps = np.zeros((B, P), dtype=np.int64)
-        self.alive = np.ones((B, P), dtype=bool)
+        self.alive = self.valid_slot.copy()
         self.computing = np.ones((B, P), dtype=bool)
         #: finish time while computing / next barrier-check time while not
         self.event_time = self.compute_time * (0.5 + self.rng.random((B, P)))
@@ -193,8 +228,11 @@ class VectorSimulator:
         self.total_updates = np.zeros(B, dtype=np.int64)
         self.control_messages = np.zeros(B, dtype=np.int64)
         # per-draw control cost of the structured overlay (β lookups of
-        # O(log N) hops + β step queries), matching OverlaySampler
-        self._hops_per_peer = max(1, int(np.ceil(np.log2(max(P, 2))))) + 1
+        # O(log N) hops + β step queries), matching OverlaySampler;
+        # per-row because a ragged batch mixes populations
+        self.hops_per_peer = np.maximum(
+            1, np.ceil(np.log2(np.maximum(self.n_true, 2)))
+        ).astype(np.int64) + 1
 
         # ---- tick grid + measurement grid ------------------------------- #
         ticks = np.arange(self.dt, self.duration + 1e-9, self.dt)
@@ -338,7 +376,7 @@ class VectorSimulator:
                 dist = self.distributed[bb]
                 if dist.any():
                     self.control_messages += (
-                        self._hops_per_peer
+                        self.hops_per_peer
                         * np.bincount(bb[dist], weights=n_sampled[dist],
                                       minlength=self.B).astype(np.int64))
         return passed
@@ -457,8 +495,9 @@ class VectorSimulator:
                      / self.w_true_norm)
         out = []
         for b in range(self.B):
+            n = int(self.n_true[b])   # drop ragged padding slots
             out.append(SimResult(
-                steps=self.steps[b].copy(),
+                steps=self.steps[b, :n].copy(),
                 times=self.m_times[: errs.shape[1]].copy(),
                 errors=errs[b].copy(),
                 server_updates=upds[b].copy(),
@@ -470,6 +509,7 @@ class VectorSimulator:
         return out
 
     def run(self) -> List[SimResult]:
+        """Advance the batch over the whole tick grid on this backend."""
         if self.backend == "jax":
             from repro.core import vector_sim_jax
             return vector_sim_jax.run_batch(self)
@@ -495,22 +535,29 @@ def run_sweep(configs: Sequence[SimConfig], *,
               backend: str = "numpy") -> List[SimResult]:
     """Run a batch of simulations on the vectorized grid engine.
 
-    Configs are grouped by structural shape (churn-ness included) and each
-    group is advanced as one :class:`VectorSimulator` — churn configs run
-    natively with per-row alive masks; nothing falls back to the
-    event-driven reference.  Results come back in input order, invariant to
-    ``backend`` and grouping.
+    Configs are grouped by structural shape and each group is advanced as
+    one :class:`VectorSimulator` — churn configs run natively with
+    per-row alive masks; nothing falls back to the event-driven reference.
+    The numpy backend groups strictly (identical ``n_nodes`` and
+    churn-ness per batch); the jax backend groups by the relaxed
+    :func:`_merge_key`, padding ragged ``n_nodes`` with permanently-dead
+    alive-mask slots so mixed-size sweeps run as one device-resident
+    ``lax.scan`` per (dim, batch, grid) shape.  Results come back in input
+    order regardless of backend or grouping.
 
     Args:
       configs: scenario list (any mix of shapes/barriers/churn).
       dt: grid width; defaults to each group's ``poll_interval``.
       backend: ``"numpy"`` (array ops per tick) or ``"jax"`` (one jitted
-        ``lax.scan`` over the tick grid, :mod:`repro.core.vector_sim_jax`).
+        ``lax.scan`` over the tick grid with the fused control-plane tick
+        of :mod:`repro.kernels.psp_tick`,
+        :mod:`repro.core.vector_sim_jax`).
     """
     results: List[Optional[SimResult]] = [None] * len(configs)
+    key_fn = _merge_key if backend == "jax" else _group_key
     groups: Dict[Tuple, List[int]] = {}
     for i, cfg in enumerate(configs):
-        groups.setdefault(_group_key(cfg), []).append(i)
+        groups.setdefault(key_fn(cfg), []).append(i)
     for idx in groups.values():
         batch = VectorSimulator([configs[i] for i in idx], dt=dt,
                                 backend=backend).run()

@@ -1,10 +1,18 @@
-"""JAX backend of the vectorized sweep engine: one jitted ``lax.scan``.
+"""JAX backend of the vectorized sweep engine: one device-resident scan.
 
-One grid tick (churn → finish → decide → start → measure) is a pure
-function over the ``(B, P)`` state pytree; :func:`run_batch` drives it with
-``lax.scan`` under ``jit`` over the whole tick grid, so a full scenario
-batch advances without touching Python between ticks — the accelerator
-(or the XLA CPU loop) stays busy for the entire sweep.
+One grid tick splits into a *control plane* (churn, finish bookkeeping,
+barrier decisions, start/re-poll anchoring over the ``(B, P)`` state
+pytree) and a *data plane* (the masked SGD push, a batched einsum).  The
+control plane runs as one fused kernel — the Pallas tick
+(:mod:`repro.kernels.psp_tick`) on TPU, its pure-jnp twin on CPU, selected
+by :func:`repro.kernels.ops.psp_tick` with ``impl="auto"`` (override with
+the ``PSP_TICK_IMPL`` env var, e.g. ``interpret`` to exercise the kernel
+on CPU).  :func:`run_batch` drives the whole tick grid with ``lax.scan``
+under ``jit``: the state pytree never leaves the device during the sweep —
+inputs are staged up front, the scan carries everything, and exactly one
+``device_get`` at the end fetches traces plus final state
+(``tests/test_vector_sim_jax.py`` holds a ``transfer_guard`` test on
+this).
 
 Semantics mirror :class:`repro.core.vector_sim.VectorSimulator`'s numpy
 tick exactly (same phases, same anchoring, same alive-mask churn rules);
@@ -14,99 +22,94 @@ agree at the distribution level and each is individually deterministic
 
 Design notes for the hot path:
 
-* The β-sample decide step reuses the SPMD trainer's sampling primitive
-  (:func:`repro.core.sampling.sample_steps_jax` with ``exclude_self=True``
-  over ``[B, W]`` batched steps; the alive-masked
-  :func:`repro.core.sampling.sample_alive_peer_indices_jax` under churn) —
-  the simulator and the trainer exercise one sampling primitive.
+* Barrier predicates and the straggler duration model are single-sourced
+  in :mod:`repro.core.barrier_kernel` — the same code the SPMD trainer
+  (:mod:`repro.core.spmd_psp`) routes through — and β-samples come from
+  the shared :mod:`repro.core.sampling` primitives.  All per-tick noise is
+  drawn outside the kernel, so every ``impl`` consumes an identical RNG
+  stream.
 * Without churn, one peer-index draw per tick is shared across the B
   scenario rows (each row's marginal stays an exact uniform β-sample);
   likewise one minibatch draw per (tick, node) is shared across rows.
   Cross-row correlation is irrelevant for per-row statistics — use the
   numpy backend when cross-row independence matters (it decorrelates via
   finisher-ordered stream consumption).
+* Ragged batches: scenario groups that differ only in ``n_nodes`` (and
+  churn-ness) are padded to a common P and merged into **one** scan —
+  padded node slots are permanently dead ``alive``-mask entries that the
+  masked-min barrier, the alive-masked β-sample and the join pool all
+  ignore (``valid_slot`` guards joins), so ragged sweeps cost one compile
+  instead of one per shape.
 * Times are f32 (no global x64 flag); the due-comparison epsilon scales
   with ``dt`` to stay above f32 resolution at the horizon.
 * The compiled scan is cached by structural signature
-  (``P, d, batch, k_max, has_churn``) so repeated sweeps of the same shape
-  (the common benchmark/test pattern) compile once.
+  (``P, d, batch, k_max, has_churn, masked, impl``) so repeated sweeps of
+  the same shape (the common benchmark/test pattern) compile once.
 """
 from __future__ import annotations
 
 import functools
-from typing import List
+import os
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.sampling import (sample_alive_peer_indices_jax,
-                                 sample_steps_jax)
 from repro.core.simulator import SimResult
+from repro.kernels import ops
 
-__all__ = ["run_batch"]
+__all__ = ["run_batch", "tick_impl"]
 
-_I32_MAX = np.iinfo(np.int32).max
-_I32_MIN = np.iinfo(np.int32).min
+
+def tick_impl() -> str:
+    """Control-plane tick implementation (``PSP_TICK_IMPL`` env override).
+
+    ``auto`` (default): Pallas kernel on TPU, jnp reference elsewhere;
+    ``pallas`` / ``interpret`` / ``ref`` force a path (``interpret`` runs
+    the kernel through the Pallas interpreter — the CPU test/bench path).
+    """
+    return os.environ.get("PSP_TICK_IMPL", "auto")
 
 
 @functools.lru_cache(maxsize=32)
-def _compiled_scan(P: int, d: int, batch: int, k_max: int, has_churn: bool):
+def _compiled_scan(P: int, d: int, batch: int, k_max: int, has_churn: bool,
+                   masked: bool, impl: str):
     """Jitted scan over the tick grid, specialised on structural shape."""
 
     def tick(params, carry, x):
         t, i, leave_n, join_n = x
-        eps, poll = params["eps"], params["poll"]
-        alive = carry["alive"]
-        steps = carry["steps"]
-        computing = carry["computing"]
-        event_time = carry["event_time"]
-        ready = carry["ready"]
-        blocked = carry["blocked"]
-        w, pulled = carry["w"], carry["pulled"]
-        B = w.shape[0]
+        state = {k: carry[k] for k in
+                 ("steps", "alive", "computing", "event_time", "ready",
+                  "blocked", "pend_leave", "pend_join")}
+        B = state["steps"].shape[0]
         tk = jax.random.fold_in(params["key"], i)
         k_mini, k_samp, k_dur, *k_rest = jax.random.split(
             tk, 4 if has_churn else 3)
 
-        # 0. churn: one pre-sampled leave/join event per row per tick
-        #    (multi-event ticks carry the surplus forward — they are rare,
-        #    and the event engine's Poisson totals are preserved)
+        # pre-draw this tick's noise (identical stream for every impl)
+        rand = {"dur": jax.random.uniform(k_dur, (B, P))}
+        if k_max > 0:
+            if masked:
+                rand["scores"] = jax.random.uniform(k_samp, (B, P, P))
+            elif k_max == 1:
+                rand["u1"] = jax.random.uniform(k_samp, (P,))
+            else:
+                rand["scores"] = jax.random.uniform(k_samp, (P, P))
         if has_churn:
-            k_churn, = k_rest
-            pend_l = carry["pend_leave"] + leave_n
-            pend_j = carry["pend_join"] + join_n
-            u_l, u_j = jax.random.uniform(k_churn, (2, B, P))
-            # leave: kill a uniform alive node (only while > 2 are alive)
-            do_l = (pend_l > 0) & (jnp.sum(alive, axis=1) > 2)
-            victim = jnp.argmax(jnp.where(alive, u_l, -1.0), axis=1)
-            v_oh = victim[:, None] == jnp.arange(P)
-            alive = alive & ~(do_l[:, None] & v_oh)
-            # join: revive a uniform dead node at the max alive step;
-            #       it decides this tick
-            do_j = (pend_j > 0) & ~jnp.all(alive, axis=1)
-            joiner = jnp.argmax(jnp.where(alive, -1.0, u_j), axis=1)
-            sel = do_j[:, None] & (joiner[:, None] == jnp.arange(P))
-            alive = alive | sel
-            fresh = jnp.max(jnp.where(alive, steps, _I32_MIN), axis=1)
-            steps = jnp.where(sel, fresh[:, None], steps)
-            computing = computing & ~sel
-            event_time = jnp.where(sel, t, event_time)
-            ready = jnp.where(sel, t, ready)
-            blocked = blocked & ~sel
-            carry_churn = {"pend_leave": pend_l - (pend_l > 0),
-                           "pend_join": pend_j - (pend_j > 0)}
-        else:
-            carry_churn = {"pend_leave": carry["pend_leave"],
-                           "pend_join": carry["pend_join"]}
+            u_l, u_j = jax.random.uniform(k_rest[0], (2, B, P))
+            rand["leave"], rand["join"] = u_l, u_j
 
-        # 1. finishes: push updates, advance steps, become "deciding"
-        fin = computing & alive & (event_time <= t + eps)
-        any_fin = jnp.any(fin, axis=1)
-        row_last = jnp.max(jnp.where(fin, event_time, -jnp.inf), axis=1)
-        row_unblock = jnp.where(any_fin, jnp.minimum(row_last, t), t)
-        # one minibatch draw per (tick, node), shared across rows
+        # fused control-plane tick: churn → finish → decide → start
+        state, out = ops.psp_tick(state, rand, params, t, leave_n, join_n,
+                                  k_max=k_max, has_churn=has_churn,
+                                  masked=masked, impl=impl)
+
+        # data plane: masked SGD push for every node that finished.
+        # One minibatch draw per (tick, node), shared across rows.
+        fin = out["fin"]
+        w, pulled = carry["w"], carry["pulled"]
         blob = jax.random.normal(k_mini, (P, batch, d + 1),
                                  dtype=jnp.float32)
         X, mb_noise = blob[..., :d], blob[..., d]
@@ -116,69 +119,14 @@ def _compiled_scan(P: int, d: int, batch: int, k_max: int, has_churn: bool):
         grads = jnp.einsum("kpb,pbd->kpd", resid, X) / batch
         gsum = jnp.sum(jnp.where(fin[..., None], grads, 0.0), axis=1)
         w = w - params["lr"][:, None] * gsum
-        total_updates = carry["total_updates"] + jnp.sum(fin, axis=1)
-        steps = steps + fin
-        computing = computing & ~fin
-        ready = jnp.where(fin, event_time, ready)
-        blocked = blocked & ~fin
+        pulled = jnp.where(out["start"][..., None], w[:, None, :], pulled)
 
-        # 2. barrier decisions for every due deciding node
-        cand = ~computing & alive & (event_time <= t + eps)
-        min_alive = jnp.min(jnp.where(alive, steps, _I32_MAX), axis=1)
-        pass_fv = steps - min_alive[:, None] <= params["staleness"][:, None]
-        if k_max > 0:
-            if has_churn:
-                take, valid = sample_alive_peer_indices_jax(
-                    k_samp, alive, k_max, exclude_self=True)
-                valid = valid & (jnp.arange(k_max)
-                                 < params["beta_clip"][:, None, None])
-                peer_steps = jnp.take_along_axis(steps[:, None, :], take,
-                                                 axis=-1)
-            else:
-                # the SPMD trainer's primitive, batched over scenario rows
-                # (one index draw shared across B; exact per-row marginals)
-                peer_steps, valid = sample_steps_jax(
-                    k_samp, steps, k_max, exclude_self=True)
-                valid = valid & (jnp.arange(k_max)
-                                 < params["beta_clip"][:, None, None])
-            lag_ok = (steps[:, :, None] - peer_steps
-                      <= params["staleness"][:, None, None])
-            pass_sm = jnp.all(lag_ok | ~valid, axis=-1)
-            n_sampled = jnp.sum(valid, axis=-1)
-        else:
-            pass_sm = jnp.ones((B, P), dtype=bool)
-            n_sampled = jnp.zeros((B, P), dtype=jnp.int32)
-        passed = jnp.where(params["is_asp"][:, None], True,
-                           jnp.where(params["full_view"][:, None],
-                                     pass_fv, pass_sm))
-        # distributed sampled rows pay β lookups per decide attempt
-        control = carry["control"] + jnp.sum(
-            jnp.where(cand, n_sampled * params["dist_hops"][:, None], 0),
-            axis=1)
-
-        # 3. starts / re-polls
-        start = cand & passed
-        t0 = jnp.where(blocked & params["full_view"][:, None],
-                       jnp.maximum(row_unblock[:, None], ready), ready)
-        dur = params["compute_time"] * (
-            0.5 + jax.random.uniform(k_dur, (B, P)))
-        event_time = jnp.where(start, t0 + dur, event_time)
-        pulled = jnp.where(start[..., None], w[:, None, :], pulled)
-        computing = computing | start
-        fail = cand & ~passed
-        blocked = (blocked | fail) & ~start
-        sm_fail = fail & params["sampled"][:, None]
-        ready = jnp.where(sm_fail, ready + poll, ready)
-        event_time = jnp.where(sm_fail, ready, event_time)
-
-        # 4. per-tick trace (measurement grid selected by the caller)
         err = (jnp.linalg.norm(w - params["w_true"], axis=1)
                / params["w_true_norm"])
-        carry = {"w": w, "pulled": pulled, "steps": steps, "alive": alive,
-                 "computing": computing, "event_time": event_time,
-                 "ready": ready, "blocked": blocked,
-                 "total_updates": total_updates, "control": control,
-                 **carry_churn}
+        total_updates = carry["total_updates"] + out["n_fin"]
+        carry = {**state, "w": w, "pulled": pulled,
+                 "total_updates": total_updates,
+                 "control": carry["control"] + out["ctrl"]}
         return carry, (err, total_updates)
 
     def scan_fn(params, carry, xs):
@@ -187,17 +135,18 @@ def _compiled_scan(P: int, d: int, batch: int, k_max: int, has_churn: bool):
     return jax.jit(scan_fn)
 
 
-def run_batch(sim) -> List[SimResult]:
-    """Run a :class:`~repro.core.vector_sim.VectorSimulator` batch on jax.
+def _prepare(sim) -> Tuple:
+    """Stage a batch: (compiled scan, params, carry, xs) — all device-ready.
 
-    Consumes the simulator's numpy-initialised static state (identical to
-    the numpy backend: per-seed init replay, initial busy clocks, churn
-    schedules), scans the tick grid under jit, and writes the final state
-    back so result assembly is shared with the numpy path.
+    Everything the grid loop touches is materialised here, so the scan
+    itself performs zero host transfers; the zero-copy test in
+    ``tests/test_vector_sim_jax.py`` runs this staging, then executes the
+    scan under ``jax.transfer_guard("disallow")``.
     """
     B, P, d = sim.B, sim.P, sim.d
     f32 = jnp.float32
     k_max = int(min(max(int(sim.beta.max(initial=-1)), 0), P - 1))
+    masked = sim.has_churn or bool((sim.n_true < P).any())
     eps = max(1e-9, 1e-3 * sim.dt)   # above f32 resolution at the horizon
 
     seed = np.random.SeedSequence(
@@ -212,12 +161,14 @@ def run_batch(sim) -> List[SimResult]:
         "lr": jnp.asarray(sim.lr, f32),
         "noise_std": jnp.asarray(sim.noise_std, f32),
         "staleness": jnp.asarray(sim.staleness, jnp.int32),
-        "beta_clip": jnp.asarray(np.clip(sim.beta, 0, P - 1), jnp.int32),
+        "beta_clip": jnp.asarray(
+            np.clip(sim.beta, 0, sim.n_true - 1), jnp.int32),
         "is_asp": jnp.asarray(sim.is_asp),
         "full_view": jnp.asarray(sim.full_view),
         "sampled": jnp.asarray(sim.sampled),
+        "valid_slot": jnp.asarray(sim.valid_slot),
         "dist_hops": jnp.asarray(
-            np.where(sim.distributed & sim.sampled, sim._hops_per_peer, 0),
+            np.where(sim.distributed & sim.sampled, sim.hops_per_peer, 0),
             jnp.int32),
     }
     carry = {
@@ -242,9 +193,26 @@ def run_batch(sim) -> List[SimResult]:
         lc = jc = jnp.zeros((T, B), jnp.int32)
     xs = (jnp.asarray(sim.ticks, f32), jnp.arange(T, dtype=jnp.int32),
           lc, jc)
+    scan = _compiled_scan(P, d, sim.batch, k_max, sim.has_churn, masked,
+                          tick_impl())
+    return scan, params, carry, xs
 
-    scan = _compiled_scan(P, d, sim.batch, k_max, sim.has_churn)
-    final, (err_t, upd_t) = jax.block_until_ready(scan(params, carry, xs))
+
+def run_batch(sim) -> List[SimResult]:
+    """Run a :class:`~repro.core.vector_sim.VectorSimulator` batch on jax.
+
+    Consumes the simulator's numpy-initialised static state (identical to
+    the numpy backend: per-seed init replay, initial busy clocks, churn
+    schedules), scans the tick grid under jit with the fused control-plane
+    tick, and writes the final state back so result assembly is shared
+    with the numpy path.  One ``device_get`` per sweep moves the traces
+    and final state to the host together.
+    """
+    B = sim.B
+    scan, params, carry, xs = _prepare(sim)
+    final, (err_t, upd_t) = scan(params, carry, xs)
+    final, err_t, upd_t = jax.device_get(
+        jax.block_until_ready((final, err_t, upd_t)))
 
     # select the measurement grid: value at m_j = state after the first
     # tick t with m_j ≤ t + eps (the numpy engine's while-loop rule),

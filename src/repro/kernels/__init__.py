@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels and their dispatch layer.
+
+Hot-spot kernels for the PSP reproduction: flash attention, RMSNorm and
+the SSD scan serve the model zoo, and :mod:`repro.kernels.psp_tick` fuses
+the sweep engine's per-tick barrier/churn control plane (the paper's
+sampling primitive evaluated on-device).  Call through
+:mod:`repro.kernels.ops` — ``impl="auto"`` picks the Pallas kernel on TPU
+and the pure-jnp reference elsewhere; ``impl="interpret"`` runs the kernel
+through the Pallas interpreter for CPU tests.  Oracles live in
+:mod:`repro.kernels.ref`.
+"""

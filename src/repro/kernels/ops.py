@@ -15,14 +15,29 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.psp_tick import psp_tick_ref, psp_tick_tpu
 from repro.kernels.rmsnorm import rmsnorm_tpu
 from repro.kernels.ssd_scan import ssd_scan_tpu
 
-__all__ = ["attention", "ssd", "rmsnorm"]
+__all__ = ["attention", "ssd", "rmsnorm", "psp_tick"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _dispatch(impl: str):
+    """(use_kernel, interpret) for an ``impl`` string; typos fail loudly.
+
+    ``ref``/``cpu`` both name the pure-jnp reference; an unknown string
+    (e.g. a mistyped ``PSP_TICK_IMPL``) raises instead of silently
+    running the reference while claiming to time the kernel.
+    """
+    if impl not in ("auto", "pallas", "interpret", "ref", "cpu"):
+        raise ValueError(f"unknown impl {impl!r}; choose from "
+                         "auto|pallas|interpret|ref|cpu")
+    return (impl == "pallas" or (impl == "auto" and _on_tpu()),
+            impl == "interpret")
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
@@ -32,8 +47,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               softcap: Optional[float] = None,
               impl: str = "auto") -> jax.Array:
     """q,k,v: (B, S, H, hd) MHA layout → (B, S, H, hd)."""
-    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
-    interp = impl == "interpret"
+    use_kernel, interp = _dispatch(impl)
     if use_kernel or interp:
         o = flash_attention_tpu(q.transpose(0, 2, 1, 3),
                                 k.transpose(0, 2, 1, 3),
@@ -49,8 +63,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def ssd(xdt: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array, *,
         chunk: int = 128, impl: str = "auto") -> jax.Array:
     """Chunked SSD over (BH, S, ·) tensors (see ssd_scan_tpu)."""
-    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
-    interp = impl == "interpret"
+    use_kernel, interp = _dispatch(impl)
     if use_kernel or interp:
         return ssd_scan_tpu(xdt, dA, Bm, Cm, chunk=chunk, interpret=interp)
     # reference path: reconstruct (x·dt, dt·A) → sequential recurrence.
@@ -79,8 +92,29 @@ def ssd(xdt: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array, *,
 @functools.partial(jax.jit, static_argnames=("eps", "impl"))
 def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
             impl: str = "auto") -> jax.Array:
-    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
-    interp = impl == "interpret"
+    """RMS-normalise the trailing axis of ``x`` with gain ``w``."""
+    use_kernel, interp = _dispatch(impl)
     if use_kernel or interp:
         return rmsnorm_tpu(x, w, eps=eps, interpret=interp)
     return ref.rmsnorm_ref(x, w, eps)
+
+
+def psp_tick(state, rand, params, t, leave_n, join_n, *,
+             k_max: int, has_churn: bool, masked: bool, impl: str = "auto"):
+    """One fused PSP sweep-grid control-plane tick (see
+    :mod:`repro.kernels.psp_tick`).
+
+    Dispatch mirrors the other wrappers: ``impl="auto"`` runs the Pallas
+    kernel on TPU and the pure-jnp reference elsewhere; ``"pallas"`` /
+    ``"interpret"`` / ``"ref"`` force a path.  Both paths consume the same
+    pre-drawn noise in ``rand``, so the sweep's RNG stream — and therefore
+    its golden traces — are independent of ``impl``.  Not jitted here: the
+    caller's ``lax.scan`` (:mod:`repro.core.vector_sim_jax`) traces it.
+    """
+    use_kernel, interp = _dispatch(impl)
+    if use_kernel or interp:
+        return psp_tick_tpu(state, rand, params, t, leave_n, join_n,
+                            k_max=k_max, has_churn=has_churn, masked=masked,
+                            interpret=interp)
+    return psp_tick_ref(state, rand, params, t, leave_n, join_n,
+                        k_max=k_max, has_churn=has_churn, masked=masked)

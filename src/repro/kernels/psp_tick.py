@@ -1,0 +1,445 @@
+"""Pallas TPU kernel for one PSP sweep-grid tick (the control plane).
+
+One grid tick of the vectorized sweep engine
+(:mod:`repro.core.vector_sim_jax`) is two very different workloads glued
+together: a *data-plane* SGD push (a batched matmul XLA already schedules
+well) and a *control-plane* update over the ``(B, P)`` scenario state —
+churn, finish bookkeeping, the masked-min full-view barrier, the β-sample
+barrier predicate, and start/re-poll anchoring.  The control plane is a
+swarm of tiny masked element-wise ops and row reductions; left to XLA it
+becomes dozens of kernels per tick.  This module fuses it into **one**
+Pallas kernel, one grid row per scenario, so a whole tick's barrier logic
+runs out of VMEM with no intermediate HBM traffic.
+
+Two implementations, held tick-for-tick identical by
+``tests/test_kernels.py``:
+
+* :func:`psp_tick_ref` — pure jnp reference.  β-sampling routes through
+  the shared primitives (:func:`repro.core.sampling.sample_peer_indices_jax`
+  / ``sample_alive_peer_indices_jax``) and the unified barrier model
+  (:mod:`repro.core.barrier_kernel`), i.e. the exact code the SPMD trainer
+  uses.  This is what ``impl="auto"`` runs on CPU.
+* :func:`psp_tick_tpu` — the Pallas kernel.  Selecting β peers by top-k
+  needs a gather, which the TPU vector unit hates; the kernel instead
+  consumes the *same* uniform score matrix and evaluates the predicate by
+  rank: a lagging peer is inside the β-sample iff fewer than β eligible
+  peers precede it in ``(score, index)`` order.  Ties break exactly like
+  ``lax.top_k`` (lower index first), so the two paths agree draw-for-draw,
+  not just in distribution.
+
+All randomness is drawn *outside* (plain ``jax.random`` on-device) and
+passed in, so ref and kernel consume identical noise and the sweep's RNG
+stream is independent of ``impl``.
+
+Shapes and state layout (``B`` scenario rows × ``P`` node slots):
+
+========== ============ ==================================================
+key         shape        meaning
+========== ============ ==================================================
+steps       i32[B, P]    logical clock per node
+alive       bool[B, P]   membership (churn / ragged padding)
+computing   bool[B, P]   node busy with a local step
+event_time  f32[B, P]    finish time while computing, else next check time
+ready       f32[B, P]    continuous anchor of the current decide attempt
+blocked     bool[B, P]   failed its last barrier check
+pend_*      i32[B]       carried-over churn events (≤ 1 fires per tick)
+========== ============ ==================================================
+
+VMEM budget: the dominant buffer is one ``P × P`` f32 score matrix per
+grid row (~4 MB at P = 1024), comfortably resident; P beyond ~1500 would
+need a lane-tiled variant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import barrier_kernel
+
+__all__ = ["psp_tick_ref", "psp_tick_tpu", "STATE_KEYS"]
+
+#: carried control-plane state, in canonical order
+STATE_KEYS = ("steps", "alive", "computing", "event_time", "ready",
+              "blocked", "pend_leave", "pend_join")
+
+_I32_MAX = np.iinfo(np.int32).max
+_I32_MIN = np.iinfo(np.int32).min
+
+
+# --------------------------------------------------------------------------- #
+# pure-jnp reference (the CPU path of ops.psp_tick)
+# --------------------------------------------------------------------------- #
+def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
+                 params: Dict[str, jax.Array], t: jax.Array,
+                 leave_n: jax.Array, join_n: jax.Array, *,
+                 k_max: int, has_churn: bool, masked: bool,
+                 ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """One control-plane tick, batched over B scenario rows (pure jnp).
+
+    Args:
+      state: the ``(B, P)`` control-plane pytree (:data:`STATE_KEYS`).
+      rand: pre-drawn uniforms — ``dur`` f32[B, P]; plus ``scores``
+        (f32[B, P, P] when ``masked`` else f32[P, P]) or ``u1`` f32[P]
+        (β = 1 fast path) when ``k_max > 0``; plus ``leave``/``join``
+        f32[B, P] when ``has_churn``.
+      params: per-row policy arrays — ``staleness``/``beta_clip``/
+        ``dist_hops`` i32[B]; ``is_asp``/``full_view``/``sampled`` bool[B];
+        ``compute_time`` f32[B, P]; ``valid_slot`` bool[B, P] (ragged
+        padding mask); scalars ``eps``/``poll``.
+      t: f32[] — this tick's grid time.
+      leave_n / join_n: i32[B] — churn events due this tick.
+      k_max: static max sample-slot count over the batch.
+      has_churn: static — whether churn state/noise is present.
+      masked: static — per-row alive-masked sampling (churn or ragged).
+
+    Returns:
+      (new_state, out) where ``out`` holds ``fin``/``start`` bool[B, P]
+      node masks and ``n_fin``/``ctrl`` i32[B] row counters.
+    """
+    steps, alive = state["steps"], state["alive"]
+    computing, blocked = state["computing"], state["blocked"]
+    event_time, ready = state["event_time"], state["ready"]
+    B, P = steps.shape
+    eps, poll = params["eps"], params["poll"]
+    iota = jnp.arange(P, dtype=jnp.int32)
+
+    # 0. churn: at most one pre-sampled leave/join fires per row per tick
+    #    (surplus carries forward in pend_*; Poisson totals are preserved)
+    if has_churn:
+        pend_l = state["pend_leave"] + leave_n
+        pend_j = state["pend_join"] + join_n
+        do_l = (pend_l > 0) & (jnp.sum(alive, axis=1) > 2)
+        victim = jnp.argmax(jnp.where(alive, rand["leave"], -1.0), axis=1)
+        v_oh = victim[:, None] == iota
+        alive = alive & ~(do_l[:, None] & v_oh)
+        pool = ~alive & params["valid_slot"]
+        do_j = (pend_j > 0) & jnp.any(pool, axis=1)
+        joiner = jnp.argmax(jnp.where(pool, rand["join"], -1.0), axis=1)
+        sel = do_j[:, None] & (joiner[:, None] == iota)
+        alive = alive | sel
+        fresh = jnp.max(jnp.where(alive, steps, _I32_MIN), axis=1)
+        steps = jnp.where(sel, fresh[:, None], steps)
+        computing = computing & ~sel
+        event_time = jnp.where(sel, t, event_time)
+        ready = jnp.where(sel, t, ready)
+        blocked = blocked & ~sel
+        pend_leave = pend_l - (pend_l > 0)
+        pend_join = pend_j - (pend_j > 0)
+    else:
+        pend_leave, pend_join = state["pend_leave"], state["pend_join"]
+
+    # 1. finishes: advance steps, become "deciding"; the data-plane push
+    #    happens outside on the returned fin mask
+    fin = computing & alive & (event_time <= t + eps)
+    any_fin = jnp.any(fin, axis=1)
+    row_last = jnp.max(jnp.where(fin, event_time, -jnp.inf), axis=1)
+    row_unblock = jnp.where(any_fin, jnp.minimum(row_last, t), t)
+    steps = steps + fin
+    computing = computing & ~fin
+    ready = jnp.where(fin, event_time, ready)
+    blocked = blocked & ~fin
+
+    # 2. barrier decisions for every due deciding node, through the
+    #    unified barrier model (single source with the SPMD trainer)
+    cand = ~computing & alive & (event_time <= t + eps)
+    stal = jnp.broadcast_to(params["staleness"][:, None], (B, P))
+    pass_fv = barrier_kernel.full_view_allowed(steps, stal, alive)
+    if k_max > 0:
+        pass_sm, n_sampled = barrier_kernel.sampled_allowed(
+            steps, stal, k_max, beta=params["beta_clip"][:, None],
+            scores=rand.get("scores"), u=rand.get("u1"),
+            alive=alive if masked else None)
+    else:
+        pass_sm = jnp.ones((B, P), dtype=bool)
+        n_sampled = jnp.zeros((B, P), dtype=jnp.int32)
+    passed = jnp.where(params["is_asp"][:, None], True,
+                       jnp.where(params["full_view"][:, None],
+                                 pass_fv, pass_sm))
+    ctrl = jnp.sum(
+        jnp.where(cand, n_sampled * params["dist_hops"][:, None], 0),
+        axis=1).astype(jnp.int32)
+
+    # 3. starts / re-polls, anchored at continuous ready times
+    start = cand & passed
+    t0 = jnp.where(blocked & params["full_view"][:, None],
+                   jnp.maximum(row_unblock[:, None], ready), ready)
+    dur = barrier_kernel.step_duration(rand["dur"], params["compute_time"])
+    event_time = jnp.where(start, t0 + dur, event_time)
+    computing = computing | start
+    fail = cand & ~passed
+    blocked = (blocked | fail) & ~start
+    sm_fail = fail & params["sampled"][:, None]
+    ready = jnp.where(sm_fail, ready + poll, ready)
+    event_time = jnp.where(sm_fail, ready, event_time)
+
+    new_state = {"steps": steps, "alive": alive, "computing": computing,
+                 "event_time": event_time, "ready": ready,
+                 "blocked": blocked, "pend_leave": pend_leave,
+                 "pend_join": pend_join}
+    out = {"fin": fin, "start": start,
+           "n_fin": jnp.sum(fin, axis=1).astype(jnp.int32), "ctrl": ctrl}
+    return new_state, out
+
+
+# --------------------------------------------------------------------------- #
+# Pallas kernel (one grid row per scenario)
+# --------------------------------------------------------------------------- #
+def _first_argmax(scores: jax.Array, mask: jax.Array,
+                  jj: jax.Array, P: int) -> jax.Array:
+    """Index of the first maximum of ``scores`` under ``mask`` (2D-safe).
+
+    The lowest index attaining the masked maximum — exactly
+    ``jnp.argmax(where(mask, scores, -1))`` for scores in [0, 1), written
+    with reductions only (no argmax lowering dependence).
+    """
+    s = jnp.where(mask, scores, -1.0)
+    m = jnp.max(s)
+    return jnp.min(jnp.where(s == m, jj, P))
+
+
+def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
+                 use_u1: bool, P: int):
+    """Kernel body: one scenario row's full control-plane tick in VMEM."""
+    it = iter(refs)
+    steps_ref, alive_ref, computing_ref, event_ref, ready_ref, blocked_ref,\
+        pl_ref, pj_ref = (next(it) for _ in range(8))
+    ln_ref, jn_ref = next(it), next(it)
+    u_dur_ref = next(it)
+    samp_ref = next(it) if (k_max > 0) else None
+    ul_ref = next(it) if has_churn else None
+    uj_ref = next(it) if has_churn else None
+    ct_ref, vs_ref = next(it), next(it)
+    stal_ref, beta_ref, asp_ref, fv_ref, sm_ref, dh_ref = \
+        (next(it) for _ in range(6))
+    t_ref, eps_ref, poll_ref = next(it), next(it), next(it)
+    (o_steps, o_alive, o_comp, o_event, o_ready, o_block, o_pl, o_pj,
+     o_fin, o_start, o_nfin, o_ctrl) = (next(it) for _ in range(12))
+
+    i32 = jnp.int32
+    steps = steps_ref[...]                      # (1, P) i32
+    alive = alive_ref[...] != 0
+    computing = computing_ref[...] != 0
+    event_time = event_ref[...]
+    ready = ready_ref[...]
+    blocked = blocked_ref[...] != 0
+    valid_slot = vs_ref[...] != 0
+    t = t_ref[0, 0]
+    eps, poll = eps_ref[0, 0], poll_ref[0, 0]
+    stal, beta = stal_ref[0, 0], beta_ref[0, 0]
+    iota = jax.lax.broadcasted_iota(i32, (1, P), 1)
+    jj = jax.lax.broadcasted_iota(i32, (P, P), 1)
+
+    # 0. churn: one pre-sampled leave/join per row per tick
+    if has_churn:
+        pend_l = pl_ref[0, 0] + ln_ref[0, 0]
+        pend_j = pj_ref[0, 0] + jn_ref[0, 0]
+        do_l = (pend_l > 0) & (jnp.sum(alive.astype(i32)) > 2)
+        vid = _first_argmax(ul_ref[...], alive, iota, P)
+        alive = alive & ~(do_l & (iota == vid))
+        pool = ~alive & valid_slot
+        do_j = (pend_j > 0) & jnp.any(pool)
+        jid = _first_argmax(uj_ref[...], pool, iota, P)
+        sel = do_j & (iota == jid)
+        alive = alive | sel
+        fresh = jnp.max(jnp.where(alive, steps, _I32_MIN))
+        steps = jnp.where(sel, fresh, steps)
+        computing = computing & ~sel
+        event_time = jnp.where(sel, t, event_time)
+        ready = jnp.where(sel, t, ready)
+        blocked = blocked & ~sel
+        o_pl[0, 0] = pend_l - (pend_l > 0)
+        o_pj[0, 0] = pend_j - (pend_j > 0)
+    else:
+        o_pl[0, 0] = pl_ref[0, 0]
+        o_pj[0, 0] = pj_ref[0, 0]
+
+    # 1. finishes
+    fin = computing & alive & (event_time <= t + eps)
+    any_fin = jnp.any(fin)
+    row_last = jnp.max(jnp.where(fin, event_time, -jnp.inf))
+    row_unblock = jnp.where(any_fin, jnp.minimum(row_last, t), t)
+    steps = steps + fin
+    computing = computing & ~fin
+    ready = jnp.where(fin, event_time, ready)
+    blocked = blocked & ~fin
+
+    # 2. barrier decisions
+    cand = ~computing & alive & (event_time <= t + eps)
+    min_alive = jnp.min(jnp.where(alive, steps, _I32_MAX))
+    pass_fv = steps - min_alive <= stal
+    if k_max == 0:
+        pass_sm = jnp.ones((1, P), dtype=bool)
+        n_sampled = jnp.zeros((1, P), dtype=i32)
+    elif use_u1:
+        # β = 1 fast path: one uniform over the P−1 non-self slots, the
+        # exact formula of sample_peer_indices_jax's k == 1 branch
+        draw = jnp.floor(samp_ref[...] * max(P - 1, 1)).astype(i32)
+        take = jnp.minimum(draw + (draw >= iota), P - 1)       # (1, P)
+        oh = jnp.reshape(take, (P, 1)) == jj                   # (P, P)
+        step_i = jnp.reshape(steps, (P, 1))
+        step_j = jnp.reshape(steps, (1, P))
+        lag_bad = jnp.any(oh & (step_i - step_j > stal), axis=1)
+        ok = (P - 1 >= 1) & (beta >= 1)
+        pass_sm = jnp.reshape(~lag_bad, (1, P)) | ~ok
+        n_sampled = jnp.full((1, P), jnp.minimum(beta, P - 1), dtype=i32)
+    else:
+        # rank form of the top-k β-sample: the lowest-(score, index) bad
+        # peer is inside the sample iff fewer than β eligible peers
+        # precede it — identical to lax.top_k selection, fused, no gather
+        sc = samp_ref[0]                                       # (P, P)
+        step_i = jnp.reshape(steps, (P, 1))
+        step_j = jnp.reshape(steps, (1, P))
+        ii = jax.lax.broadcasted_iota(i32, (P, P), 0)
+        # the shared-draw fast path (masked=False) matches the unmasked
+        # reference primitive: every non-self peer is in the pool — the
+        # sweep engine only takes it when the whole batch is fully alive
+        eligible = jj != ii
+        if masked:
+            eligible = eligible & jnp.reshape(alive, (1, P))
+        bad = eligible & (step_i - step_j > stal)
+        any_bad = jnp.any(bad, axis=1)
+        mbs = jnp.min(jnp.where(bad, sc, 3.0), axis=1, keepdims=True)
+        mbi = jnp.min(jnp.where(bad & (sc == mbs), jj, P), axis=1,
+                      keepdims=True)
+        before = eligible & ((sc < mbs) | ((sc == mbs) & (jj < mbi)))
+        cnt = jnp.sum(before.astype(i32), axis=1)
+        fail_sm = any_bad & (cnt < beta)
+        pass_sm = jnp.reshape(~fail_sm, (1, P))
+        n_elig = jnp.sum(eligible.astype(i32), axis=1)
+        n_sampled = jnp.reshape(jnp.minimum(beta, n_elig), (1, P))
+    is_asp, full_view = asp_ref[0, 0] != 0, fv_ref[0, 0] != 0
+    passed = jnp.where(is_asp, True,
+                       jnp.where(full_view, pass_fv, pass_sm))
+    o_ctrl[0, 0] = jnp.sum(jnp.where(cand, n_sampled * dh_ref[0, 0], 0))
+
+    # 3. starts / re-polls
+    start = cand & passed
+    t0 = jnp.where(blocked & full_view,
+                   jnp.maximum(row_unblock, ready), ready)
+    # the single-sourced straggler model, traced into the kernel body
+    dur = barrier_kernel.step_duration(u_dur_ref[...], ct_ref[...])
+    event_time = jnp.where(start, t0 + dur, event_time)
+    computing = computing | start
+    fail = cand & ~passed
+    blocked = (blocked | fail) & ~start
+    sm_fail = fail & (sm_ref[0, 0] != 0)
+    ready = jnp.where(sm_fail, ready + poll, ready)
+    event_time = jnp.where(sm_fail, ready, event_time)
+
+    o_steps[...] = steps
+    o_alive[...] = alive.astype(i32)
+    o_comp[...] = computing.astype(i32)
+    o_event[...] = event_time
+    o_ready[...] = ready
+    o_block[...] = blocked.astype(i32)
+    o_fin[...] = fin.astype(i32)
+    o_start[...] = start.astype(i32)
+    o_nfin[0, 0] = jnp.sum(fin.astype(i32))
+
+
+def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
+                 params: Dict[str, jax.Array], t: jax.Array,
+                 leave_n: jax.Array, join_n: jax.Array, *,
+                 k_max: int, has_churn: bool, masked: bool,
+                 interpret: bool = False,
+                 ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """Fused Pallas tick: same contract as :func:`psp_tick_ref`.
+
+    Grid = (B,): each grid step owns one scenario row — its ``(1, P)``
+    state slices, its ``P × P`` score tile (or the shared tile when the
+    whole batch reuses one draw), and its scalar policy row in SMEM.
+    Booleans travel as i32 (TPU-friendly); the wrapper restores dtypes.
+    """
+    B, P = state["steps"].shape
+    i32, f32 = jnp.int32, jnp.float32
+    use_u1 = k_max == 1 and not masked
+
+    def row(a, dtype=None):
+        a = jnp.asarray(a)
+        return (a if dtype is None else a.astype(dtype)), \
+            pl.BlockSpec((1, P), lambda b: (b, 0))
+
+    def scalar_col(a, dtype=i32):
+        return jnp.asarray(a, dtype).reshape(B, 1), \
+            pl.BlockSpec((1, 1), lambda b: (b, 0))
+
+    def scalar(a, dtype=f32):
+        return jnp.asarray(a, dtype).reshape(1, 1), \
+            pl.BlockSpec((1, 1), lambda b: (0, 0))
+
+    inputs, specs = [], []
+
+    def push(val_spec):
+        inputs.append(val_spec[0])
+        specs.append(val_spec[1])
+
+    push(row(state["steps"], i32))
+    for k in ("alive", "computing"):
+        push(row(state[k], i32))
+    push(row(state["event_time"], f32))
+    push(row(state["ready"], f32))
+    push(row(state["blocked"], i32))
+    push(scalar_col(state["pend_leave"]))
+    push(scalar_col(state["pend_join"]))
+    push(scalar_col(leave_n))
+    push(scalar_col(join_n))
+    push(row(rand["dur"], f32))
+    if k_max > 0:
+        if use_u1:
+            u1 = jnp.asarray(rand["u1"], f32).reshape(1, P)
+            inputs.append(u1)
+            specs.append(pl.BlockSpec((1, P), lambda b: (0, 0)))
+        elif masked:
+            inputs.append(jnp.asarray(rand["scores"], f32))
+            specs.append(pl.BlockSpec((1, P, P), lambda b: (b, 0, 0)))
+        else:
+            inputs.append(jnp.asarray(rand["scores"], f32).reshape(1, P, P))
+            specs.append(pl.BlockSpec((1, P, P), lambda b: (0, 0, 0)))
+    if has_churn:
+        push(row(rand["leave"], f32))
+        push(row(rand["join"], f32))
+    push(row(params["compute_time"], f32))
+    push(row(params["valid_slot"], i32))
+    push(scalar_col(params["staleness"]))
+    push(scalar_col(params["beta_clip"]))
+    push(scalar_col(params["is_asp"]))
+    push(scalar_col(params["full_view"]))
+    push(scalar_col(params["sampled"]))
+    push(scalar_col(params["dist_hops"]))
+    push(scalar(t))
+    push(scalar(params["eps"]))
+    push(scalar(params["poll"]))
+
+    rp = lambda dt: jax.ShapeDtypeStruct((B, P), dt)
+    cp = lambda: jax.ShapeDtypeStruct((B, 1), i32)
+    out_shape = [rp(i32), rp(i32), rp(i32), rp(f32), rp(f32), rp(i32),
+                 cp(), cp(), rp(i32), rp(i32), cp(), cp()]
+    out_specs = ([pl.BlockSpec((1, P), lambda b: (b, 0))] * 6
+                 + [pl.BlockSpec((1, 1), lambda b: (b, 0))] * 2
+                 + [pl.BlockSpec((1, P), lambda b: (b, 0))] * 2
+                 + [pl.BlockSpec((1, 1), lambda b: (b, 0))] * 2)
+
+    outs = pl.pallas_call(
+        functools.partial(_tick_kernel, k_max=k_max, has_churn=has_churn,
+                          masked=masked, use_u1=use_u1, P=P),
+        grid=(B,),
+        in_specs=specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+
+    (steps, alive, computing, event_time, ready, blocked, pend_l, pend_j,
+     fin, start, n_fin, ctrl) = outs
+    new_state = {"steps": steps, "alive": alive != 0,
+                 "computing": computing != 0, "event_time": event_time,
+                 "ready": ready, "blocked": blocked != 0,
+                 "pend_leave": pend_l[:, 0], "pend_join": pend_j[:, 0]}
+    out = {"fin": fin != 0, "start": start != 0, "n_fin": n_fin[:, 0],
+           "ctrl": ctrl[:, 0]}
+    return new_state, out

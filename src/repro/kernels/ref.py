@@ -68,6 +68,7 @@ def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
 
 
 def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Naive RMSNorm over the trailing axis (f32 accumulation)."""
     xf = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)) \

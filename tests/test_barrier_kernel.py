@@ -1,0 +1,118 @@
+"""Pins the SPMD trainer to the shared BarrierKernel (no silent drift).
+
+The unified barrier/straggler model (:mod:`repro.core.barrier_kernel`) is
+the single jnp source for "may a worker advance" and "how long does a step
+take".  These tests pin (a) ``spmd_psp``'s decisions to the
+``BarrierKernel`` outputs, same seed → same pass/block pattern, (b) the
+``BarrierKernel`` itself to a paper-semantics oracle built from the raw
+sampling primitive + ``can_pass_jax``, and (c) the sweep engine's
+reference decide path to the same functions — so the trainer and the
+simulator cannot diverge again without a test going red.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import barrier_kernel as bk
+from repro.core import spmd_psp
+from repro.core.sampling import sample_steps_jax
+from repro.core.spmd_psp import PSPConfig
+
+FIVE = ("bsp", "ssp", "asp", "pbsp", "pssp")
+
+
+def _steps(seed, w=8, hi=9):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(0, hi, w), jnp.int32)
+
+
+@pytest.mark.parametrize("barrier", FIVE)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_spmd_decisions_pinned_to_barrier_kernel(barrier, seed):
+    """Same seed ⇒ the trainer's pass/block pattern IS the kernel's."""
+    cfg = PSPConfig(barrier=barrier, n_workers=8, staleness=2, sample_size=2)
+    key = jax.random.PRNGKey(seed)
+    steps = _steps(seed)
+    got = spmd_psp._barrier_allowed(cfg, key, steps)
+    want = cfg.barrier_kernel.allowed(key, steps)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # deterministic: same seed twice → same pattern
+    again = spmd_psp._barrier_allowed(cfg, key, steps)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(again))
+
+
+@pytest.mark.parametrize("barrier", FIVE)
+@pytest.mark.parametrize("seed", [3, 4])
+def test_barrier_kernel_matches_paper_oracle(barrier, seed):
+    """BarrierKernel ≡ the §6.4 oracle (sampling primitive + can_pass_jax)."""
+    cfg = PSPConfig(barrier=barrier, n_workers=8, staleness=2, sample_size=2)
+    key = jax.random.PRNGKey(seed)
+    steps = _steps(seed + 10)
+    got = cfg.barrier_kernel.allowed(key, steps)
+    if cfg.is_asp:
+        want = jnp.ones_like(steps, dtype=bool)
+    elif cfg.is_classic:
+        lag = steps[:, None] - steps[None, :]
+        want = jnp.all(lag <= cfg.effective_staleness, axis=1)
+    else:
+        sampled, valid = sample_steps_jax(key, steps, cfg.beta)
+        want = cfg.make_barrier().can_pass_jax(steps, sampled, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_spmd_duration_pinned_to_step_duration():
+    """The trainer's straggler model is the shared step_duration formula."""
+    cfg = PSPConfig(n_workers=8, compute_jitter=0.4, straggler_frac=0.25,
+                    straggler_slowdown=4.0)
+    key = jax.random.PRNGKey(5)
+    slow = jnp.arange(8) < 2
+    got = spmd_psp._duration(cfg, key, slow)
+    base = cfg.base_compute * jnp.where(slow, cfg.straggler_slowdown, 1.0)
+    want = bk.step_duration(jax.random.uniform(key, (8,)), base,
+                            cfg.compute_jitter)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # straggler slowdown lands where assigned
+    assert float(got[:2].min()) > float(got[2:].max())
+
+
+def test_sweep_decide_uses_same_functions():
+    """The sweep tick's full-view/sampled predicates are these functions,
+    evaluated batched with alive masks — check against numpy oracles."""
+    rng = np.random.default_rng(6)
+    B, P, k = 3, 10, 3
+    steps = jnp.asarray(rng.integers(0, 8, (B, P)), jnp.int32)
+    alive = jnp.asarray(rng.random((B, P)) < 0.8)
+    stal = jnp.asarray(np.full((B, P), 2), jnp.int32)
+    fv = bk.full_view_allowed(steps, stal, alive)
+    m = np.where(np.asarray(alive), np.asarray(steps), np.iinfo(np.int32).max)
+    want_fv = np.asarray(steps) - m.min(axis=1, keepdims=True) <= 2
+    np.testing.assert_array_equal(np.asarray(fv), want_fv)
+
+    scores = jax.random.uniform(jax.random.PRNGKey(7), (B, P, P))
+    ok, n_samp = bk.sampled_allowed(steps, stal, k, scores=scores,
+                                    alive=alive)
+    # oracle: top-k smallest scores over alive non-self peers
+    sc = np.asarray(scores).copy()
+    al = np.asarray(alive)
+    st = np.asarray(steps)
+    for b in range(B):
+        sc[b][:, ~al[b]] = 2.0
+        np.fill_diagonal(sc[b], 2.0)
+    order = np.argsort(sc, axis=-1, kind="stable")[..., :k]
+    valid = np.take_along_axis(sc, order, axis=-1) < 1.5
+    peer = np.take_along_axis(np.broadcast_to(st[:, None, :], (B, P, P)),
+                              order, axis=-1)
+    want_ok = np.all((st[..., None] - peer <= 2) | ~valid, axis=-1)
+    np.testing.assert_array_equal(np.asarray(ok), want_ok)
+    np.testing.assert_array_equal(np.asarray(n_samp), valid.sum(-1))
+
+
+def test_barrier_kernel_beta_zero_degenerates_to_asp():
+    """S = ∅ (β = 0 or single worker) must always pass — Eq. 5's limit."""
+    kern = bk.BarrierKernel(barrier="pssp", staleness=0, beta=0)
+    steps = jnp.asarray([5, 0, 9], jnp.int32)
+    assert bool(jnp.all(kern.allowed(jax.random.PRNGKey(0), steps)))
+    one = bk.BarrierKernel(barrier="pbsp", staleness=0, beta=4)
+    assert bool(jnp.all(one.allowed(jax.random.PRNGKey(0),
+                                    jnp.asarray([3], jnp.int32))))

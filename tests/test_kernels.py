@@ -135,3 +135,144 @@ def test_xla_flash_custom_vjp_grads():
         d2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
         for a, b in zip(d1, d2):
             np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# psp_tick: fused sweep-tick control plane vs its pure-jnp reference
+# --------------------------------------------------------------------------- #
+def _tick_problem(seed, B, P, churn, ragged, k_max):
+    """Random mid-flight control-plane state + params + one tick's noise."""
+    rng = np.random.default_rng(seed)
+    n_true = np.full(B, P)
+    if ragged:
+        n_true = rng.integers(max(3, P // 2), P + 1, size=B)
+        n_true[rng.integers(B)] = P          # batch width = max population
+    valid_slot = np.arange(P) < n_true[:, None]
+    alive = valid_slot & (rng.random((B, P)) < 0.85)
+    alive[:, 0] = valid_slot[:, 0]           # keep every row populated
+    kind = rng.integers(0, 3, size=B)        # 0=asp 1=full-view 2=sampled
+    state = {
+        "steps": rng.integers(0, 6, (B, P)).astype(np.int32),
+        "alive": alive,
+        "computing": rng.random((B, P)) < 0.5,
+        "event_time": (rng.random((B, P)) * 2).astype(np.float32),
+        "ready": (rng.random((B, P)) * 2).astype(np.float32),
+        "blocked": rng.random((B, P)) < 0.3,
+        "pend_leave": rng.integers(0, 2, B).astype(np.int32),
+        "pend_join": rng.integers(0, 2, B).astype(np.int32),
+    }
+    params = {
+        "staleness": rng.integers(0, 4, B).astype(np.int32),
+        "beta_clip": np.clip(k_max, 0, n_true - 1).astype(np.int32),
+        "is_asp": kind == 0,
+        "full_view": kind == 1,
+        "sampled": kind == 2,
+        "dist_hops": rng.integers(0, 5, B).astype(np.int32),
+        "compute_time": (0.05 + rng.random((B, P)) * 0.1).astype(np.float32),
+        "valid_slot": valid_slot,
+        "eps": np.float32(1e-4),
+        "poll": np.float32(0.02),
+    }
+    masked = churn or ragged
+    rand = {"dur": rng.random((B, P)).astype(np.float32)}
+    if k_max == 1 and not masked:
+        rand["u1"] = rng.random(P).astype(np.float32)
+    elif k_max > 0:
+        shape = (B, P, P) if masked else (P, P)
+        rand["scores"] = rng.random(shape).astype(np.float32)
+    if churn:
+        rand["leave"] = rng.random((B, P)).astype(np.float32)
+        rand["join"] = rng.random((B, P)).astype(np.float32)
+    leave_n = rng.integers(0, 2, B).astype(np.int32) * churn
+    join_n = rng.integers(0, 2, B).astype(np.int32) * churn
+    return state, rand, params, leave_n, join_n, masked
+
+
+@pytest.mark.parametrize("churn,ragged,k_max", [
+    (False, False, 0),
+    (False, False, 1),        # β = 1 fast path
+    (False, False, 3),        # shared-score rank path
+    (True, False, 2),         # churn: per-row masked scores
+    (False, True, 2),         # ragged padding: dead-slot masking
+    (True, True, 2),          # churn × ragged
+])
+def test_psp_tick_kernel_matches_ref(churn, ragged, k_max):
+    """Interpret-mode Pallas tick ≡ jnp reference, bit for bit, tick for
+    tick — including the state carried across several chained ticks.
+
+    Both paths run under jit, as in production (inside the sweep scan):
+    eager-vs-compiled would differ by FMA-contraction ulps, jitted they
+    must agree exactly.
+    """
+    import functools
+    import jax
+    from repro.kernels import ops as kops
+    B, P = 3, 8
+    state, rand, params, leave_n, join_n, masked = _tick_problem(
+        0, B, P, churn, ragged, k_max)
+    tick = {impl: jax.jit(functools.partial(
+        kops.psp_tick, k_max=k_max, has_churn=churn, masked=masked,
+        impl=impl)) for impl in ("ref", "interpret")}
+    s_ref, s_ker = dict(state), dict(state)
+    for i in range(5):
+        t = np.float32(0.4 * (i + 1))
+        rng_i = np.random.default_rng(100 + i)
+        rand_i = {k: rng_i.random(v.shape).astype(np.float32)
+                  for k, v in rand.items()}
+        s_ref, o_ref = tick["ref"](s_ref, rand_i, params, t, leave_n,
+                                   join_n)
+        s_ker, o_ker = tick["interpret"](s_ker, rand_i, params, t, leave_n,
+                                         join_n)
+        for k in s_ref:
+            np.testing.assert_array_equal(np.asarray(s_ref[k]),
+                                          np.asarray(s_ker[k]),
+                                          err_msg=f"tick {i} state {k}")
+        for k in o_ref:
+            np.testing.assert_array_equal(np.asarray(o_ref[k]),
+                                          np.asarray(o_ker[k]),
+                                          err_msg=f"tick {i} out {k}")
+
+
+def test_psp_tick_interpret_reproduces_golden_sweep(monkeypatch):
+    """A whole sweep through the interpret-mode kernel reproduces the jax
+    backend's committed golden trace (β = 1 fast path scenario)."""
+    import json
+    import os
+    from repro.core.simulator import SimConfig
+    from repro.core.vector_sim import run_sweep
+    from repro.core.barriers import make_barrier
+
+    monkeypatch.setenv("PSP_TICK_IMPL", "interpret")
+    cfg = SimConfig(n_nodes=3, duration=4.0, dim=4, batch=4, seed=11,
+                    barrier=make_barrier("pbsp", staleness=2, sample_size=1))
+    r = run_sweep([cfg], backend="jax")[0]
+    golden_path = os.path.join(os.path.dirname(__file__), "golden",
+                               "vector_sim_trace.json")
+    with open(golden_path) as f:
+        g = json.load(f)["jax"]
+    assert r.steps.tolist() == g["steps"]
+    assert r.total_updates == g["total_updates"]
+    assert r.server_updates.tolist() == g["server_updates"]
+    np.testing.assert_allclose(r.errors, g["errors"], rtol=1e-4, atol=1e-5)
+
+
+def test_psp_tick_churn_sweep_impl_invariant(monkeypatch):
+    """Churn sweeps agree exactly across tick impls (ref vs interpret)."""
+    from repro.core.simulator import SimConfig
+    from repro.core.vector_sim import run_sweep
+    from repro.core.barriers import make_barrier
+
+    cfgs = [SimConfig(n_nodes=10, duration=3.0, dim=4, batch=4, seed=s,
+                      churn_leave_rate=1.0, churn_join_rate=1.0,
+                      barrier=make_barrier("pssp", staleness=2,
+                                           sample_size=2))
+            for s in (0, 1)]
+    monkeypatch.setenv("PSP_TICK_IMPL", "ref")
+    ref = run_sweep(cfgs, backend="jax")
+    monkeypatch.setenv("PSP_TICK_IMPL", "interpret")
+    ker = run_sweep(cfgs, backend="jax")
+    for a, b in zip(ref, ker):
+        np.testing.assert_array_equal(a.steps, b.steps)
+        np.testing.assert_array_equal(a.errors, b.errors)
+        assert a.total_updates == b.total_updates
+        assert a.control_messages == b.control_messages

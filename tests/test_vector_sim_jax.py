@@ -230,3 +230,99 @@ class TestVarianceBands:
             assert np.all(mean <= hi + 1e-12)
             assert np.all(lo >= 0.0)
             assert band["final_mean"] == pytest.approx(mean[-1])
+
+
+class TestDeviceResidency:
+    """The jax backend is device-resident: the scan carries the FULL state
+    pytree and the grid loop performs zero host transfers — one staged
+    upload before, one ``device_get`` after (acceptance criterion)."""
+
+    #: every array the tick reads or writes must live in the scan carry —
+    #: anything missing would force a host round-trip per tick
+    FULL_STATE = {"w", "pulled", "steps", "alive", "computing",
+                  "event_time", "ready", "blocked", "total_updates",
+                  "control", "pend_leave", "pend_join"}
+
+    @pytest.mark.parametrize("churn", (False, True))
+    def test_scan_carries_full_state_and_no_transfers(self, churn):
+        import jax
+        from repro.core import vector_sim_jax
+
+        cfg = _scenario("pssp", 0.2, churn, 7)
+        sim = VectorSimulator([cfg], backend="jax")
+        scan, params, carry, xs = vector_sim_jax._prepare(sim)
+        assert set(carry) == self.FULL_STATE
+        params, carry, xs = jax.device_put((params, carry, xs))
+        scan(params, carry, xs)          # compile outside the guard
+        with jax.transfer_guard("disallow"):
+            final, (err_t, upd_t) = scan(params, carry, xs)
+            jax.block_until_ready(final)
+        assert set(final) == self.FULL_STATE
+        assert err_t.shape == (sim.ticks.size, 1)
+
+    def test_run_batch_matches_staged_scan(self):
+        """run_batch's production output equals what the staged
+        _prepare + scan path computes (same scan, same trace selection)."""
+        import jax
+        from repro.core import vector_sim_jax
+
+        cfg = _scenario("pbsp", 0.0, False, 8)
+        res = run_sweep([cfg], backend="jax")[0]
+        sim = VectorSimulator([cfg], backend="jax")
+        scan, params, carry, xs = vector_sim_jax._prepare(sim)
+        final, (err_t, upd_t) = jax.device_get(scan(params, carry, xs))
+        m_idx = np.searchsorted(sim.ticks, sim.m_times[1:] - 1e-9)
+        errs = np.concatenate(
+            [[1.0], np.asarray(err_t, np.float64).T[0, m_idx]])
+        np.testing.assert_allclose(res.errors, errs, rtol=0, atol=0)
+        assert np.array_equal(res.steps, np.asarray(final["steps"])[0])
+        assert res.total_updates == int(final["total_updates"][0])
+
+
+class TestRaggedMerge:
+    """Groups differing only in n_nodes (and churn-ness) merge into ONE
+    compiled scan on the jax backend — padded slots are dead alive-mask
+    entries the barrier, sampler and join pool all ignore."""
+
+    @staticmethod
+    def _cfgs():
+        return [SimConfig(n_nodes=n, duration=3.0, dim=6, batch=4, seed=i,
+                          barrier=make_barrier("pssp", staleness=3,
+                                               sample_size=2))
+                for i, n in enumerate((9, 12, 16, 12))]
+
+    def test_single_compile_and_correct_shapes(self):
+        from repro.core import vector_sim_jax
+        from repro.core.vector_sim import _merge_key
+
+        cfgs = self._cfgs()
+        assert len({_merge_key(c) for c in cfgs}) == 1
+        vector_sim_jax._compiled_scan.cache_clear()
+        res = run_sweep(cfgs, backend="jax")
+        assert vector_sim_jax._compiled_scan.cache_info().misses == 1
+        assert [len(r.steps) for r in res] == [9, 12, 16, 12]
+        for r in res:
+            assert r.mean_progress > 0
+            assert np.isfinite(r.final_error)
+
+    def test_ragged_rows_match_solo_distributionally(self):
+        cfgs = self._cfgs()
+        merged = run_sweep(cfgs, backend="jax")
+        solo = [run_sweep([c], backend="jax")[0] for c in cfgs]
+        for a, b in zip(solo, merged):
+            assert abs(a.mean_progress - b.mean_progress) \
+                <= 0.3 * a.mean_progress + 2.0
+
+    def test_ragged_with_churn_keeps_population_bounds(self):
+        # joins must never resurrect a padded slot beyond the row's true P
+        cfgs = [dataclasses.replace(c, churn_join_rate=2.0,
+                                    churn_leave_rate=0.5)
+                for c in self._cfgs()[:2]]
+        res = run_sweep(cfgs, backend="jax")
+        for cfg, r in zip(cfgs, res):
+            assert len(r.steps) == cfg.n_nodes
+            assert r.mean_progress > 0
+
+    def test_numpy_backend_rejects_ragged(self):
+        with pytest.raises(ValueError, match="heterogeneous"):
+            VectorSimulator(self._cfgs()[:2], backend="numpy")

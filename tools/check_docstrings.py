@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Doc-coverage gate for the public engine/kernel APIs.
+
+Walks the given packages (default: ``src/repro/core`` and
+``src/repro/kernels``) with ``ast`` — no third-party dependency, so the
+gate runs identically in CI and in a bare container — and fails when a
+module, public class, or public function/method lacks a docstring.
+Private names (leading underscore), dunders other than ``__init__``
+modules, and nested ``lambda``/local helpers are exempt.
+
+Usage::
+
+    python tools/check_docstrings.py [path ...]
+
+Exit status 0 when fully covered, 1 otherwise (violations listed one per
+line as ``path:lineno: kind name``), mirroring pydocstyle's contract so
+the CI step can swap tools later without changing semantics.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+DEFAULT_PATHS = ("src/repro/core", "src/repro/kernels")
+
+Violation = Tuple[str, int, str, str]
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _walk_defs(tree: ast.Module) -> Iterator[Tuple[ast.AST, str]]:
+    """Yield (node, kind) for every public def/class at module/class level.
+
+    Function bodies are not descended into: local helpers are
+    implementation detail, but methods of public classes are API.
+    """
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_public(node.name):
+                yield node, "function"
+        elif isinstance(node, ast.ClassDef):
+            if not _is_public(node.name):
+                continue
+            yield node, "class"
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if _is_public(sub.name):
+                        yield sub, f"method {node.name}."
+
+
+def check_file(path: Path) -> List[Violation]:
+    """Return the docstring violations of one python file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out: List[Violation] = []
+    if ast.get_docstring(tree) is None:
+        out.append((str(path), 1, "module", path.stem))
+    for node, kind in _walk_defs(tree):
+        if ast.get_docstring(node) is None:
+            out.append((str(path), node.lineno, kind,
+                        getattr(node, "name", "?")))
+    return out
+
+
+def main(argv: List[str]) -> int:
+    """CLI entry point: check every ``.py`` under the given roots."""
+    roots = [Path(p) for p in (argv or DEFAULT_PATHS)]
+    violations: List[Violation] = []
+    n_files = 0
+    for root in roots:
+        if not root.exists():
+            # a typo'd/renamed path must fail loudly, not gate zero files
+            print(f"error: no such path {root}", file=sys.stderr)
+            return 1
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            n_files += 1
+            violations.extend(check_file(f))
+    for path, line, kind, name in violations:
+        print(f"{path}:{line}: missing docstring on {kind}{name}"
+              if kind.endswith(".") else
+              f"{path}:{line}: missing docstring on {kind} {name}")
+    print(f"doc-coverage: {n_files} files checked, "
+          f"{len(violations)} violations", file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
