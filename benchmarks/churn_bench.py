@@ -1,0 +1,96 @@
+"""Elastic-trainer churn benchmark: convergence vs virtual wall-clock.
+
+The paper's scalability story is about *dynamic* node populations; this
+benchmark measures it on the training side: the elastic SPMD trainer
+(:mod:`repro.core.spmd_psp` with ``PSPConfig(churn=...)``) runs the
+linear task under Poisson leave/join churn for every barrier
+(BSP / SSP / ASP / pBSP / pSSP) and records the normalized model error
+against **virtual wall-clock** — the trade-off Elastic-BSP and
+Dynamic-SSP optimize for, now measurable per barrier policy.  Output
+schema and the figure → command map live in ``docs/BENCHMARKS.md``.
+
+    PYTHONPATH=src python -m benchmarks.churn_bench [--full]
+
+Also registered as the ``elastic_churn`` entry of ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spmd_psp import ChurnConfig, PSPConfig, elastic_drive
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "benchmarks", "elastic_churn.json")
+
+FIVE = ("bsp", "ssp", "asp", "pbsp", "pssp")
+D = 32
+
+
+def _run_one(barrier: str, ticks: int, workers: int,
+             churn: ChurnConfig) -> Dict:
+    """One elastic run: (virtual time, error) trace + summary scalars."""
+    cfg = PSPConfig(barrier=barrier, n_workers=workers, sample_size=2,
+                    staleness=3, straggler_frac=0.25, churn=churn)
+    w_true, it = elastic_drive(cfg, D, ticks)
+    times, errors, alive = [], [], []
+    for i, (st, m) in enumerate(it):
+        if i % 10 == 0 or i == ticks - 1:
+            err = float(jnp.linalg.norm(st.server_params["w"] - w_true)
+                        / jnp.linalg.norm(w_true))
+            times.append(float(st.now))
+            errors.append(err)
+            alive.append(int(m["alive"]))
+    return {
+        "virtual_time": times,
+        "error": errors,
+        "alive": alive,
+        "final_error": errors[-1],
+        "final_virtual_time": times[-1],
+        "mean_alive": float(np.mean(alive)),
+        "total_pushes": int(st.total_pushes),
+        "leaves": int(st.leave_cursor),
+        "joins": int(st.join_cursor),
+    }
+
+
+def elastic_churn(full: bool = False, backend: str | None = None) -> Dict:
+    """Convergence-vs-virtual-wall-clock under churn, all five barriers.
+
+    ``backend`` is accepted for harness uniformity and ignored — the
+    elastic trainer *is* the jax backend under test.  ``full`` scales
+    ticks and workers up (still CPU-friendly).
+    """
+    ticks, workers = (900, 16) if full else (300, 8)
+    churn = ChurnConfig(leave_rate=1.5, join_rate=1.5, horizon=60.0, seed=7)
+    # no JSON dump here: the benchmarks.run harness persists every entry's
+    # result to this same path; the standalone CLI dumps in main()
+    return {name: _run_one(name, ticks, workers, churn) for name in FIVE}
+
+
+def main(argv=None) -> None:
+    """CLI entry: ``python -m benchmarks.churn_bench [--full]``."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args(argv)
+    res = elastic_churn(full=a.full)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"{'barrier':8s} {'err@T':>8s} {'virt_T':>7s} {'pushes':>7s} "
+          f"{'alive':>6s} {'churn':>7s}")
+    for name in FIVE:
+        r = res[name]
+        print(f"{name:8s} {r['final_error']:8.4f} "
+              f"{r['final_virtual_time']:7.2f} {r['total_pushes']:7d} "
+              f"{r['mean_alive']:6.1f} "
+              f"{r['leaves']:3d}-/{r['joins']}+")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,7 @@ import json
 import os
 import time
 
-from benchmarks import fig45_bounds, figures, sweep_bench
+from benchmarks import churn_bench, fig45_bounds, figures, sweep_bench
 from benchmarks.roofline_bench import print_table, table
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -92,9 +92,19 @@ BENCHES = [
     ("fig5_variance_bound",
      lambda full=False, backend="numpy": fig45_bounds.fig5_variance_bound(),
      lambda res: fig45_bounds.derived_summary()),
-    ("sweep_engine", sweep_bench.sweep_speedup,
+    # out_path=None: the harness persists the result itself below; only
+    # the standalone sweep_bench CLI regenerates the committed CI-gate
+    # baseline BENCH_sweep.json
+    ("sweep_engine",
+     lambda full=False, backend=None:
+         sweep_bench.sweep_speedup(full=full, out_path=None),
      lambda res: f"speedup={res['speedup']:.1f}x "
                  f"max_dev={res['max_progress_deviation']:.3f}"),
+    # elastic SPMD trainer under Poisson churn: the convergence-vs-
+    # virtual-wall-clock trade-off with a dynamic worker set
+    ("elastic_churn", churn_bench.elastic_churn,
+     lambda res: "err@T " + " ".join(
+         f"{k}={res[k]['final_error']:.3f}" for k in ("bsp", "pssp", "asp"))),
 ]
 
 

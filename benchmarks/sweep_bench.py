@@ -46,7 +46,14 @@ def _configs(full: bool):
 
 
 def _timed_grid(cfgs, backend: str, impl: str | None = None):
-    """(seconds, results) for one grid engine, jit warm-up excluded."""
+    """(seconds, results) for one grid engine, jit warm-up excluded.
+
+    Grid engines are timed **best-of-2**: a sweep is ~2 s, so one
+    stray scheduler hiccup would otherwise dominate the measurement —
+    and the CI bench-regression gate (``tools/check_bench.py``)
+    compares these numbers across runs.  The 20× longer event-loop
+    reference stays single-shot (its relative noise is small).
+    """
     from repro.core import vector_sim_jax
     env_before = os.environ.get("PSP_TICK_IMPL")
     if impl is not None:
@@ -55,9 +62,12 @@ def _timed_grid(cfgs, backend: str, impl: str | None = None):
         # numpy needs only a BLAS/import warm-up; jax jit-specialises on
         # the batch shape, so its warm-up must run the full config list
         run_sweep(cfgs if backend == "jax" else cfgs[:2], backend=backend)
-        t0 = time.time()
-        res = run_sweep(cfgs, backend=backend)
-        return time.time() - t0, res
+        best = float("inf")
+        for _ in range(2):
+            t0 = time.time()
+            res = run_sweep(cfgs, backend=backend)
+            best = min(best, time.time() - t0)
+        return best, res
     finally:
         if impl is not None:
             if env_before is None:
@@ -68,13 +78,20 @@ def _timed_grid(cfgs, backend: str, impl: str | None = None):
 
 
 def sweep_speedup(full: bool = False, backend: str | None = None,
-                  pallas: bool = True) -> Dict:
+                  pallas: bool = True,
+                  out_path: str | None = OUT_PATH) -> Dict:
     """Time the Fig-2 sweep on all engines and dump ``BENCH_sweep.json``.
 
     ``backend`` is accepted for harness uniformity and ignored — this
     benchmark's whole point is timing every engine against the others.
     ``pallas=False`` skips the Pallas-tick row (it adds an extra
-    compile of the interpreted kernel on CPU).
+    compile of the interpreted kernel on CPU).  ``out_path`` redirects
+    the JSON dump (``None`` skips it) — the CI bench-regression gate
+    writes a *fresh* file and compares it against the committed baseline
+    with ``tools/check_bench.py``, and the ``benchmarks.run`` harness
+    passes ``None`` so a local harness run never overwrites the
+    committed baseline; only the standalone CLI (the documented
+    baseline-regeneration command) writes ``BENCH_sweep.json``.
     """
     cfgs = _configs(full)
     timings, per_engine = {}, {}
@@ -136,19 +153,25 @@ def sweep_speedup(full: bool = False, backend: str | None = None,
         "max_progress_deviation": max(max_dev(r)
                                       for r in per_engine.values()),
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(res, f, indent=1)
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
     return res
 
 
 def main(argv=None) -> None:
-    """CLI entry: ``python -m benchmarks.sweep_bench [--full] [--no-pallas]``."""
+    """CLI entry: ``python -m benchmarks.sweep_bench [--full] [--no-pallas]
+    [--out PATH]``."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--no-pallas", action="store_true",
                     help="skip the Pallas-tick engine row")
+    ap.add_argument("--out", default=OUT_PATH,
+                    help="JSON output path (default: repo-root "
+                         "BENCH_sweep.json; the CI gate writes a fresh "
+                         "file and compares via tools/check_bench.py)")
     a = ap.parse_args(argv)
-    res = sweep_speedup(full=a.full, pallas=not a.no_pallas)
+    res = sweep_speedup(full=a.full, pallas=not a.no_pallas, out_path=a.out)
     e = res["engines"]
     extra = ""
     if "pallas" in e:

@@ -38,8 +38,8 @@ import jax.numpy as jnp
 from repro.core.sampling import (sample_alive_peer_indices_jax,
                                  sample_peer_indices_jax)
 
-__all__ = ["BarrierKernel", "full_view_allowed", "sampled_allowed",
-           "step_duration"]
+__all__ = ["BarrierKernel", "churn_joiner", "churn_victim",
+           "full_view_allowed", "sampled_allowed", "step_duration"]
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -119,6 +119,36 @@ def sampled_allowed(steps: jax.Array, staleness: jax.Array, k_max: int, *,
         valid = valid & (jnp.arange(take.shape[-1]) < beta[..., None])
     lag_ok = steps[..., None] - peer <= staleness[..., None]
     return jnp.all(lag_ok | ~valid, axis=-1), jnp.sum(valid, axis=-1)
+
+
+def churn_victim(u: jax.Array, alive: jax.Array) -> jax.Array:
+    """Index of the node a leave event removes: uniform over alive nodes.
+
+    ``u`` is uniform noise in [0, 1) of the same trailing shape as
+    ``alive``; the victim is the argmax of the alive-masked scores, i.e.
+    a uniformly random **alive** node (ties cannot occur for continuous
+    draws; the dead-node sentinel is −1).  This is the single definition
+    of the leave rule — the numpy engine
+    (:meth:`repro.core.vector_sim.VectorSimulator._churn_leave`), the
+    fused tick reference (:func:`repro.kernels.psp_tick.psp_tick_ref`)
+    and the elastic SPMD trainer (:mod:`repro.core.spmd_psp`) all select
+    victims by exactly this argmax, pinned by
+    ``tests/test_elastic_equiv.py``.
+    """
+    return jnp.argmax(jnp.where(alive, u, -1.0), axis=-1)
+
+
+def churn_joiner(u: jax.Array, alive: jax.Array,
+                 valid_slot: Optional[jax.Array] = None) -> jax.Array:
+    """Index of the slot a join event revives: uniform over dead slots.
+
+    Mirror of :func:`churn_victim` over the dead pool.  ``valid_slot``
+    restricts the pool to a row's true population (ragged jax batches pad
+    with permanently-dead slots that must never rejoin); the trainer and
+    unpadded rows pass ``None``.
+    """
+    pool = ~alive if valid_slot is None else (~alive & valid_slot)
+    return jnp.argmax(jnp.where(pool, u, -1.0), axis=-1)
 
 
 @dataclasses.dataclass(frozen=True)

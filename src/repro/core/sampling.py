@@ -19,7 +19,11 @@ Backends:
   (:mod:`repro.core.vector_sim_jax`): the index core is
   :func:`sample_peer_indices_jax`, with
   :func:`sample_alive_peer_indices_jax` as the membership-masked variant
-  for churn scenarios.
+  for churn scenarios — both the sweep engines' churn rows and the
+  elastic SPMD trainer (:mod:`repro.core.spmd_psp` with
+  ``PSPConfig(churn=...)``) draw their β-samples from alive peers
+  through it, so "which peers does a worker look at" has exactly one
+  definition across every execution layer.
 """
 from __future__ import annotations
 

@@ -40,6 +40,39 @@ The per-tick protocol (one call of :func:`psp_train_step`):
      and draw the duration of their next local step; blocked workers hold
      (they re-sample next tick — the paper's "holds until condition is
      satisfied").
+
+Elastic worker sets (churn)
+---------------------------
+The paper's scalability claims assume a *dynamic* node population, and the
+sweep engines model churn natively; with ``PSPConfig(churn=ChurnConfig(...))``
+so does this trainer.  :class:`PSPState` carries a per-worker ``alive`` mask
+plus pre-sampled Poisson leave/join schedules (the schedule machinery of
+:func:`repro.core.vector_sim.sample_churn_schedules` — churn events are
+data, not control flow), and every tick opens with a churn phase, all
+``lax``-only so the step stays one SPMD program:
+
+* a due **leave** kills a uniformly random alive worker (only while more
+  than two are alive — the event engine's rule; the event is consumed
+  either way).  The departed worker's counters freeze; it contributes
+  **zero** gradient and zero bytes to the server ``psum`` (the push mask
+  is alive-masked) and never gates a waiter (barrier predicates evaluate
+  over alive workers only, via the masked
+  :class:`~repro.core.barrier_kernel.BarrierKernel` predicates with
+  β-samples drawn from alive peers).
+* a due **join** revives a uniformly random departed slot: it is
+  re-anchored with a *fresh pull* of the server model, restarts at the
+  max alive step (the event engine's fresh-start rule), and decides this
+  very tick.  Its never-computed gradient is masked out of the push.
+
+At most one leave and one join fire per tick; surplus due events carry to
+the next tick (cursor semantics — the Poisson totals are preserved, as
+the sweep engines' ``pend_*`` counters).  Victim/joiner selection routes
+through the shared :func:`repro.core.barrier_kernel.churn_victim` /
+``churn_joiner`` rules, so trainer and simulators cannot silently
+diverge; ``tests/test_elastic_equiv.py`` pins the cross-layer semantics
+tick-for-tick and ``tests/test_spmd_psp.py`` holds a golden churn trace.
+With ``churn=None`` the step consumes the identical RNG stream and
+computes bit-for-bit the same numbers as the fixed-worker trainer.
 """
 from __future__ import annotations
 
@@ -49,14 +82,37 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.barrier_kernel import BarrierKernel
+from repro.core.barrier_kernel import (BarrierKernel, churn_joiner,
+                                       churn_victim)
 from repro.core.barriers import BarrierControl, make_barrier
 
-__all__ = ["PSPConfig", "PSPState", "psp_init", "psp_train_step",
+__all__ = ["ChurnConfig", "PSPConfig", "PSPState", "elastic_drive",
+           "linear_psp_task", "psp_init", "psp_train_step",
            "make_psp_step_fn"]
 
 PyTree = Any
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Elastic-worker-set (churn) configuration for the SPMD trainer.
+
+    Leave/join events are two independent Poisson processes pre-sampled
+    over ``horizon`` virtual seconds at :func:`psp_init` (the schedule
+    machinery of :func:`repro.core.vector_sim.sample_churn_schedules`),
+    so the jitted train step consumes them as fixed-shape data.  Past the
+    horizon the worker set stays frozen at whatever population the
+    schedule left behind.
+    """
+
+    leave_rate: float = 0.1        # workers leaving per virtual second
+    join_rate: float = 0.1         # workers (re)joining per virtual second
+    horizon: float = 120.0         # schedule length in virtual seconds
+    seed: int = 0                  # schedule RNG seed (independent of init key)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +130,9 @@ class PSPConfig:
     straggler_slowdown: float = 4.0
     poll_interval: float = 0.02    # blocked-worker re-sample cadence (virtual s)
     contribution: str = "mean"     # "mean" | "sum" over pushing workers
+    #: elastic worker set: None ⇒ fixed W workers (the pre-elastic trainer,
+    #: bit-for-bit); a :class:`ChurnConfig` enables Poisson leave/join churn
+    churn: Optional[ChurnConfig] = None
 
     def make_barrier(self) -> BarrierControl:
         """Instantiate the configured :class:`BarrierControl` policy."""
@@ -104,6 +163,11 @@ class PSPConfig:
         return self.barrier == "asp"
 
     @property
+    def has_churn(self) -> bool:
+        """Whether the elastic churn phase is compiled into the step."""
+        return self.churn is not None
+
+    @property
     def barrier_kernel(self) -> BarrierKernel:
         """The unified barrier/straggler model this trainer executes.
 
@@ -118,7 +182,13 @@ class PSPConfig:
 
 
 class PSPState(NamedTuple):
-    """Replicated-or-sharded training state carried across ticks."""
+    """Replicated-or-sharded training state carried across ticks.
+
+    The elastic fields (``alive`` through ``join_cursor``) are carried
+    unconditionally so the pytree structure does not depend on the churn
+    setting; with ``churn=None`` the mask is all-True and the schedules
+    are empty, and the train step compiles to the fixed-worker program.
+    """
 
     server_params: PyTree          # the single server model
     opt_state: PyTree              # optimizer state of the server model
@@ -131,6 +201,12 @@ class PSPState(NamedTuple):
     key: jax.Array                 # PRNG key
     tick: jax.Array                # i32[] SPMD tick counter
     total_pushes: jax.Array        # i32[] server update count (Fig 1e)
+    # ---- elastic worker set (PSPConfig.churn) ------------------------- #
+    alive: jax.Array               # bool[W] current worker membership
+    leave_times: jax.Array         # f32[El] pre-sampled leave schedule
+    join_times: jax.Array          # f32[Ej] pre-sampled join schedule
+    leave_cursor: jax.Array        # i32[] next unconsumed leave event
+    join_cursor: jax.Array         # i32[] next unconsumed join event
 
 
 def _duration(cfg: PSPConfig, key: jax.Array, slow: jax.Array) -> jax.Array:
@@ -149,7 +225,16 @@ def _duration(cfg: PSPConfig, key: jax.Array, slow: jax.Array) -> jax.Array:
 
 def psp_init(cfg: PSPConfig, params: PyTree, opt_init: Callable[[PyTree], PyTree],
              key: jax.Array) -> PSPState:
-    """Build the initial PSP state from server params."""
+    """Build the initial PSP state from server params.
+
+    With ``cfg.churn`` set, the Poisson leave/join schedules are
+    pre-sampled here (from ``cfg.churn.seed`` via the shared
+    :func:`repro.core.vector_sim.sample_churn_schedules` machinery — a
+    numpy-side draw, so the jax init key stream is identical with and
+    without churn) and carried in the state as fixed-shape arrays.
+    """
+    from repro.core.vector_sim import sample_churn_schedules
+
     w = cfg.n_workers
     views = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (w,) + p.shape),
                          params)
@@ -158,6 +243,13 @@ def psp_init(cfg: PSPConfig, params: PyTree, opt_init: Callable[[PyTree], PyTree
     slow = jnp.arange(w) < n_slow  # deterministic placement; permuted below
     slow = jax.random.permutation(k_slow, slow)
     dur = _duration(cfg, k_dur, slow)
+    if cfg.has_churn:
+        rng = np.random.default_rng(cfg.churn.seed)
+        lt, jt = sample_churn_schedules(rng, cfg.churn.leave_rate,
+                                        cfg.churn.join_rate,
+                                        cfg.churn.horizon)
+    else:
+        lt = jt = np.empty(0)
     return PSPState(
         server_params=params,
         opt_state=opt_init(params),
@@ -170,19 +262,90 @@ def psp_init(cfg: PSPConfig, params: PyTree, opt_init: Callable[[PyTree], PyTree
         key=k_carry,
         tick=jnp.zeros((), jnp.int32),
         total_pushes=jnp.zeros((), jnp.int32),
+        alive=jnp.ones((w,), bool),
+        leave_times=jnp.asarray(lt, jnp.float32),
+        join_times=jnp.asarray(jt, jnp.float32),
+        leave_cursor=jnp.zeros((), jnp.int32),
+        join_cursor=jnp.zeros((), jnp.int32),
     )
 
 
-def _barrier_allowed(cfg: PSPConfig, key: jax.Array, step: jax.Array
-                     ) -> jax.Array:
+def _barrier_allowed(cfg: PSPConfig, key: jax.Array, step: jax.Array,
+                     alive: Optional[jax.Array] = None) -> jax.Array:
     """bool[W]: may each worker start its next step, per the barrier?
 
     Delegates to the unified barrier model
     (:meth:`PSPConfig.barrier_kernel`): full-view masked-min for BSP/SSP,
     a β-sample through the shared sampling primitive for pBSP/pSSP, ⊤ for
     ASP — exactly the predicate the sweep engine's fused tick evaluates.
+    Under churn, ``alive`` masks both the full-view minimum and the
+    β-sample pool (``sample_alive_peer_indices_jax``): departed workers'
+    frozen counters never gate waiters, and samples draw alive peers only.
     """
-    return cfg.barrier_kernel.allowed(key, step)
+    return cfg.barrier_kernel.allowed(key, step, alive)
+
+
+def _schedule_due(times: jax.Array, cursor: jax.Array,
+                  now: jax.Array) -> jax.Array:
+    """bool[]: is the next unconsumed schedule event at or before ``now``?"""
+    n = times.shape[0]
+    if n == 0:
+        return jnp.zeros((), bool)
+    return (cursor < n) & (times[jnp.minimum(cursor, n - 1)] <= now)
+
+
+def _fire_churn(cfg: PSPConfig, state: PSPState,
+                k_churn: jax.Array) -> PSPState:
+    """Phase 0 of an elastic tick: fire due leave/join events (≤ 1 each).
+
+    Semantics follow the sweep engines' churn rules (pinned by
+    ``tests/test_elastic_equiv.py``): a leave kills a uniformly random
+    alive worker only while more than two are alive, a join revives a
+    uniformly random departed slot at the current max alive step and lets
+    it decide this tick.  Due events are consumed (cursor advances) even
+    when the population guard skips the effect — Poisson totals are
+    preserved; several same-tick events drain one per tick, the fused
+    tick's ``pend_*`` carry rule (the numpy grid engine instead drains
+    same-tick surpluses within the tick — a timing difference of rare
+    multi-event ticks, not a protocol difference).  The joiner is
+    re-anchored with a
+    fresh pull of the server model and its stale gradient is masked out
+    of this tick's push (``pushed`` set), so a departed-then-revived
+    worker can never push bytes it computed while dead.
+    """
+    w = cfg.n_workers
+    iota = jnp.arange(w)
+    k_leave, k_join = jax.random.split(k_churn)
+    alive, step = state.alive, state.step
+
+    # leave: kill a uniformly random alive worker (population floor: 2)
+    due_l = _schedule_due(state.leave_times, state.leave_cursor, state.now)
+    do_l = due_l & (jnp.sum(alive) > 2)
+    victim = churn_victim(jax.random.uniform(k_leave, (w,)), alive)
+    alive = alive & ~(do_l & (iota == victim))
+
+    # join: revive a uniformly random departed slot, fresh-started
+    due_j = _schedule_due(state.join_times, state.join_cursor, state.now)
+    do_j = due_j & jnp.any(~alive)
+    joiner = churn_joiner(jax.random.uniform(k_join, (w,)), alive)
+    sel = do_j & (iota == joiner)
+    alive = alive | sel
+    fresh = jnp.max(jnp.where(alive, step, _I32_MIN))
+    step = jnp.where(sel, fresh, step)
+
+    def _reanchor(view, p):
+        m = sel.reshape((-1,) + (1,) * p.ndim)
+        return jnp.where(m, p[None], view)
+
+    return state._replace(
+        views=jax.tree.map(_reanchor, state.views, state.server_params),
+        step=step,
+        busy_until=jnp.where(sel, state.now, state.busy_until),
+        pushed=state.pushed | sel,
+        alive=alive,
+        leave_cursor=state.leave_cursor + due_l.astype(jnp.int32),
+        join_cursor=state.join_cursor + due_j.astype(jnp.int32),
+    )
 
 
 def psp_train_step(
@@ -204,14 +367,24 @@ def psp_train_step(
 
     Returns: (new_state, metrics)
     """
-    key, k_bar, k_dur = jax.random.split(state.key, 3)
+    if cfg.has_churn:
+        # (0) elastic churn phase: fire due pre-sampled leave/join events.
+        # The extra key split is compiled in only when churn is enabled,
+        # so the churn=None RNG stream is identical to the fixed-worker
+        # trainer (bit-for-bit on golden/regression tests).
+        key, k_bar, k_dur, k_churn = jax.random.split(state.key, 4)
+        state = _fire_churn(cfg, state, k_churn)
+    else:
+        key, k_bar, k_dur = jax.random.split(state.key, 3)
+    alive = state.alive
 
     # (1) every worker computes on its own (possibly stale) view
     losses, grads = jax.vmap(grad_fn)(state.views, batch)
 
-    # (2) completions push to the server
+    # (2) completions push to the server; departed workers are masked out
+    # of the psum — zero gradient, zero bytes
     completed = state.busy_until <= state.now
-    push_mask = completed & ~state.pushed
+    push_mask = completed & ~state.pushed & alive
     denom = jnp.maximum(jnp.sum(push_mask), 1)
     scale = jnp.where(cfg.contribution == "mean", 1.0 / denom, 1.0)
 
@@ -231,8 +404,10 @@ def psp_train_step(
         state.opt_state)
     pushed = state.pushed | push_mask
 
-    # (3) barrier: completed workers try to start their next step
-    allowed = _barrier_allowed(cfg, k_bar, state.step) & completed
+    # (3) barrier: completed alive workers try to start their next step
+    allowed = _barrier_allowed(cfg, k_bar, state.step,
+                               alive if cfg.has_churn else None)
+    allowed = allowed & completed & alive
     new_step = state.step + allowed.astype(jnp.int32)
     next_dur = _duration(cfg, k_dur, state.slow)
     new_busy = jnp.where(allowed, state.now + next_dur, state.busy_until)
@@ -245,18 +420,22 @@ def psp_train_step(
     new_views = jax.tree.map(_pull, state.views, new_params)
 
     # (4) event-driven virtual-time advance: jump to the earlier of (a) the
-    # next completion of a still-busy worker, (b) the next poll of a
+    # next completion of a still-busy alive worker, (b) the next poll of a
     # barrier-blocked worker (the paper's "holds until condition is
     # satisfied" — re-sampling costs a poll interval of virtual time).
-    blocked = completed & ~allowed
-    next_busy = jnp.min(jnp.where(new_busy > state.now, new_busy, jnp.inf))
+    # Departed workers' frozen clocks never hold time back; with at least
+    # two alive workers every tick either has someone busy or someone
+    # polling, so the clock always advances and pending joins fire.
+    blocked = completed & ~allowed & alive
+    next_busy = jnp.min(jnp.where((new_busy > state.now) & alive, new_busy,
+                                  jnp.inf))
     next_poll = jnp.where(jnp.any(blocked),
                           state.now + cfg.poll_interval, jnp.inf)
     next_time = jnp.minimum(next_busy, next_poll)
     new_now = jnp.where(jnp.isfinite(next_time),
                         jnp.maximum(state.now, next_time), state.now)
 
-    new_state = PSPState(
+    new_state = state._replace(
         server_params=new_params,
         opt_state=new_opt,
         views=new_views,
@@ -264,11 +443,23 @@ def psp_train_step(
         busy_until=new_busy,
         pushed=new_pushed,
         now=new_now,
-        slow=state.slow,
         key=key,
         tick=state.tick + 1,
         total_pushes=state.total_pushes + jnp.sum(push_mask),
     )
+    if cfg.has_churn:
+        # progress statistics over the *current* worker set only — a
+        # departed straggler's frozen counter is not progress
+        n_alive = jnp.maximum(jnp.sum(alive), 1)
+        mean_step = (jnp.sum(jnp.where(alive, new_step, 0))
+                     / n_alive.astype(jnp.float32))
+        alive_steps_max = jnp.max(jnp.where(alive, new_step, _I32_MIN))
+        alive_steps_min = jnp.min(
+            jnp.where(alive, new_step, jnp.iinfo(jnp.int32).max))
+        step_spread = alive_steps_max - alive_steps_min
+    else:
+        mean_step = jnp.mean(new_step.astype(jnp.float32))
+        step_spread = jnp.max(new_step) - jnp.min(new_step)
     metrics = {
         # pushed-worker mean; falls back to the all-worker mean on ticks
         # where nobody completed (avoids misleading 0.0 readouts)
@@ -278,8 +469,9 @@ def psp_train_step(
         "pushes": jnp.sum(push_mask),
         "allowed": jnp.sum(allowed),
         "blocked": jnp.sum(blocked),
-        "mean_step": jnp.mean(new_step.astype(jnp.float32)),
-        "step_spread": (jnp.max(new_step) - jnp.min(new_step)),
+        "alive": jnp.sum(alive),
+        "mean_step": mean_step,
+        "step_spread": step_spread,
         "virtual_time": new_now,
     }
     return new_state, metrics
@@ -288,3 +480,64 @@ def psp_train_step(
 def make_psp_step_fn(cfg: PSPConfig, grad_fn, opt_update):
     """Convenience: partially-applied, jit-ready step function."""
     return functools.partial(psp_train_step, cfg, grad_fn, opt_update)
+
+
+def linear_psp_task(dim: int, lr: float = 0.1, seed: int = 0):
+    """The paper's linear-regression task, packaged for this trainer.
+
+    One definition serves every consumer that trains the trainer on the
+    paper's evaluation workload — the churn benchmark
+    (:mod:`benchmarks.churn_bench`), the elastic demo
+    (``examples/elastic_train.py``) and the trainer/equivalence test
+    suites — so "which task do the elastic numbers measure" has exactly
+    one answer.
+
+    Returns:
+      (w_true, grad_fn, opt_update): the ground-truth vector f32[dim], a
+      per-worker ``(params, (x, y)) -> (loss, grads)`` for params pytree
+      ``{"w": f32[dim]}``, and a plain-SGD ``opt_update`` with step size
+      ``lr``.
+    """
+    w_true = jax.random.normal(jax.random.PRNGKey(seed), (dim,)) \
+        / np.sqrt(dim)
+
+    def grad_fn(params, batch):
+        x, y = batch
+        return jax.value_and_grad(
+            lambda p: jnp.mean((x @ p["w"] - y) ** 2))(params)
+
+    def opt_update(g, s, p):
+        return jax.tree.map(lambda gi: -lr * gi, g), s
+
+    return w_true, grad_fn, opt_update
+
+
+def elastic_drive(cfg: PSPConfig, dim: int, ticks: int, *, batch: int = 16,
+                  lr: float = 0.1, task_seed: int = 0, init_seed: int = 1,
+                  batch_seed: int = 2):
+    """Drive the trainer on the linear task; the canonical tick loop.
+
+    One definition of "init the trainer, jit the step, feed random
+    minibatches for N ticks" shared by the churn benchmark
+    (:mod:`benchmarks.churn_bench`), the elastic demo
+    (``examples/elastic_train.py``) and the trainer test suites, so their
+    trajectories are the same run by construction (the golden churn trace
+    pins this loop's exact RNG consumption).
+
+    Returns:
+      (w_true, it): the task ground truth and an iterator yielding one
+      ``(state, metrics)`` pair per tick (the state *after* that tick).
+    """
+    w_true, grad_fn, opt_update = linear_psp_task(dim, lr=lr, seed=task_seed)
+    state = psp_init(cfg, {"w": jnp.zeros((dim,))}, lambda p: None,
+                     jax.random.PRNGKey(init_seed))
+    step = jax.jit(make_psp_step_fn(cfg, grad_fn, opt_update))
+
+    def _ticks(state, kb):
+        for _ in range(ticks):
+            kb, k1 = jax.random.split(kb)
+            x = jax.random.normal(k1, (cfg.n_workers, batch, dim))
+            state, m = step(state, (x, x @ w_true))
+            yield state, m
+
+    return w_true, _ticks(state, jax.random.PRNGKey(batch_seed))

@@ -103,7 +103,8 @@ from repro.core.barriers import ASP
 from repro.core.simulator import (SimConfig, SimResult, draw_static_state,
                                   sample_poisson_times)
 
-__all__ = ["VectorSimulator", "run_sweep", "BACKENDS"]
+__all__ = ["VectorSimulator", "run_sweep", "sample_churn_schedules",
+           "BACKENDS"]
 
 _EPS = 1e-9
 
@@ -138,6 +139,25 @@ def _merge_key(cfg: SimConfig) -> Tuple:
     p_bucket = 1 << max(0, cfg.n_nodes - 1).bit_length()
     return (p_bucket, cfg.dim, cfg.batch, float(cfg.duration),
             float(cfg.measure_interval), float(cfg.poll_interval))
+
+
+def sample_churn_schedules(rng: np.random.Generator, leave_rate: float,
+                           join_rate: float, duration: float
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pre-sample one row's Poisson churn schedule: (leave, join) times.
+
+    The batched engines and the elastic SPMD trainer
+    (:mod:`repro.core.spmd_psp`) all consume churn as *pre-sampled*
+    schedules rather than on-line exponential re-arming, so churn events
+    are data, not control flow — a fixed-shape input a ``lax.scan`` (or a
+    jitted train step) can carry.  Both processes are the event
+    simulator's model (:func:`repro.core.simulator.sample_poisson_times`),
+    drawn leave-first from ``rng`` so a shared generator yields a
+    deterministic schedule.
+    """
+    leaves = sample_poisson_times(rng, leave_rate, duration)
+    joins = sample_poisson_times(rng, join_rate, duration)
+    return leaves, joins
 
 
 class VectorSimulator:
@@ -252,10 +272,9 @@ class VectorSimulator:
             self.leave_counts = np.zeros((ticks.size, B), dtype=np.int64)
             self.join_counts = np.zeros((ticks.size, B), dtype=np.int64)
             for b, cfg in enumerate(configs):
-                lt = sample_poisson_times(self.rng, cfg.churn_leave_rate,
-                                          self.duration)
-                jt = sample_poisson_times(self.rng, cfg.churn_join_rate,
-                                          self.duration)
+                lt, jt = sample_churn_schedules(
+                    self.rng, cfg.churn_leave_rate, cfg.churn_join_rate,
+                    self.duration)
                 self.leave_counts[:, b] = np.histogram(lt, bins=edges)[0]
                 self.join_counts[:, b] = np.histogram(jt, bins=edges)[0]
 

@@ -114,12 +114,13 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
         pend_l = state["pend_leave"] + leave_n
         pend_j = state["pend_join"] + join_n
         do_l = (pend_l > 0) & (jnp.sum(alive, axis=1) > 2)
-        victim = jnp.argmax(jnp.where(alive, rand["leave"], -1.0), axis=1)
+        victim = barrier_kernel.churn_victim(rand["leave"], alive)
         v_oh = victim[:, None] == iota
         alive = alive & ~(do_l[:, None] & v_oh)
         pool = ~alive & params["valid_slot"]
         do_j = (pend_j > 0) & jnp.any(pool, axis=1)
-        joiner = jnp.argmax(jnp.where(pool, rand["join"], -1.0), axis=1)
+        joiner = barrier_kernel.churn_joiner(rand["join"], alive,
+                                             params["valid_slot"])
         sel = do_j[:, None] & (joiner[:, None] == iota)
         alive = alive | sel
         fresh = jnp.max(jnp.where(alive, steps, _I32_MIN), axis=1)

@@ -94,7 +94,14 @@ def run_psp_combo(arch: str, mesh_kind: str, out_dir: str,
             pushed=rep((W,), jnp.bool_), now=rep((), jnp.float32),
             slow=rep((W,), jnp.bool_),
             key=rep((2,), jnp.uint32),
-            tick=rep((), jnp.int32), total_pushes=rep((), jnp.int32))
+            tick=rep((), jnp.int32), total_pushes=rep((), jnp.int32),
+            # fixed worker set in the dry-run: all-alive mask, empty
+            # churn schedules (churn=None compiles the same program)
+            alive=rep((W,), jnp.bool_),
+            leave_times=rep((0,), jnp.float32),
+            join_times=rep((0,), jnp.float32),
+            leave_cursor=rep((), jnp.int32),
+            join_cursor=rep((), jnp.int32))
         gb = shape.global_batch
         spec = (P(("pod", "data"), None, None) if mesh_kind == "multi"
                 else P("data", None, None))

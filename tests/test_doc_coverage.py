@@ -1,10 +1,11 @@
-"""Doc-coverage gate: public engine/kernel APIs must keep docstrings.
+"""Doc-coverage gate: public engine/kernel/tool APIs must keep docstrings.
 
 Runs ``tools/check_docstrings.py`` (stdlib-``ast`` based, no third-party
-dependency) over ``src/repro/core`` and ``src/repro/kernels`` — the same
-command the CI doc-coverage step executes — and fails listing the exact
-violations, so a missing docstring on a public module/class/function in
-the engine or kernel layers is a red test, not a review nit.
+dependency) over ``src/repro/core``, ``src/repro/kernels`` and ``tools``
+— the same command the CI doc-coverage step executes — and fails listing
+the exact violations, so a missing docstring on a public
+module/class/function in the engine, kernel, or CI-gate-script layers is
+a red test, not a review nit.
 """
 import os
 import subprocess

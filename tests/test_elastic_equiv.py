@@ -1,0 +1,273 @@
+"""Cross-layer elastic (churn) equivalence: trainer ↔ sweep engines.
+
+The elastic SPMD trainer (:mod:`repro.core.spmd_psp` with
+``PSPConfig(churn=...)``) must execute the *same* churn protocol as the
+simulators: the numpy grid engine's ``_churn_leave``/``_churn_join``, the
+fused tick reference, and the event engine all agree on who leaves, who
+rejoins, and how a joiner is re-anchored.  These tests pin that
+cross-layer contract:
+
+* the shared selection rules (:func:`repro.core.barrier_kernel.churn_victim`
+  / ``churn_joiner``) reproduce the numpy engine's victim/joiner choices
+  draw-for-draw (same uniforms in, same index out);
+* a full trainer run's alive-mask trajectory is replayed tick-for-tick by
+  an independent mirror of the sweep-engine churn rules (due-event
+  cursors, population floor, one event per tick);
+* joiners are re-anchored exactly (fresh-start step = max alive step, a
+  fresh pull of the server model);
+* departed workers contribute zero gradient and zero bytes to the server
+  psum, and their views are never touched.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import barrier_kernel as bk
+from repro.core.barriers import make_barrier
+from repro.core.simulator import SimConfig
+from repro.core.spmd_psp import (ChurnConfig, PSPConfig, linear_psp_task,
+                                 psp_init, psp_train_step)
+from repro.core.vector_sim import VectorSimulator, sample_churn_schedules
+
+D = 8
+W = 8
+
+
+# --------------------------------------------------------------------------- #
+# selection rules: trainer helpers == numpy sweep engine, draw-for-draw
+# --------------------------------------------------------------------------- #
+class TestChurnSelectionPinnedToSweepEngine:
+    """churn_victim/churn_joiner reproduce VectorSimulator's choices when
+    fed the exact uniforms the engine consumes (rng rewind trick)."""
+
+    @staticmethod
+    def _sim():
+        cfg = SimConfig(n_nodes=10, duration=2.0, dim=4, seed=5,
+                        churn_leave_rate=0.5, churn_join_rate=0.5,
+                        barrier=make_barrier("pbsp", staleness=2,
+                                             sample_size=2))
+        return VectorSimulator([cfg], backend="numpy")
+
+    @pytest.mark.parametrize("dead", [(), (0, 4), (1, 2, 3, 7)])
+    def test_leave_victim_matches(self, dead):
+        sim = self._sim()
+        sim.alive[0, list(dead)] = False
+        alive_before = sim.alive.copy()
+        snap = sim.rng.bit_generator.state
+        u = sim.rng.random((1, sim.P))       # the scores _churn_leave draws
+        sim.rng.bit_generator.state = snap   # rewind so the engine redraws
+        sim._churn_leave(np.array([True]))
+        died = np.flatnonzero(alive_before[0] & ~sim.alive[0])
+        assert died.size == 1
+        got = int(bk.churn_victim(jnp.asarray(u[0]),
+                                  jnp.asarray(alive_before[0])))
+        assert got == int(died[0])
+
+    @pytest.mark.parametrize("dead", [(0,), (0, 4), (1, 2, 3, 7)])
+    def test_join_slot_and_anchor_match(self, dead):
+        sim = self._sim()
+        sim.alive[0, list(dead)] = False
+        sim.steps[0] = np.arange(sim.P)      # distinguishable counters
+        alive_before = sim.alive.copy()
+        snap = sim.rng.bit_generator.state
+        u = sim.rng.random((1, sim.P))
+        sim.rng.bit_generator.state = snap
+        t = 1.25
+        sim._churn_join(np.array([True]), t)
+        joined = np.flatnonzero(~alive_before[0] & sim.alive[0])
+        assert joined.size == 1
+        got = int(bk.churn_joiner(jnp.asarray(u[0]),
+                                  jnp.asarray(alive_before[0])))
+        assert got == int(joined[0])
+        # fresh-start anchor: max alive step, decides at t
+        j = int(joined[0])
+        assert sim.steps[0, j] == sim.steps[0, sim.alive[0]].max()
+        assert sim.event_time[0, j] == t and not sim.computing[0, j]
+
+    def test_shared_schedule_machinery(self):
+        """psp_init consumes the engines' exact Poisson schedule draw."""
+        churn = ChurnConfig(leave_rate=1.0, join_rate=0.5, horizon=20.0,
+                            seed=9)
+        cfg = PSPConfig(n_workers=4, churn=churn)
+        st = psp_init(cfg, {"w": jnp.zeros((D,))}, lambda p: None,
+                      jax.random.PRNGKey(0))
+        lt, jt = sample_churn_schedules(np.random.default_rng(churn.seed),
+                                        churn.leave_rate, churn.join_rate,
+                                        churn.horizon)
+        np.testing.assert_allclose(np.asarray(st.leave_times),
+                                   lt.astype(np.float32))
+        np.testing.assert_allclose(np.asarray(st.join_times),
+                                   jt.astype(np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# full trainer run: alive-mask trajectory replayed by a sweep-rule mirror
+# --------------------------------------------------------------------------- #
+class TestTrainerChurnTrajectory:
+    """Drive the elastic trainer and independently replay its churn
+    decisions with a numpy mirror of the sweep-engine rules."""
+
+    CFG = PSPConfig(barrier="pssp", n_workers=W, sample_size=2, staleness=3,
+                    straggler_frac=0.25,
+                    churn=ChurnConfig(leave_rate=2.0, join_rate=2.0,
+                                      horizon=50.0, seed=3))
+
+    @pytest.fixture(scope="class")
+    def trace(self):
+        w_true, grad_fn, opt_update = linear_psp_task(D)
+        cfg = self.CFG
+        st = psp_init(cfg, {"w": jnp.zeros((D,))}, lambda p: None,
+                      jax.random.PRNGKey(1))
+        step = jax.jit(lambda s, b: psp_train_step(cfg, grad_fn, opt_update,
+                                                   s, b))
+        kb = jax.random.PRNGKey(2)
+        rows = []
+        for _ in range(140):
+            kb, k1 = jax.random.split(kb)
+            x = jax.random.normal(k1, (W, 8, D))
+            pre = dict(key=st.key, now=float(st.now),
+                       alive=np.asarray(st.alive).copy(),
+                       step=np.asarray(st.step).copy(),
+                       w=np.asarray(st.server_params["w"]).copy())
+            st, m = step(st, (x, x @ w_true))
+            rows.append((pre, dict(alive=np.asarray(st.alive).copy(),
+                                   step=np.asarray(st.step).copy(),
+                                   views=np.asarray(st.views["w"]).copy(),
+                                   w=np.asarray(st.server_params["w"]).copy())))
+        return st, rows
+
+    def test_alive_trajectory_matches_mirror(self, trace):
+        st, rows = trace
+        cfg = self.CFG
+        lt = np.asarray(st.leave_times)
+        jt = np.asarray(st.join_times)
+        alive_m = np.ones(W, bool)
+        lc = jc = 0
+        n_leaves = n_joins = 0
+        for pre, post in rows:
+            # replicate the step's key chain to recover the churn uniforms
+            _, _, _, k_churn = jax.random.split(pre["key"], 4)
+            k_leave, k_join = jax.random.split(k_churn)
+            u_l = np.asarray(jax.random.uniform(k_leave, (W,)))
+            u_j = np.asarray(jax.random.uniform(k_join, (W,)))
+            now = pre["now"]
+            # sweep-engine rules: ≤1 leave, then ≤1 join; cursors consume
+            # due events even when the population guard skips the effect
+            if lc < lt.size and lt[lc] <= now:
+                lc += 1
+                if alive_m.sum() > 2:
+                    alive_m[np.argmax(np.where(alive_m, u_l, -1.0))] = False
+                    n_leaves += 1
+            if jc < jt.size and jt[jc] <= now:
+                jc += 1
+                if not alive_m.all():
+                    alive_m[np.argmax(np.where(~alive_m, u_j, -1.0))] = True
+                    n_joins += 1
+            np.testing.assert_array_equal(post["alive"], alive_m)
+        assert int(st.leave_cursor) == lc and int(st.join_cursor) == jc
+        # the scenario must actually exercise churn, both directions
+        assert n_leaves >= 2 and n_joins >= 2
+        assert 2 <= alive_m.sum() <= W
+
+    def test_joiner_fresh_start_and_reanchor(self, trace):
+        st, rows = trace
+        checked = 0
+        for pre, post in rows:
+            joined = np.flatnonzero(~pre["alive"] & post["alive"])
+            for j in joined:
+                # fresh-start: max step over the post-churn alive set,
+                # +1 iff the joiner immediately passed the barrier
+                fresh = pre["step"][post["alive"]].max()
+                assert post["step"][j] - fresh in (0, 1)
+                # re-anchored view: the server model as of this tick
+                # (pre-push if the joiner blocked, post-push if it pulled)
+                d_pre = np.abs(post["views"][j] - pre["w"]).max()
+                d_post = np.abs(post["views"][j] - post["w"]).max()
+                assert min(d_pre, d_post) < 1e-6
+                checked += 1
+        assert checked >= 2
+
+    def test_departed_views_frozen(self, trace):
+        _, rows = trace
+        checked = 0
+        for pre, post in rows:
+            stayed_dead = ~pre["alive"] & ~post["alive"]
+            for j in np.flatnonzero(stayed_dead):
+                checked += 1
+                assert post["step"][j] == pre["step"][j]
+        assert checked > 0
+
+
+# --------------------------------------------------------------------------- #
+# masked psum: departed workers contribute zero bytes and zero gradient
+# --------------------------------------------------------------------------- #
+class TestMaskedPsum:
+    """One tick with hand-set alive/busy state: the server update is the
+    masked mean over *alive* completed workers only."""
+
+    @staticmethod
+    def _step(alive_mask):
+        cfg = PSPConfig(barrier="asp", n_workers=W,
+                        churn=ChurnConfig(leave_rate=0.0, join_rate=0.0))
+
+        def grad_fn(params, x):
+            # per-worker distinguishable constant gradient
+            return 0.0 * x, {"w": jnp.full((D,), x)}
+
+        def opt_update(g, s, p):
+            return jax.tree.map(lambda gi: -1.0 * gi, g), s
+
+        st = psp_init(cfg, {"w": jnp.zeros((D,))}, lambda p: None,
+                      jax.random.PRNGKey(0))
+        st = st._replace(alive=jnp.asarray(alive_mask),
+                         busy_until=jnp.zeros((W,)))  # everyone completed
+        x = jnp.arange(1.0, W + 1.0)                  # worker i pushes i+1
+        new, m = psp_train_step(cfg, grad_fn, opt_update, st, x)
+        return st, new, m
+
+    def test_dead_workers_push_nothing(self):
+        alive = np.ones(W, bool)
+        alive[[1, 4, 6]] = False
+        st, new, m = self._step(alive)
+        want = -np.mean(np.arange(1.0, W + 1.0)[alive])  # masked mean only
+        np.testing.assert_allclose(np.asarray(new.server_params["w"]),
+                                   np.full(D, want), rtol=1e-6)
+        assert int(m["pushes"]) == int(alive.sum())
+        assert int(new.total_pushes) == int(alive.sum())
+        # dead workers: no pull, no step bump, views untouched
+        views = np.asarray(new.views["w"])
+        for j in np.flatnonzero(~alive):
+            assert int(new.step[j]) == 0
+            np.testing.assert_array_equal(views[j], np.zeros(D))
+
+    def test_all_alive_is_plain_mean(self):
+        st, new, m = self._step(np.ones(W, bool))
+        want = -np.mean(np.arange(1.0, W + 1.0))
+        np.testing.assert_allclose(np.asarray(new.server_params["w"]),
+                                   np.full(D, want), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# barrier decisions under churn: trainer pinned to the masked BarrierKernel
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("barrier", ("bsp", "ssp", "asp", "pbsp", "pssp"))
+def test_elastic_decisions_pinned_to_masked_kernel(barrier):
+    """Same key ⇒ the elastic trainer's pass pattern IS the alive-masked
+    BarrierKernel's (the sweep engines route through the same functions)."""
+    from repro.core import spmd_psp
+    cfg = PSPConfig(barrier=barrier, n_workers=W, staleness=2, sample_size=2,
+                    churn=ChurnConfig())
+    key = jax.random.PRNGKey(11)
+    steps = jnp.asarray(np.random.default_rng(1).integers(0, 9, W), jnp.int32)
+    alive = jnp.asarray(np.random.default_rng(2).random(W) < 0.7)
+    got = spmd_psp._barrier_allowed(cfg, key, steps, alive)
+    want = cfg.barrier_kernel.allowed(key, steps, alive)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if barrier in ("bsp", "ssp"):
+        # a departed straggler's frozen minimum never gates alive waiters
+        m = np.where(np.asarray(alive), np.asarray(steps),
+                     np.iinfo(np.int32).max)
+        lag = np.asarray(steps) - m.min()
+        np.testing.assert_array_equal(np.asarray(want),
+                                      lag <= cfg.effective_staleness)

@@ -1,28 +1,32 @@
-"""SPMD PSP trainer: one jittable program covering all five barriers."""
+"""SPMD PSP trainer: one jittable program covering all five barriers.
+
+Includes the elastic-worker-set (churn) coverage: population bounds,
+convergence under churn, single-trace jit compilation with the churn
+phase compiled in, and a committed golden churn trace
+(``tests/golden/spmd_churn_trace.json`` — regenerate by running this
+file with ``PSP_REGEN_GOLDEN=1``).  The cross-layer trainer↔simulator
+churn equivalence lives in ``tests/test_elastic_equiv.py``.
+"""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.spmd_psp import PSPConfig, psp_init, psp_train_step
+from repro.core.spmd_psp import (ChurnConfig, PSPConfig, elastic_drive,
+                                 linear_psp_task, psp_init, psp_train_step)
 
 D = 24
+
+GOLDEN_CHURN = os.path.join(os.path.dirname(__file__), "golden",
+                            "spmd_churn_trace.json")
 
 
 @pytest.fixture(scope="module")
 def task():
-    w_true = jax.random.normal(jax.random.PRNGKey(0), (D,)) / np.sqrt(D)
-
-    def grad_fn(params, batch):
-        x, y = batch
-        loss = jnp.mean((x @ params["w"] - y) ** 2)
-        g = jax.grad(lambda p: jnp.mean((x @ p["w"] - y) ** 2))(params)
-        return loss, g
-
-    def opt_update(g, s, p):
-        return jax.tree.map(lambda gi: -0.1 * gi, g), s
-
-    return w_true, grad_fn, opt_update
+    return linear_psp_task(D)
 
 
 def run(task, barrier, ticks=500, straggler_frac=0.25, workers=8):
@@ -93,6 +97,100 @@ def test_read_my_writes_views_update(task):
     assert float(jnp.abs(views).max()) > 0          # pulls happened
     assert int(m["step_spread"]) == 0               # true lockstep
     assert bool(jnp.allclose(views, views[0][None], atol=1e-6))
+
+
+def run_churn(task, barrier, ticks=300, workers=8,
+              churn=ChurnConfig(leave_rate=1.5, join_rate=1.5,
+                                horizon=40.0, seed=7)):
+    """Drive the elastic trainer, returning per-tick alive/step traces."""
+    del task  # the shared elastic_drive harness owns the task draw
+    cfg = PSPConfig(barrier=barrier, n_workers=workers, sample_size=2,
+                    staleness=3, straggler_frac=0.25, churn=churn)
+    w_true, it = elastic_drive(cfg, D, ticks)
+    alive_trace, now_trace, mean_step_trace = [], [], []
+    for st, m in it:
+        bits = np.packbits(np.asarray(st.alive)).tobytes()
+        alive_trace.append(int.from_bytes(bits, "big"))  # any worker count
+        now_trace.append(float(st.now))
+        mean_step_trace.append(float(m["mean_step"]))
+    err = float(jnp.linalg.norm(st.server_params["w"] - w_true)
+                / jnp.linalg.norm(w_true))
+    return st, dict(alive=alive_trace, now=now_trace,
+                    mean_step=mean_step_trace), err
+
+
+class TestElasticChurn:
+    """Elastic worker sets: the trainer under Poisson leave/join churn."""
+
+    @pytest.fixture(scope="class")
+    def churn_run(self, task):
+        return run_churn(task, "pssp")
+
+    def test_population_bounds_and_actual_churn(self, churn_run):
+        st, trace, _ = churn_run
+        counts = [bin(a).count("1") for a in trace["alive"]]
+        assert min(counts) >= 2 and max(counts) <= 8
+        assert len(np.asarray(st.alive)) == 8  # bitmask covers all workers
+        assert len(set(trace["alive"])) > 2          # membership really moved
+        assert int(st.leave_cursor) >= 2 and int(st.join_cursor) >= 2
+
+    def test_converges_under_churn(self, churn_run):
+        _, trace, err = churn_run
+        assert err < 0.25, err
+        # alive-masked progress is monotone-ish and positive
+        assert trace["mean_step"][-1] > trace["mean_step"][0]
+
+    def test_virtual_time_always_advances(self, churn_run):
+        _, trace, _ = churn_run
+        nows = np.asarray(trace["now"])
+        assert np.all(np.diff(nows) >= 0) and nows[-1] > nows[0]
+
+    def test_golden_churn_trace(self, churn_run):
+        """Fixed-seed elastic run pinned to the committed golden trace —
+        any drift in churn ordering, RNG consumption, or alive-masked
+        barrier decisions flips the integer alive bitmasks."""
+        st, trace, err = churn_run
+        got = {
+            "alive_bitmask": trace["alive"][:120],
+            "final_now": round(trace["now"][-1], 4),
+            "leave_cursor": int(st.leave_cursor),
+            "join_cursor": int(st.join_cursor),
+            "total_pushes": int(st.total_pushes),
+            "final_error": round(err, 5),
+        }
+        if os.environ.get("PSP_REGEN_GOLDEN"):
+            with open(GOLDEN_CHURN, "w") as f:
+                json.dump(got, f, indent=1)
+        with open(GOLDEN_CHURN) as f:
+            golden = json.load(f)
+        assert got["alive_bitmask"] == golden["alive_bitmask"]
+        assert got["leave_cursor"] == golden["leave_cursor"]
+        assert got["join_cursor"] == golden["join_cursor"]
+        assert got["total_pushes"] == golden["total_pushes"]
+        assert abs(got["final_now"] - golden["final_now"]) < 1e-3
+        assert abs(got["final_error"] - golden["final_error"]) < 1e-3
+
+    def test_churn_jit_single_compilation(self, task):
+        """The churn phase is lax-only: one trace, even as events fire."""
+        w_true, grad_fn, opt_update = task
+        cfg = PSPConfig(barrier="pbsp", n_workers=4, sample_size=2,
+                        churn=ChurnConfig(leave_rate=3.0, join_rate=3.0,
+                                          horizon=10.0, seed=1))
+        st = psp_init(cfg, {"w": jnp.zeros((D,))}, lambda p: None,
+                      jax.random.PRNGKey(0))
+        calls = 0
+
+        def counting(s, b):
+            nonlocal calls
+            calls += 1
+            return psp_train_step(cfg, grad_fn, opt_update, s, b)
+
+        step = jax.jit(counting)
+        x = jnp.ones((4, 8, D))
+        for _ in range(30):
+            st, _ = step(st, (x, jnp.ones((4, 8))))
+        assert calls == 1
+        assert int(st.leave_cursor) + int(st.join_cursor) > 0
 
 
 def test_jit_single_compilation(task):

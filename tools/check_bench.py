@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate for the sweep engines.
+
+Compares a *fresh* ``benchmarks.sweep_bench`` smoke run against the
+committed baseline ``BENCH_sweep.json`` and fails when a grid engine's
+throughput regressed by more than the tolerance (default 25%).
+
+The compared metric is ``speedup_vs_event`` — each engine's throughput
+normalized by the event-driven reference timed *in the same run on the
+same machine* — so the committed baseline transfers across hosts: a slow
+CI runner slows the event loop and the grid engines alike, while a real
+regression (extra compiles, host transfers, a de-vectorized tick) drops
+only the grid engine's ratio.  Gated engines default to ``numpy`` and
+``jax``; the Pallas-interpret row is too noisy on CPU to gate.
+
+Usage (the CI fast lane runs exactly this)::
+
+    python -m benchmarks.sweep_bench --no-pallas --out bench_fresh.json
+    python tools/check_bench.py --fresh bench_fresh.json
+
+Without ``--fresh`` the gate runs the smoke benchmark itself (pallas row
+skipped) and writes the fresh JSON next to the baseline as
+``BENCH_fresh.json``.  Exit status 0 when every gated engine is within
+tolerance, 1 otherwise (one ``FAIL`` line per regressed engine),
+mirroring the doc-coverage gate's contract.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_sweep.json")
+DEFAULT_ENGINES = ("numpy", "jax")
+DEFAULT_TOLERANCE = 0.25
+METRIC = "speedup_vs_event"
+
+
+def load_engines(path: str) -> Dict[str, Dict]:
+    """Read a ``BENCH_sweep.json``-schema file and return its engine map."""
+    with open(path) as f:
+        data = json.load(f)
+    engines = data.get("engines")
+    if not isinstance(engines, dict):
+        raise ValueError(f"{path}: no 'engines' table "
+                         "(not a sweep_bench JSON?)")
+    return engines
+
+
+def check(baseline: Dict[str, Dict], fresh: Dict[str, Dict],
+          engines: List[str], tolerance: float) -> List[str]:
+    """Return one failure line per engine regressed beyond ``tolerance``.
+
+    An engine missing from either file is a failure too — a silently
+    dropped benchmark row must not read as a pass.
+    """
+    failures = []
+    for name in engines:
+        base_row, fresh_row = baseline.get(name), fresh.get(name)
+        if base_row is None or fresh_row is None:
+            line = (f"FAIL {name}: engine row missing "
+                    f"(baseline={base_row is not None}, "
+                    f"fresh={fresh_row is not None})")
+            print(line)
+            failures.append(line)
+            continue
+        base, got = base_row.get(METRIC), fresh_row.get(METRIC)
+        if base is None or got is None:
+            line = f"FAIL {name}: no {METRIC} in row"
+            print(line)
+            failures.append(line)
+            continue
+        floor = base * (1.0 - tolerance)
+        status = "ok" if got >= floor else "FAIL"
+        line = (f"{status} {name}: {METRIC} {got:.2f}x vs baseline "
+                f"{base:.2f}x (floor {floor:.2f}x at "
+                f"{tolerance:.0%} tolerance)")
+        print(line)
+        if status == "FAIL":
+            failures.append(line)
+    return failures
+
+
+def main(argv=None) -> int:
+    """CLI entry: compare fresh vs committed sweep-bench throughput."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=BASELINE_PATH,
+                    help="committed baseline JSON (default: repo root)")
+    ap.add_argument("--fresh", default=None,
+                    help="fresh sweep_bench JSON; omitted = run the smoke "
+                         "benchmark now (pallas row skipped)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed fractional throughput drop (default 0.25)")
+    ap.add_argument("--engines", default=",".join(DEFAULT_ENGINES),
+                    help="comma-separated engine rows to gate")
+    a = ap.parse_args(argv)
+
+    baseline = load_engines(a.baseline)
+    if a.fresh is None:
+        # self-run mode: make both the benchmarks package and the
+        # src-layout repro package importable from a bare checkout
+        sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+        sys.path.insert(0, REPO_ROOT)
+        from benchmarks.sweep_bench import sweep_speedup
+        fresh_path = os.path.join(REPO_ROOT, "BENCH_fresh.json")
+        print(f"running smoke sweep_bench -> {fresh_path}", file=sys.stderr)
+        fresh = sweep_speedup(pallas=False, out_path=fresh_path)["engines"]
+    else:
+        fresh = load_engines(a.fresh)
+
+    failures = check(baseline, fresh, a.engines.split(","), a.tolerance)
+    if failures:
+        print(f"bench-regression gate: {len(failures)} engine(s) regressed "
+              f">{a.tolerance:.0%}", file=sys.stderr)
+        return 1
+    print("bench-regression gate: all engines within tolerance",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,10 +1,11 @@
 #!/usr/bin/env python
-"""Doc-coverage gate for the public engine/kernel APIs.
+"""Doc-coverage gate for the public engine/kernel/tool APIs.
 
-Walks the given packages (default: ``src/repro/core`` and
-``src/repro/kernels``) with ``ast`` — no third-party dependency, so the
-gate runs identically in CI and in a bare container — and fails when a
-module, public class, or public function/method lacks a docstring.
+Walks the given packages (default: ``src/repro/core``,
+``src/repro/kernels`` and ``tools`` — the CI gate scripts gate
+themselves) with ``ast`` — no third-party dependency, so the gate runs
+identically in CI and in a bare container — and fails when a module,
+public class, or public function/method lacks a docstring.
 Private names (leading underscore), dunders other than ``__init__``
 modules, and nested ``lambda``/local helpers are exempt.
 
@@ -23,7 +24,7 @@ import sys
 from pathlib import Path
 from typing import Iterator, List, Tuple
 
-DEFAULT_PATHS = ("src/repro/core", "src/repro/kernels")
+DEFAULT_PATHS = ("src/repro/core", "src/repro/kernels", "tools")
 
 Violation = Tuple[str, int, str, str]
 
