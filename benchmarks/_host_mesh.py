@@ -1,0 +1,23 @@
+"""Host-device mesh bootstrap for CPU benchmark runs.
+
+Importing this module — **before anything imports jax** — forces an
+``xla_force_host_platform_device_count`` mesh (one device per core,
+capped at 8) so the jax sweep backend exercises its sharded multi-device
+path on plain CPU hosts, exactly as recorded in ``BENCH_sweep.json``.
+Both benchmark entry points (``benchmarks.sweep_bench`` and the
+``benchmarks.run`` harness) import it first; if jax is already
+initialised the bootstrap is a silent no-op and the run proceeds on
+whatever mesh exists.  ``PSP_BENCH_HOST_DEVICES=0`` disables it, any
+other value pins the mesh size.
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    _n = os.environ.get("PSP_BENCH_HOST_DEVICES")
+    _n = (os.cpu_count() or 1) if _n is None else int(_n)
+    if _n > 1 and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={min(_n, 8)}").strip()

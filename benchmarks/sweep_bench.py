@@ -4,13 +4,21 @@ Runs the same Fig-2-style scenario matrix (five barriers × five straggler
 fractions, matched seeds) through every engine — a Python loop over the
 discrete-event :func:`~repro.core.simulator.run_simulation` (the
 *before*), the vectorized NumPy :func:`~repro.core.vector_sim.run_sweep`,
-its jax backend (one jitted ``lax.scan`` with the fused control-plane
-tick), and the Pallas tick kernel (``PSP_TICK_IMPL=interpret`` through
-the Pallas interpreter on CPU; the real Mosaic kernel when a TPU is
-attached) — checks the engines agree at the distribution level, and
-records wall-clock plus speedups in ``BENCH_sweep.json`` at the repo
-root.  Schema and regeneration flags are documented in
-``docs/BENCHMARKS.md``.
+its jax backend (donated chunked scans with the fused full tick, sharded
+over the host's device mesh), and the Pallas tick kernel
+(``PSP_TICK_IMPL=interpret`` through the Pallas interpreter on CPU; the
+real Mosaic kernel when a TPU is attached) — checks the engines agree at
+the distribution level, and records wall-clock plus speedups in
+``BENCH_sweep.json`` at the repo root.  Grid-engine rows carry separate
+**compile** and **run** phases so a compile-time regression can't hide
+inside a throughput number (and vice versa).  Schema and regeneration
+flags are documented in ``docs/BENCHMARKS.md``.
+
+On CPU hosts the benchmark forces an ``xla_force_host_platform_device_count``
+mesh (one device per core, capped at 8) **before jax initialises**, so the
+jax row exercises the sharded multi-device path exactly as a TPU pod slice
+would; set ``PSP_BENCH_HOST_DEVICES=0`` to disable, or any value to pin
+the mesh size.
 
     PYTHONPATH=src python -m benchmarks.sweep_bench [--full] [--no-pallas]
 """
@@ -22,11 +30,13 @@ import os
 import time
 from typing import Dict
 
-import jax
+from benchmarks import _host_mesh  # noqa: F401  (must precede jax import)
 
-from repro.core.barriers import make_barrier
-from repro.core.simulator import SimConfig, run_simulation
-from repro.core.vector_sim import run_sweep
+import jax  # noqa: E402  (after the device-count bootstrap, by design)
+
+from repro.core.barriers import make_barrier            # noqa: E402
+from repro.core.simulator import SimConfig, run_simulation  # noqa: E402
+from repro.core.vector_sim import run_sweep             # noqa: E402
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sweep.json")
 
@@ -46,35 +56,38 @@ def _configs(full: bool):
 
 
 def _timed_grid(cfgs, backend: str, impl: str | None = None):
-    """(seconds, results) for one grid engine, jit warm-up excluded.
+    """(compile_s, run_s, results) for one grid engine.
 
-    Grid engines are timed **best-of-2**: a sweep is ~2 s, so one
+    The first full-matrix call pays jit tracing + compilation — recorded
+    as the *compile* phase (numpy's is import/BLAS warm-up, ~0).  The
+    *run* phase is then timed **best-of-3**: a sweep is ~1–2 s, so one
     stray scheduler hiccup would otherwise dominate the measurement —
-    and the CI bench-regression gate (``tools/check_bench.py``)
-    compares these numbers across runs.  The 20× longer event-loop
-    reference stays single-shot (its relative noise is small).
+    and the CI bench-regression gate (``tools/check_bench.py``) compares
+    these numbers across runs.  The 20× longer event-loop reference
+    stays single-shot (its relative noise is small).
     """
     from repro.core import vector_sim_jax
     env_before = os.environ.get("PSP_TICK_IMPL")
     if impl is not None:
         os.environ["PSP_TICK_IMPL"] = impl
     try:
-        # numpy needs only a BLAS/import warm-up; jax jit-specialises on
-        # the batch shape, so its warm-up must run the full config list
-        run_sweep(cfgs if backend == "jax" else cfgs[:2], backend=backend)
+        t0 = time.time()
+        run_sweep(cfgs, backend=backend)
+        compile_s = time.time() - t0
         best = float("inf")
-        for _ in range(2):
+        for _ in range(3):
             t0 = time.time()
             res = run_sweep(cfgs, backend=backend)
             best = min(best, time.time() - t0)
-        return best, res
+        # first-call total minus steady-state run ≈ trace+compile cost
+        return max(compile_s - best, 0.0), best, res
     finally:
         if impl is not None:
             if env_before is None:
                 os.environ.pop("PSP_TICK_IMPL", None)
             else:
                 os.environ["PSP_TICK_IMPL"] = env_before
-        vector_sim_jax._compiled_scan.cache_clear()
+        vector_sim_jax._compiled_chunk.cache_clear()
 
 
 def sweep_speedup(full: bool = False, backend: str | None = None,
@@ -94,18 +107,20 @@ def sweep_speedup(full: bool = False, backend: str | None = None,
     baseline-regeneration command) writes ``BENCH_sweep.json``.
     """
     cfgs = _configs(full)
-    timings, per_engine = {}, {}
-    timings["numpy"], per_engine["numpy"] = _timed_grid(cfgs, "numpy")
+    compile_t, timings, per_engine = {}, {}, {}
+    compile_t["numpy"], timings["numpy"], per_engine["numpy"] = \
+        _timed_grid(cfgs, "numpy")
     # baseline jax row pins the jnp reference tick — on TPU "auto" would
     # dispatch the Pallas kernel and the pallas row would compare the
     # kernel against itself
-    timings["jax"], per_engine["jax"] = _timed_grid(cfgs, "jax", impl="ref")
+    compile_t["jax"], timings["jax"], per_engine["jax"] = \
+        _timed_grid(cfgs, "jax", impl="ref")
     if pallas:
         # Pallas tick kernel: the interpreter lowers it to XLA on CPU, so
         # this times kernel *semantics* end-to-end; on a TPU host the same
         # row times the real fused Mosaic kernel (impl="auto")
         impl = "auto" if jax.default_backend() == "tpu" else "interpret"
-        timings["pallas"], per_engine["pallas"] = \
+        compile_t["pallas"], timings["pallas"], per_engine["pallas"] = \
             _timed_grid(cfgs, "jax", impl=impl)
     t0 = time.time()
     ev = [run_simulation(c) for c in cfgs]
@@ -119,10 +134,13 @@ def sweep_speedup(full: bool = False, backend: str | None = None,
     engines = {
         "event": {"seconds": timings["event"]},
         "numpy": {"seconds": timings["numpy"],
+                  "compile_seconds": compile_t["numpy"],
                   "speedup_vs_event":
                       timings["event"] / max(timings["numpy"], 1e-9),
                   "max_progress_deviation": max_dev(per_engine["numpy"])},
         "jax": {"seconds": timings["jax"],
+                "compile_seconds": compile_t["jax"],
+                "n_devices": len(jax.devices()),
                 "speedup_vs_event":
                     timings["event"] / max(timings["jax"], 1e-9),
                 "throughput_vs_numpy":
@@ -132,6 +150,7 @@ def sweep_speedup(full: bool = False, backend: str | None = None,
     if pallas:
         engines["pallas"] = {
             "seconds": timings["pallas"],
+            "compile_seconds": compile_t["pallas"],
             "tick_impl": ("pallas" if jax.default_backend() == "tpu"
                           else "interpret"),
             "speedup_vs_event":
@@ -140,18 +159,22 @@ def sweep_speedup(full: bool = False, backend: str | None = None,
                 timings["jax"] / max(timings["pallas"], 1e-9),
             "max_progress_deviation": max_dev(per_engine["pallas"]),
         }
+    grid = [name for name in ("numpy", "jax", "pallas") if name in engines]
     res = {
         "sweep": "fig2_stragglers",
         "n_configs": len(cfgs),
         "n_nodes": cfgs[0].n_nodes,
         "duration_s": cfgs[0].duration,
         "engines": engines,
-        # acceptance headline: the jax backend must not trail numpy
-        "speedup": timings["event"] / max(timings["jax"], 1e-9),
-        # worst deviation of ANY grid engine (incl. the pallas row, which
-        # on TPU is the only place the Mosaic kernel's semantics show up)
-        "max_progress_deviation": max(max_dev(r)
-                                      for r in per_engine.values()),
+        # cross-engine summary: every top-level field is an explicit
+        # maximum over the grid-engine rows (per-engine values live in
+        # the rows themselves) — see docs/BENCHMARKS.md
+        "summary": {
+            "best_speedup_vs_event": max(
+                engines[n]["speedup_vs_event"] for n in grid),
+            "max_progress_deviation": max(
+                engines[n]["max_progress_deviation"] for n in grid),
+        },
     }
     if out_path is not None:
         with open(out_path, "w") as f:
@@ -179,10 +202,11 @@ def main(argv=None) -> None:
                  f"({e['pallas']['tick_impl']}) ")
     print(f"event={e['event']['seconds']:.2f}s "
           f"numpy={e['numpy']['seconds']:.2f}s "
-          f"jax={e['jax']['seconds']:.2f}s "
+          f"jax={e['jax']['seconds']:.2f}s"
+          f"[{e['jax']['n_devices']}dev] "
           f"{extra}"
           f"jax_vs_numpy={e['jax']['throughput_vs_numpy']:.2f}x "
-          f"max_dev={res['max_progress_deviation']:.3f}")
+          f"max_dev={res['summary']['max_progress_deviation']:.3f}")
 
 
 if __name__ == "__main__":

@@ -112,9 +112,10 @@ class Engine:
         ``common`` applies to every scenario.  Scenarios sharing a
         structural shape are advanced simultaneously
         (:func:`repro.core.vector_sim.run_sweep`); ``backend`` selects the
-        grid engine — ``"numpy"`` array ops, or ``"jax"``: one
-        device-resident ``lax.scan`` whose control-plane tick is the fused
-        kernel of :mod:`repro.kernels.psp_tick` (ragged shapes batch into
+        grid engine — ``"numpy"`` array ops, or ``"jax"``: device-resident
+        donated chunk scans, sharded over the host mesh, whose whole tick
+        (control + data plane) is the fused kernel of
+        :mod:`repro.kernels.psp_tick` (ragged shapes batch into
         pow2-bucketed scans); results come back in sweep order either way.
         """
         cfgs = [self._config(**{**common, **kw}) for kw in sweep]

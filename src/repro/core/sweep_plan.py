@@ -1,0 +1,196 @@
+"""Execution planner for the jax sweep backend's chunked, sharded scans.
+
+The jax grid engine (:mod:`repro.core.vector_sim_jax`) no longer runs one
+monolithic ``lax.scan`` over the whole tick grid.  It runs a sequence of
+donated *chunk* scans, each advancing a block of **superticks** (``stride``
+grid ticks drawn and executed together, one trace record emitted per
+supertick), sharded over a 1-D device mesh on the scenario (B) dimension.
+This module is the single place where the three free parameters of that
+execution are chosen, so the engine itself stays policy-free:
+
+``stride`` — ticks per trace record / noise-draw block
+    Traces are only *consumed* on the measurement grid, so recording them
+    every tick wastes output bandwidth; and drawing each tick's noise in
+    its own tiny ``jax.random`` call wastes RNG dispatch.  The stride is
+    the largest divisor of the measurement cadence (every measurement
+    index must land exactly on a record) whose per-supertick noise block
+    still fits the memory budget — churn/ragged batches carry per-row
+    ``P × P`` score matrices, which caps the stride long before the
+    no-churn fast path does.
+
+``chunks`` — binary decomposition of the supertick count
+    Each chunk length compiles once (the jit cache is keyed on it) and
+    pow2 lengths recur across sweeps, so the schedule is the greedy
+    binary decomposition of the supertick count, largest block first:
+    40 records → 32 + 8.  The last block never over-runs the grid —
+    remainder ticks below one stride are padded with *dead* ticks that
+    every row ignores (their time lies beyond all row horizons), and a
+    chunk whose every row is already past its horizon is skipped by the
+    caller's all-rows-done early exit (merged rows may have *different*
+    horizons — see :func:`repro.core.vector_sim._merge_key`).
+
+``n_devices`` / padding — mesh placement of the scenario rows
+    The B dimension is sharded over a 1-D mesh (rows are independent;
+    per-row noise is keyed by *global* row id and shared noise by global
+    node id, so results are bit-identical for every mesh size — the
+    degenerate 1-device mesh IS the single-device engine).  Rows pad up
+    to a multiple of the mesh so each device owns an equal block; padded
+    rows carry a negative horizon and never tick.  Node-keyed shared
+    draws (the minibatch blob) are likewise split over the mesh and
+    all-gathered, so RNG cost shards with the rows.
+
+Env overrides (all optional, for tests and benchmarks):
+
+=====================  ==================================================
+``PSP_SWEEP_DEVICES``  mesh size (default: every local device)
+``PSP_TRACE_STRIDE``   force the record stride (still snapped to a
+                       divisor of the measurement cadence)
+``PSP_SWEEP_CHUNK``    force a uniform chunk length in records
+=====================  ==================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["SweepPlan", "plan_sweep"]
+
+#: per-supertick noise-block budget (bytes); caps the stride for batches
+#: whose per-row score matrices scale with B·P²
+_NOISE_BUDGET = 64 << 20
+
+#: chunks smaller than this are not worth their compile (records)
+_MIN_CHUNK = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """One sweep's execution schedule (see module docstring)."""
+
+    stride: int                 #: grid ticks per trace record
+    n_rec: int                  #: scheduled records (covers the padded grid)
+    n_rec_live: int             #: records containing at least one live tick
+    chunks: Tuple[int, ...]     #: record-block lengths, in execution order
+    n_devices: int              #: 1-D mesh size over the B dimension
+    b_pad: int                  #: scenario rows after mesh padding
+    node_pad: int               #: node-keyed draw slots after mesh padding
+
+    @property
+    def n_ticks(self) -> int:
+        """Padded tick-grid length (``n_rec × stride``)."""
+        return self.n_rec * self.stride
+
+
+def _record_stride(n_ticks: int, measure_idx: np.ndarray,
+                   noise_bytes_per_tick: int) -> int:
+    """Largest stride aligning every measurement index on a record.
+
+    A stride ``s`` records states after global ticks ``s−1, 2s−1, …``; a
+    measurement landing on tick index ``m`` is representable iff
+    ``s | (m + 1)``, so the admissible strides are exactly the divisors
+    of ``gcd{m + 1}`` — and the full grid must land on a record too,
+    else the final state would be cut short, so ``n_ticks`` joins the
+    gcd.  Among those, take the largest whose supertick noise block
+    stays under the budget (``PSP_TRACE_STRIDE`` forces a candidate,
+    snapped down to the nearest admissible divisor).
+    """
+    vals = np.concatenate([measure_idx + 1, [n_ticks]])
+    q = int(np.gcd.reduce(vals.astype(np.int64)))
+    cap = max(1, _NOISE_BUDGET // max(noise_bytes_per_tick, 1))
+    forced = os.environ.get("PSP_TRACE_STRIDE")
+    if forced:
+        cap = min(cap, max(1, int(forced)))
+    best = 1
+    for s in range(1, int(math.isqrt(q)) + 1):
+        if q % s == 0:
+            for cand in (s, q // s):
+                if cand <= cap:
+                    best = max(best, cand)
+    return best
+
+
+def _binary_chunks(n_rec: int) -> Tuple[int, ...]:
+    """Greedy pow2 decomposition of the record count, largest first.
+
+    Pow2 block lengths recur across sweeps of the same structural shape,
+    so every block of the schedule hits the jit cache after its first
+    compile; the decomposition is exact (no dead records beyond the
+    sub-stride grid padding).  ``PSP_SWEEP_CHUNK`` forces a uniform
+    length instead — the tail chunk is then *scheduled* past the live
+    records and the runner's early exit skips it once every row is done.
+    """
+    forced = os.environ.get("PSP_SWEEP_CHUNK")
+    if forced:
+        c = max(1, int(forced))
+        return tuple([c] * math.ceil(n_rec / c))
+    out, left = [], n_rec
+    while left > 0:
+        block = 1 << (left.bit_length() - 1)
+        block = max(block, _MIN_CHUNK) if left >= _MIN_CHUNK else left
+        block = min(block, left)
+        out.append(block)
+        left -= block
+    return tuple(out)
+
+
+def plan_sweep(n_ticks: int, measure_idx: Sequence[int], B: int, P: int, *,
+               batch: int, d: int, k_max: int, masked: bool,
+               has_churn: bool, n_devices: Optional[int] = None) -> SweepPlan:
+    """Choose stride, chunk schedule and mesh placement for one sweep.
+
+    Args:
+      n_ticks: live tick-grid length (before stride padding).
+      measure_idx: global tick index of each measurement point (any row —
+        merged rows share the cadence, shorter horizons are prefixes).
+      B: scenario rows in the batch (before mesh padding).
+      P: padded node-slot count of the batch.
+      batch / d: data-plane minibatch size and model dimension.
+      k_max: static β-sample slot count (0 = no sampled rows).
+      masked: per-row alive-masked sampling (churn or ragged padding) —
+        the memory-dominant case (B·P² scores per tick).
+      has_churn: churn uniforms are drawn per row per tick.
+      n_devices: mesh size; default every local device
+        (``PSP_SWEEP_DEVICES`` overrides), clamped to B so no device
+        owns zero rows.
+    """
+    if n_devices is None:
+        n_devices = int(os.environ.get("PSP_SWEEP_DEVICES", "0")) or None
+    import jax
+    avail = len(jax.devices())
+    if n_devices is None:
+        n_devices = avail
+    # clamp: no device may own zero rows, and a request beyond the host's
+    # devices (e.g. a stale env override) degrades instead of failing
+    ndev = max(1, min(int(n_devices), B, avail))
+    # each device's row block pads up to the data-plane GEMM width
+    # (DATA_PLANE_BLOCK), so neither the fused tick nor the kernel ever
+    # pays a per-tick pad copy; padded rows are inert (negative horizon)
+    # and the control plane's cost on them is negligible
+    from repro.kernels.psp_tick import DATA_PLANE_BLOCK
+    b_loc = math.ceil(math.ceil(B / ndev) / DATA_PLANE_BLOCK) \
+        * DATA_PLANE_BLOCK
+    b_pad = b_loc * ndev
+    node_pad = math.ceil(P / ndev) * ndev
+
+    # the engine draws per-row noise for every PADDED row (keys are
+    # global row ids, inert rows included), so the memory estimate must
+    # use b_pad, not B — a B=1 churn sweep still draws a 16-row block
+    noise = P * batch * (d + 1)                     # minibatch blob
+    noise += b_pad * P                              # step-duration jitter
+    if k_max > 0:
+        noise += b_pad * P * P if masked else (P if k_max == 1 else P * P)
+    if has_churn:
+        noise += 2 * b_pad * P
+    stride = _record_stride(n_ticks, np.asarray(measure_idx, np.int64),
+                            4 * noise)
+
+    n_rec_live = math.ceil(n_ticks / stride)
+    chunks = _binary_chunks(n_rec_live)
+    n_rec = sum(chunks)
+    return SweepPlan(stride=stride, n_rec=n_rec, n_rec_live=n_rec_live,
+                     chunks=chunks, n_devices=ndev, b_pad=b_pad,
+                     node_pad=node_pad)

@@ -35,21 +35,24 @@ Backend matrix
 backend      no churn                    churn (alive-masked rows)
 ===========  ==========================  ==========================
 ``numpy``    array ops per grid tick     same + per-tick event batch
-``jax``      one jitted ``lax.scan``     same, per-row masked samples
+``jax``      donated chunked scans       same, per-row masked samples
 ===========  ==========================  ==========================
 
 Both backends handle churn natively — nothing falls back to the event
-engine.  The jax backend is device-resident: each grid tick's control
-plane (churn, finish bookkeeping, barrier decisions, start/re-poll) runs
-as one fused kernel — the Pallas tick of :mod:`repro.kernels.psp_tick` on
-TPU, its jnp twin on CPU — inside a single ``lax.scan`` over the whole
-grid (:mod:`repro.core.vector_sim_jax`), with β-samples from the shared
+engine.  The jax backend is device-resident: each grid tick — control
+plane (churn, finish bookkeeping, barrier decisions, start/re-poll)
+*and* data plane (masked SGD push, model-view pull) — runs as one fused
+kernel, the Pallas tick of :mod:`repro.kernels.psp_tick` on TPU, its
+jnp twin on CPU, driven by donated chunked scans sharded over a 1-D
+device mesh (:mod:`repro.core.vector_sim_jax`, schedule chosen by
+:mod:`repro.core.sweep_plan`), with β-samples from the shared
 :mod:`repro.core.sampling` primitives and barrier/straggler semantics
 single-sourced in :mod:`repro.core.barrier_kernel` (the same model the
 SPMD trainer uses).  The jax backend additionally merges structural
-groups that differ only in ``n_nodes`` or churn-ness (ragged P padded
-with permanently-dead alive-mask slots), so a mixed sweep compiles once
-per (dim, batch, grid) shape; see ``docs/ARCHITECTURE.md`` for the full
+groups that differ in ``n_nodes``, churn-ness or duration (ragged P
+padded with permanently-dead alive-mask slots; shorter rows freeze at
+their own horizon), so a mixed sweep compiles once per
+(dim, batch, cadence) shape; see ``docs/ARCHITECTURE.md`` for the full
 engine map.
 
 Simulation model (one grid tick of width ``dt``)
@@ -124,20 +127,23 @@ def _group_key(cfg: SimConfig) -> Tuple:
 
 
 def _merge_key(cfg: SimConfig) -> Tuple:
-    """Relaxed jax-backend grouping key: ragged P and churn-ness merge.
+    """Relaxed jax grouping key: ragged P, churn-ness and duration merge.
 
     The jax backend pads heterogeneous ``n_nodes`` up to the group max and
-    runs the merged batch as **one** ``lax.scan`` — padded node slots are
-    permanently dead alive-mask entries — so a ragged sweep costs one
-    compile per bucket instead of one per structural shape.  P is
-    bucketed to the next power of two: that caps the padding waste of any
-    row at 2× (4× on the P² sampling terms) while still collapsing the
-    near-size shapes a scalability sweep produces.  Only the fields that
-    fix the tick/measurement grids and the data-plane shapes must still
-    agree exactly.
+    runs the merged batch as **one** chunked scan schedule — padded node
+    slots are permanently dead alive-mask entries — so a ragged sweep
+    costs one compile per bucket instead of one per structural shape.  P
+    is bucketed to the next power of two: that caps the padding waste of
+    any row at 2× (4× on the P² sampling terms) while still collapsing
+    the near-size shapes a scalability sweep produces.  Durations merge
+    too: the tick grid runs to the group maximum and each row freezes at
+    its own horizon (the fused tick's ``active`` gate), with the chunk
+    runner early-exiting once every row is done.  Only the fields that
+    fix the tick/measurement cadence and the data-plane shapes must
+    still agree exactly.
     """
     p_bucket = 1 << max(0, cfg.n_nodes - 1).bit_length()
-    return (p_bucket, cfg.dim, cfg.batch, float(cfg.duration),
+    return (p_bucket, cfg.dim, cfg.batch,
             float(cfg.measure_interval), float(cfg.poll_interval))
 
 
@@ -185,7 +191,11 @@ class VectorSimulator:
         self.n_true = np.array([c.n_nodes for c in configs], dtype=np.int64)
         P, d = int(self.n_true.max()), c0.dim
         self.B, self.P, self.d, self.batch = B, P, d, c0.batch
-        self.duration = float(c0.duration)
+        #: per-row horizon; the shared grid runs to the batch max and the
+        #: jax tick freezes each row past its own duration (merged
+        #: durations are a jax-only grouping — numpy batches are strict)
+        self.row_duration = np.array([float(c.duration) for c in configs])
+        self.duration = float(self.row_duration.max())
         self.poll_interval = float(c0.poll_interval)
         self.measure_interval = float(c0.measure_interval)
         self.dt = float(dt) if dt is not None else self.poll_interval
@@ -272,9 +282,11 @@ class VectorSimulator:
             self.leave_counts = np.zeros((ticks.size, B), dtype=np.int64)
             self.join_counts = np.zeros((ticks.size, B), dtype=np.int64)
             for b, cfg in enumerate(configs):
+                # sampled to the ROW's horizon: a merged shorter-duration
+                # row must see no churn events past its own freeze point
                 lt, jt = sample_churn_schedules(
                     self.rng, cfg.churn_leave_rate, cfg.churn_join_rate,
-                    self.duration)
+                    float(cfg.duration))
                 self.leave_counts[:, b] = np.histogram(lt, bins=edges)[0]
                 self.join_counts[:, b] = np.histogram(jt, bins=edges)[0]
 
@@ -509,17 +521,25 @@ class VectorSimulator:
                 self.event_time[sm_fail] = self.ready[sm_fail]
 
     def _results(self, errs: np.ndarray, upds: np.ndarray) -> List[SimResult]:
-        """Assemble per-row :class:`SimResult`\\ s from [B, M] traces."""
+        """Assemble per-row :class:`SimResult`\\ s from [B, M] traces.
+
+        A merged batch can carry rows with different horizons (jax
+        backend): each row's traces are cut at its own duration — the
+        trailing grid points belong to longer-lived batch mates.
+        """
         final_err = (np.linalg.norm(self.w - self.w_true, axis=1)
                      / self.w_true_norm)
         out = []
         for b in range(self.B):
             n = int(self.n_true[b])   # drop ragged padding slots
+            mb = min(errs.shape[1],
+                     int(np.searchsorted(self.m_times,
+                                         self.row_duration[b] + 1e-9)))
             out.append(SimResult(
                 steps=self.steps[b, :n].copy(),
-                times=self.m_times[: errs.shape[1]].copy(),
-                errors=errs[b].copy(),
-                server_updates=upds[b].copy(),
+                times=self.m_times[:mb].copy(),
+                errors=errs[b, :mb].copy(),
+                server_updates=upds[b, :mb].copy(),
                 control_messages=int(self.control_messages[b]),
                 total_updates=int(self.total_updates[b]),
                 mean_progress=float(self.steps[b][self.alive[b]].mean()),
@@ -557,19 +577,20 @@ def run_sweep(configs: Sequence[SimConfig], *,
     Configs are grouped by structural shape and each group is advanced as
     one :class:`VectorSimulator` — churn configs run natively with
     per-row alive masks; nothing falls back to the event-driven reference.
-    The numpy backend groups strictly (identical ``n_nodes`` and
-    churn-ness per batch); the jax backend groups by the relaxed
+    The numpy backend groups strictly (identical ``n_nodes``, duration
+    and churn-ness per batch); the jax backend groups by the relaxed
     :func:`_merge_key`, padding ragged ``n_nodes`` with permanently-dead
-    alive-mask slots so mixed-size sweeps run as one device-resident
-    ``lax.scan`` per (dim, batch, grid) shape.  Results come back in input
-    order regardless of backend or grouping.
+    alive-mask slots and freezing shorter-duration rows at their own
+    horizon, so mixed sweeps run as one chunk-scan schedule per
+    (dim, batch, cadence) shape.  Results come back in input order
+    regardless of backend or grouping.
 
     Args:
       configs: scenario list (any mix of shapes/barriers/churn).
       dt: grid width; defaults to each group's ``poll_interval``.
-      backend: ``"numpy"`` (array ops per tick) or ``"jax"`` (one jitted
-        ``lax.scan`` over the tick grid with the fused control-plane tick
-        of :mod:`repro.kernels.psp_tick`,
+      backend: ``"numpy"`` (array ops per tick) or ``"jax"`` (donated
+        chunked scans over the tick grid with the fused tick of
+        :mod:`repro.kernels.psp_tick`, sharded over the device mesh —
         :mod:`repro.core.vector_sim_jax`).
     """
     results: List[Optional[SimResult]] = [None] * len(configs)

@@ -1,18 +1,39 @@
-"""JAX backend of the vectorized sweep engine: one device-resident scan.
+"""JAX backend of the vectorized sweep engine: donated, sharded chunk scans.
 
-One grid tick splits into a *control plane* (churn, finish bookkeeping,
-barrier decisions, start/re-poll anchoring over the ``(B, P)`` state
-pytree) and a *data plane* (the masked SGD push, a batched einsum).  The
-control plane runs as one fused kernel — the Pallas tick
-(:mod:`repro.kernels.psp_tick`) on TPU, its pure-jnp twin on CPU, selected
-by :func:`repro.kernels.ops.psp_tick` with ``impl="auto"`` (override with
-the ``PSP_TICK_IMPL`` env var, e.g. ``interpret`` to exercise the kernel
-on CPU).  :func:`run_batch` drives the whole tick grid with ``lax.scan``
-under ``jit``: the state pytree never leaves the device during the sweep —
-inputs are staged up front, the scan carries everything, and exactly one
-``device_get`` at the end fetches traces plus final state
-(``tests/test_vector_sim_jax.py`` holds a ``transfer_guard`` test on
-this).
+One grid tick — control plane (churn, finish bookkeeping, barrier
+decisions, start/re-poll anchoring) *and* data plane (masked SGD push +
+model-view pull) — is one fused kernel: the Pallas tick
+(:mod:`repro.kernels.psp_tick`) on TPU, its pure-jnp twin on CPU,
+selected by :func:`repro.kernels.ops.psp_tick` with ``impl="auto"``
+(override with the ``PSP_TICK_IMPL`` env var, e.g. ``interpret`` to
+exercise the kernel on CPU).
+
+:func:`run_batch` executes the tick grid as a sequence of **chunked,
+donated scans** laid out by :func:`repro.core.sweep_plan.plan_sweep`:
+
+* The grid is blocked into *superticks* of ``stride`` ticks.  Each
+  supertick draws its whole noise block in a handful of batched
+  ``jax.random`` calls, runs an inner ``lax.scan`` over its ticks, and
+  emits **one** trace record — traces are only consumed on the
+  measurement grid, so recording every tick is pure waste.
+* Superticks are grouped into pow2-length chunks, each a separate call
+  into one jitted scan whose ``(B, P)`` carry is **donated** — XLA
+  reuses the state pytree's buffers across chunks instead of
+  double-buffering them.  The chunk loop early-exits once every row is
+  past its horizon, so scheduled-but-dead superticks are never executed.
+* The scenario dimension is sharded over a 1-D device mesh with
+  ``shard_map`` (the degenerate 1-device mesh on an unflagged CPU).
+  Per-row noise is keyed by *global row id* and shared noise by *global
+  node id* (the minibatch blob is drawn in node slices and
+  all-gathered), so every mesh size consumes identical draws and
+  ``run_sweep(backend="jax")`` is **bit-identical** across device
+  counts — multi-device is transparent.
+
+The scan itself performs zero host transfers: inputs are staged (and
+sharded) once by :func:`_prepare`, chunks hand the donated carry to each
+other on device, and exactly one ``device_get`` at the end fetches
+traces plus final state (``tests/test_vector_sim_jax.py`` holds
+``transfer_guard`` and donation tests on this).
 
 Semantics mirror :class:`repro.core.vector_sim.VectorSimulator`'s numpy
 tick exactly (same phases, same anchoring, same alive-mask churn rules);
@@ -25,46 +46,53 @@ Design notes for the hot path:
 * Barrier predicates and the straggler duration model are single-sourced
   in :mod:`repro.core.barrier_kernel` — the same code the SPMD trainer
   (:mod:`repro.core.spmd_psp`) routes through — and β-samples come from
-  the shared :mod:`repro.core.sampling` primitives.  All per-tick noise is
-  drawn outside the kernel, so every ``impl`` consumes an identical RNG
-  stream.
-* Without churn, one peer-index draw per tick is shared across the B
+  the shared :mod:`repro.core.sampling` primitives.  All noise is drawn
+  outside the kernel, so every ``impl`` consumes an identical RNG stream.
+* Without churn, one peer-score draw per tick is shared across the B
   scenario rows (each row's marginal stays an exact uniform β-sample);
   likewise one minibatch draw per (tick, node) is shared across rows.
   Cross-row correlation is irrelevant for per-row statistics — use the
   numpy backend when cross-row independence matters (it decorrelates via
   finisher-ordered stream consumption).
-* Ragged batches: scenario groups that differ only in ``n_nodes`` (and
-  churn-ness) are padded to a common P and merged into **one** scan —
-  padded node slots are permanently dead ``alive``-mask entries that the
-  masked-min barrier, the alive-masked β-sample and the join pool all
-  ignore (``valid_slot`` guards joins), so ragged sweeps cost one compile
-  instead of one per shape.
+* Ragged batches: scenario groups that differ in ``n_nodes``, churn-ness
+  or **duration** are padded to a common P and merged into one schedule —
+  padded node slots are permanently dead ``alive``-mask entries, and a
+  row past its own horizon freezes (the fused tick's ``active`` gate), so
+  ragged sweeps cost one compile instead of one per shape.
 * Times are f32 (no global x64 flag); the due-comparison epsilon scales
   with ``dt`` to stay above f32 resolution at the horizon.
-* The compiled scan is cached by structural signature
-  (``P, d, batch, k_max, has_churn, masked, impl``) so repeated sweeps of
-  the same shape (the common benchmark/test pattern) compile once.
+* The compiled chunk scan is cached by structural signature
+  (``P, d, batch, k_max, has_churn, masked, impl, stride, ndev``) so
+  repeated sweeps of the same shape (the common benchmark/test pattern)
+  compile once per chunk length.
 """
 from __future__ import annotations
 
 import functools
 import os
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.simulator import SimResult
+from repro.core.sweep_plan import plan_sweep
 from repro.kernels import ops
+from repro.kernels.psp_tick import STATE_KEYS
 
 __all__ = ["run_batch", "tick_impl"]
 
+#: params entries replicated across the mesh (everything else is per-row
+#: or per-node and therefore sharded on the leading axis)
+_REPLICATED_PARAMS = frozenset({"key", "eps", "poll"})
+
 
 def tick_impl() -> str:
-    """Control-plane tick implementation (``PSP_TICK_IMPL`` env override).
+    """Tick implementation (``PSP_TICK_IMPL`` env override).
 
     ``auto`` (default): Pallas kernel on TPU, jnp reference elsewhere;
     ``pallas`` / ``interpret`` / ``ref`` force a path (``interpret`` runs
@@ -73,81 +101,154 @@ def tick_impl() -> str:
     return os.environ.get("PSP_TICK_IMPL", "auto")
 
 
+def _row_spec(ndim: int) -> PartitionSpec:
+    """Leading-axis row sharding for an ``ndim``-rank per-row array."""
+    return PartitionSpec(*(("rows",) + (None,) * (ndim - 1)))
+
+
+def _specs(params: Dict, carry: Dict, xs: Dict) -> Tuple[Dict, Dict, Dict]:
+    """(params, carry, xs) partition-spec pytrees for the chunk scan.
+
+    Per-row arrays shard on their leading (B) axis, the churn schedules
+    on their trailing row axis, everything else is replicated.  The same
+    trees drive both ``shard_map`` and the input staging in
+    :func:`_prepare`, so staged buffers land exactly where the compiled
+    scan expects them (no resharding copy on call).
+    """
+    p_specs = {k: (PartitionSpec() if k in _REPLICATED_PARAMS
+                   else _row_spec(np.ndim(v))) for k, v in params.items()}
+    c_specs = {k: _row_spec(np.ndim(v)) for k, v in carry.items()}
+    x_specs = {"sup": PartitionSpec(), "t": PartitionSpec(),
+               "leave": PartitionSpec(None, None, "rows"),
+               "join": PartitionSpec(None, None, "rows")}
+    return p_specs, c_specs, {k: x_specs[k] for k in xs}
+
+
 @functools.lru_cache(maxsize=32)
-def _compiled_scan(P: int, d: int, batch: int, k_max: int, has_churn: bool,
-                   masked: bool, impl: str):
-    """Jitted scan over the tick grid, specialised on structural shape."""
+def _compiled_chunk(P: int, d: int, batch: int, k_max: int, has_churn: bool,
+                    masked: bool, impl: str, stride: int, ndev: int):
+    """(jitted chunk scan, mesh), specialised on structural shape.
 
-    def tick(params, carry, x):
-        t, i, leave_n, join_n = x
-        state = {k: carry[k] for k in
-                 ("steps", "alive", "computing", "event_time", "ready",
-                  "blocked", "pend_leave", "pend_join")}
-        B = state["steps"].shape[0]
-        tk = jax.random.fold_in(params["key"], i)
-        k_mini, k_samp, k_dur, *k_rest = jax.random.split(
-            tk, 4 if has_churn else 3)
+    The returned function maps ``(params, carry, xs) -> (carry', (err,
+    upd))`` where ``xs`` covers one chunk of superticks; the carry is
+    donated, the B axis is sharded over ``ndev`` devices.  Chunk length
+    only changes input shapes, so jit's own cache specialises per pow2
+    block while this wrapper caches the mesh + shard_map plumbing.
+    """
+    mesh = Mesh(np.array(jax.devices()[:ndev]), ("rows",))
+    kw = dict(k_max=k_max, has_churn=has_churn, masked=masked, impl=impl)
 
-        # pre-draw this tick's noise (identical stream for every impl)
-        rand = {"dur": jax.random.uniform(k_dur, (B, P))}
+    def tick(params, carry, xt):
+        state = {k: carry[k] for k in STATE_KEYS}
+        rand = {k: xt[k] for k in xt
+                if k in ("dur", "scores", "u1", "leave", "join", "X", "mb")}
+        state, out = ops.psp_tick(state, rand, params, xt["t"],
+                                  xt["lc"], xt["jc"], **kw)
+        return {**state,
+                "total_updates": carry["total_updates"] + out["n_fin"],
+                "control": carry["control"] + out["ctrl"]}, None
+
+    def supertick(params, carry, x):
+        # one batched noise block per supertick: a handful of keyed
+        # jax.random calls instead of per-tick dispatch.  Per-row noise
+        # is keyed by global row id, shared noise by global node id, so
+        # every mesh size consumes identical draws (bit-identical
+        # sharding); the minibatch blob is drawn in node slices and
+        # all-gathered so its RNG cost shards with the mesh.
+        row_ids, node_ids = params["row_ids"], params["node_ids"]
+        k_sup = jax.random.fold_in(params["key"], x["sup"])
+        k_mini, k_samp, k_dur, k_churn = jax.random.split(k_sup, 4)
+        fold = jax.vmap(jax.random.fold_in, (None, 0))
+        # minibatch blob keyed per (tick, node): the draw comes out in
+        # scan layout directly (stride leading), so no supertick-sized
+        # transpose sits between the RNG and the tick loop
+        kt = fold(k_mini, x["sup"] * stride + jnp.arange(stride))
+        blob_loc = jax.vmap(lambda k: jax.vmap(
+            lambda kk: jax.random.normal(kk, (batch, d + 1)))(
+                fold(k, node_ids)))(kt)               # (stride, n_loc, ...)
+        blob = lax.all_gather(blob_loc, "rows", axis=1,
+                              tiled=True)[:, :P]      # (stride, P, m, d+1)
+        dur = jnp.moveaxis(jax.vmap(
+            lambda k: jax.random.uniform(k, (stride, P)))(
+                fold(k_dur, row_ids)), 1, 0)          # (stride, b_loc, P)
+        xt = {"t": x["t"], "lc": x["leave"], "jc": x["join"],
+              "X": blob[..., :d], "mb": blob[..., d], "dur": dur}
         if k_max > 0:
             if masked:
-                rand["scores"] = jax.random.uniform(k_samp, (B, P, P))
+                xt["scores"] = jnp.moveaxis(jax.vmap(
+                    lambda k: jax.random.uniform(k, (stride, P, P)))(
+                        fold(k_samp, row_ids)), 1, 0)
             elif k_max == 1:
-                rand["u1"] = jax.random.uniform(k_samp, (P,))
+                xt["u1"] = jax.random.uniform(k_samp, (stride, P))
             else:
-                rand["scores"] = jax.random.uniform(k_samp, (P, P))
+                sc_loc = jax.vmap(
+                    lambda k: jax.random.uniform(k, (stride, P)))(
+                        fold(k_samp, node_ids))
+                sc = lax.all_gather(sc_loc, "rows", tiled=True)
+                xt["scores"] = jnp.moveaxis(sc, 1, 0)[:, :P]
         if has_churn:
-            u_l, u_j = jax.random.uniform(k_rest[0], (2, B, P))
-            rand["leave"], rand["join"] = u_l, u_j
-
-        # fused control-plane tick: churn → finish → decide → start
-        state, out = ops.psp_tick(state, rand, params, t, leave_n, join_n,
-                                  k_max=k_max, has_churn=has_churn,
-                                  masked=masked, impl=impl)
-
-        # data plane: masked SGD push for every node that finished.
-        # One minibatch draw per (tick, node), shared across rows.
-        fin = out["fin"]
-        w, pulled = carry["w"], carry["pulled"]
-        blob = jax.random.normal(k_mini, (P, batch, d + 1),
-                                 dtype=jnp.float32)
-        X, mb_noise = blob[..., :d], blob[..., d]
-        diff = pulled - params["w_true"][:, None, :]
-        resid = (jnp.einsum("pbd,kpd->kpb", X, diff)
-                 - params["noise_std"][:, None, None] * mb_noise[None])
-        grads = jnp.einsum("kpb,pbd->kpd", resid, X) / batch
-        gsum = jnp.sum(jnp.where(fin[..., None], grads, 0.0), axis=1)
-        w = w - params["lr"][:, None] * gsum
-        pulled = jnp.where(out["start"][..., None], w[:, None, :], pulled)
-
-        err = (jnp.linalg.norm(w - params["w_true"], axis=1)
+            cu = jax.vmap(
+                lambda k: jax.random.uniform(k, (stride, 2, P)))(
+                    fold(k_churn, row_ids))
+            xt["leave"] = jnp.moveaxis(cu[:, :, 0], 0, 1)
+            xt["join"] = jnp.moveaxis(cu[:, :, 1], 0, 1)
+        carry, _ = lax.scan(functools.partial(tick, params), carry, xt)
+        err = (jnp.linalg.norm(carry["w"] - params["w_true"], axis=1)
                / params["w_true_norm"])
-        total_updates = carry["total_updates"] + out["n_fin"]
-        carry = {**state, "w": w, "pulled": pulled,
-                 "total_updates": total_updates,
-                 "control": carry["control"] + out["ctrl"]}
-        return carry, (err, total_updates)
+        return carry, (err, carry["total_updates"])
 
-    def scan_fn(params, carry, xs):
-        return lax.scan(functools.partial(tick, params), carry, xs)
+    def chunk(params, carry, xs):
+        return lax.scan(functools.partial(supertick, params), carry, xs)
 
-    return jax.jit(scan_fn)
+    def sharded(params, carry, xs):
+        specs = _specs(params, carry, xs)
+        # check_rep=False: pallas_call (the interpret/TPU tick) has no
+        # replication rule; correctness is pinned by the mesh-size
+        # bit-identity test instead
+        return shard_map(chunk, mesh=mesh, in_specs=specs,
+                         out_specs=(specs[1],
+                                    (PartitionSpec(None, "rows"),
+                                     PartitionSpec(None, "rows"))),
+                         check_rep=False)(params, carry, xs)
+
+    return jax.jit(sharded, donate_argnums=(1,)), mesh
 
 
-def _prepare(sim) -> Tuple:
-    """Stage a batch: (compiled scan, params, carry, xs) — all device-ready.
+def _measure_idx(sim) -> np.ndarray:
+    """Global tick index of each measurement point (t > 0).
 
-    Everything the grid loop touches is materialised here, so the scan
-    itself performs zero host transfers; the zero-copy test in
-    ``tests/test_vector_sim_jax.py`` runs this staging, then executes the
-    scan under ``jax.transfer_guard("disallow")``.
+    Single definition on purpose: the planner aligns the record stride on
+    these indices and :func:`run_batch` maps them onto supertick records
+    with ``(m_idx + 1) // stride − 1`` — both sides must see the exact
+    same epsilon and slicing or traces silently shift by a record.
+    """
+    return np.searchsorted(sim.ticks, sim.m_times[1:] - 1e-9)
+
+
+def _prepare(sim):
+    """Stage a batch: (chunk fn, plan, params, carry, xs chunks) on device.
+
+    Everything the grid loop touches is materialised and sharded here, so
+    the chunk loop itself performs zero host transfers; the zero-copy
+    test in ``tests/test_vector_sim_jax.py`` runs this staging, then
+    executes the chunks under ``jax.transfer_guard("disallow")``.
     """
     B, P, d = sim.B, sim.P, sim.d
     f32 = jnp.float32
     k_max = int(min(max(int(sim.beta.max(initial=-1)), 0), P - 1))
     masked = sim.has_churn or bool((sim.n_true < P).any())
     eps = max(1e-9, 1e-3 * sim.dt)   # above f32 resolution at the horizon
+    T = sim.ticks.size
+    plan = plan_sweep(T, _measure_idx(sim), B, P, batch=sim.batch, d=d,
+                      k_max=k_max,
+                      masked=masked, has_churn=sim.has_churn)
+    Bp = plan.b_pad
+
+    def pad_rows(a, fill=0):
+        if Bp == B:
+            return a
+        pad = np.full((Bp - B,) + a.shape[1:], fill, dtype=a.dtype)
+        return np.concatenate([a, pad], axis=0)
 
     seed = np.random.SeedSequence(
         [int(c.seed) for c in sim.configs] + [B, P, d]).generate_state(1)[0]
@@ -155,47 +256,84 @@ def _prepare(sim) -> Tuple:
         "key": jax.random.PRNGKey(int(seed)),
         "eps": jnp.asarray(eps, f32),
         "poll": jnp.asarray(sim.poll_interval, f32),
-        "w_true": jnp.asarray(sim.w_true, f32),
-        "w_true_norm": jnp.asarray(sim.w_true_norm, f32),
-        "compute_time": jnp.asarray(sim.compute_time, f32),
-        "lr": jnp.asarray(sim.lr, f32),
-        "noise_std": jnp.asarray(sim.noise_std, f32),
-        "staleness": jnp.asarray(sim.staleness, jnp.int32),
+        "row_ids": jnp.arange(Bp, dtype=jnp.int32),
+        "node_ids": jnp.arange(plan.node_pad, dtype=jnp.int32),
+        "w_true": jnp.asarray(pad_rows(sim.w_true), f32),
+        # padded rows never tick; a unit norm keeps their (discarded)
+        # error trace finite
+        "w_true_norm": jnp.asarray(pad_rows(sim.w_true_norm, 1.0), f32),
+        "compute_time": jnp.asarray(pad_rows(sim.compute_time, 1.0), f32),
+        "lr": jnp.asarray(pad_rows(sim.lr), f32),
+        "noise_std": jnp.asarray(pad_rows(sim.noise_std), f32),
+        "horizon": jnp.asarray(pad_rows(sim.row_duration, -1.0), f32),
+        "staleness": jnp.asarray(pad_rows(sim.staleness), jnp.int32),
         "beta_clip": jnp.asarray(
-            np.clip(sim.beta, 0, sim.n_true - 1), jnp.int32),
-        "is_asp": jnp.asarray(sim.is_asp),
-        "full_view": jnp.asarray(sim.full_view),
-        "sampled": jnp.asarray(sim.sampled),
-        "valid_slot": jnp.asarray(sim.valid_slot),
+            pad_rows(np.clip(sim.beta, 0, sim.n_true - 1)), jnp.int32),
+        "is_asp": jnp.asarray(pad_rows(sim.is_asp)),
+        "full_view": jnp.asarray(pad_rows(sim.full_view)),
+        "sampled": jnp.asarray(pad_rows(sim.sampled)),
+        "valid_slot": jnp.asarray(pad_rows(sim.valid_slot)),
         "dist_hops": jnp.asarray(
-            np.where(sim.distributed & sim.sampled, sim.hops_per_peer, 0),
-            jnp.int32),
+            pad_rows(np.where(sim.distributed & sim.sampled,
+                              sim.hops_per_peer, 0)), jnp.int32),
     }
     carry = {
-        "w": jnp.zeros((B, d), f32),
-        "pulled": jnp.zeros((B, P, d), f32),
-        "steps": jnp.zeros((B, P), jnp.int32),
-        "alive": jnp.asarray(sim.alive),
-        "computing": jnp.asarray(sim.computing),
-        "event_time": jnp.asarray(sim.event_time, f32),
-        "ready": jnp.asarray(sim.ready, f32),
-        "blocked": jnp.asarray(sim.blocked),
-        "total_updates": jnp.zeros(B, jnp.int32),
-        "control": jnp.zeros(B, jnp.int32),
-        "pend_leave": jnp.zeros(B, jnp.int32),
-        "pend_join": jnp.zeros(B, jnp.int32),
+        "w": jnp.zeros((Bp, d), f32),
+        "pulled": jnp.zeros((Bp, P, d), f32),
+        "steps": jnp.zeros((Bp, P), jnp.int32),
+        "alive": jnp.asarray(pad_rows(sim.alive)),
+        "computing": jnp.asarray(pad_rows(sim.computing)),
+        "event_time": jnp.asarray(pad_rows(sim.event_time.astype(
+            np.float32), 1.0)),
+        "ready": jnp.asarray(pad_rows(sim.ready.astype(np.float32), 1.0)),
+        "blocked": jnp.asarray(pad_rows(sim.blocked)),
+        "total_updates": jnp.zeros(Bp, jnp.int32),
+        "control": jnp.zeros(Bp, jnp.int32),
+        "pend_leave": jnp.zeros(Bp, jnp.int32),
+        "pend_join": jnp.zeros(Bp, jnp.int32),
     }
-    T = sim.ticks.size
+
+    # scheduled tick grid: live ticks, then dead padding beyond every
+    # horizon (the fused tick's active gate makes them no-ops)
+    T_sched = plan.n_ticks
+    dt = float(sim.dt)
+    t_sched = np.concatenate(
+        [sim.ticks, sim.ticks[-1] + dt * np.arange(1, T_sched - T + 1)]
+    ).astype(np.float32)
+    lc = np.zeros((T_sched, Bp), np.int32)
+    jc = np.zeros((T_sched, Bp), np.int32)
     if sim.has_churn:
-        lc = jnp.asarray(sim.leave_counts, jnp.int32)
-        jc = jnp.asarray(sim.join_counts, jnp.int32)
-    else:
-        lc = jc = jnp.zeros((T, B), jnp.int32)
-    xs = (jnp.asarray(sim.ticks, f32), jnp.arange(T, dtype=jnp.int32),
-          lc, jc)
-    scan = _compiled_scan(P, d, sim.batch, k_max, sim.has_churn, masked,
-                          tick_impl())
-    return scan, params, carry, xs
+        lc[:T, :B] = sim.leave_counts
+        jc[:T, :B] = sim.join_counts
+
+    chunk_fn, mesh = _compiled_chunk(P, d, sim.batch, k_max, sim.has_churn,
+                                     masked, tick_impl(), plan.stride,
+                                     plan.n_devices)
+    p_specs, c_specs, _ = _specs(params, carry,
+                                 {"sup": 0, "t": 0, "leave": 0, "join": 0})
+    shard = lambda spec: NamedSharding(mesh, spec)
+    params = jax.device_put(params,
+                            {k: shard(s) for k, s in p_specs.items()})
+    carry = jax.device_put(carry, {k: shard(s) for k, s in c_specs.items()})
+
+    xs_chunks = []
+    rec = 0
+    for n_rec in plan.chunks:
+        lo, hi = rec * plan.stride, (rec + n_rec) * plan.stride
+        xs = {
+            "sup": jnp.arange(rec, rec + n_rec, dtype=jnp.int32),
+            "t": jnp.asarray(
+                t_sched[lo:hi].reshape(n_rec, plan.stride)),
+            "leave": jnp.asarray(
+                lc[lo:hi].reshape(n_rec, plan.stride, Bp)),
+            "join": jnp.asarray(
+                jc[lo:hi].reshape(n_rec, plan.stride, Bp)),
+        }
+        _, _, x_specs = _specs(params, carry, xs)
+        xs_chunks.append(jax.device_put(
+            xs, {k: shard(s) for k, s in x_specs.items()}))
+        rec += n_rec
+    return chunk_fn, plan, params, carry, xs_chunks
 
 
 def run_batch(sim) -> List[SimResult]:
@@ -203,31 +341,43 @@ def run_batch(sim) -> List[SimResult]:
 
     Consumes the simulator's numpy-initialised static state (identical to
     the numpy backend: per-seed init replay, initial busy clocks, churn
-    schedules), scans the tick grid under jit with the fused control-plane
-    tick, and writes the final state back so result assembly is shared
-    with the numpy path.  One ``device_get`` per sweep moves the traces
-    and final state to the host together.
+    schedules), executes the planned chunk scans with the fused tick —
+    donated carry, sharded rows, one trace record per supertick — and
+    writes the final state back so result assembly is shared with the
+    numpy path.  One ``device_get`` per sweep moves the traces and final
+    state to the host together.
     """
     B = sim.B
-    scan, params, carry, xs = _prepare(sim)
-    final, (err_t, upd_t) = scan(params, carry, xs)
-    final, err_t, upd_t = jax.device_get(
-        jax.block_until_ready((final, err_t, upd_t)))
+    chunk_fn, plan, params, carry, xs_chunks = _prepare(sim)
+    errs_d, upds_d = [], []
+    rec = 0
+    for xs in xs_chunks:
+        if rec >= plan.n_rec_live:
+            break            # every row is past its horizon: dead chunk
+        carry, (e, u) = chunk_fn(params, carry, xs)
+        errs_d.append(e)
+        upds_d.append(u)
+        rec += e.shape[0]
+    final, errs_rec, upds_rec = jax.device_get(
+        jax.block_until_ready((carry, errs_d, upds_d)))
+    err_t = np.concatenate(errs_rec)[:plan.n_rec_live, :B]
+    upd_t = np.concatenate(upds_rec)[:plan.n_rec_live, :B]
 
     # select the measurement grid: value at m_j = state after the first
-    # tick t with m_j ≤ t + eps (the numpy engine's while-loop rule),
-    # plus the t = 0 point (w = 0 ⇒ normalized error exactly 1)
-    m_idx = np.searchsorted(sim.ticks, sim.m_times[1:] - 1e-9)
+    # tick t with m_j ≤ t + eps (the numpy engine's while-loop rule);
+    # the planner guarantees that tick lands on a supertick record.
+    # Plus the t = 0 point (w = 0 ⇒ normalized error exactly 1).
+    r_idx = (_measure_idx(sim) + 1) // plan.stride - 1
     errs = np.concatenate([np.ones((B, 1)),
-                           np.asarray(err_t, np.float64).T[:, m_idx]],
+                           np.asarray(err_t, np.float64).T[:, r_idx]],
                           axis=1)
     upds = np.concatenate([np.zeros((B, 1), np.int64),
-                           np.asarray(upd_t, np.int64).T[:, m_idx]], axis=1)
+                           np.asarray(upd_t, np.int64).T[:, r_idx]], axis=1)
 
     # write final state back so SimResult assembly is shared with numpy
-    sim.w = np.asarray(final["w"], np.float64)
-    sim.steps = np.asarray(final["steps"], np.int64)
-    sim.alive = np.asarray(final["alive"])
-    sim.total_updates = np.asarray(final["total_updates"], np.int64)
-    sim.control_messages = np.asarray(final["control"], np.int64)
+    sim.w = np.asarray(final["w"][:B], np.float64)
+    sim.steps = np.asarray(final["steps"][:B], np.int64)
+    sim.alive = np.asarray(final["alive"][:B])
+    sim.total_updates = np.asarray(final["total_updates"][:B], np.int64)
+    sim.control_messages = np.asarray(final["control"][:B], np.int64)
     return sim._results(errs, upds)

@@ -101,8 +101,8 @@ def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
 
 def psp_tick(state, rand, params, t, leave_n, join_n, *,
              k_max: int, has_churn: bool, masked: bool, impl: str = "auto"):
-    """One fused PSP sweep-grid control-plane tick (see
-    :mod:`repro.kernels.psp_tick`).
+    """One fused PSP sweep-grid tick — control plane *and* data plane
+    (see :mod:`repro.kernels.psp_tick`).
 
     Dispatch mirrors the other wrappers: ``impl="auto"`` runs the Pallas
     kernel on TPU and the pure-jnp reference elsewhere; ``"pallas"`` /

@@ -1,15 +1,20 @@
-"""Pallas TPU kernel for one PSP sweep-grid tick (the control plane).
+"""Pallas TPU kernel for one full PSP sweep-grid tick (control + data plane).
 
 One grid tick of the vectorized sweep engine
 (:mod:`repro.core.vector_sim_jax`) is two very different workloads glued
-together: a *data-plane* SGD push (a batched matmul XLA already schedules
-well) and a *control-plane* update over the ``(B, P)`` scenario state —
+together: a *control-plane* update over the ``(B, P)`` scenario state —
 churn, finish bookkeeping, the masked-min full-view barrier, the β-sample
-barrier predicate, and start/re-poll anchoring.  The control plane is a
-swarm of tiny masked element-wise ops and row reductions; left to XLA it
-becomes dozens of kernels per tick.  This module fuses it into **one**
-Pallas kernel, one grid row per scenario, so a whole tick's barrier logic
-runs out of VMEM with no intermediate HBM traffic.
+barrier predicate, and start/re-poll anchoring — and a *data-plane* SGD
+push (minibatch residual + gradient + server update + model-view pull of
+the linear task).  The control plane is a swarm of tiny masked
+element-wise ops and row reductions; the data plane is two small
+contractions per scenario row.  Left to XLA the pair becomes dozens of
+kernels per tick; this module fuses the **whole tick** into one Pallas
+kernel, one grid step per :data:`DATA_PLANE_BLOCK`-row scenario block,
+so a tick runs out of VMEM with no intermediate HBM traffic — the
+barrier logic feeds the gradient mask directly, and the updated server
+model is pulled into the block's node views without ever leaving the
+kernel.
 
 Two implementations, held tick-for-tick identical by
 ``tests/test_kernels.py``:
@@ -27,32 +32,47 @@ Two implementations, held tick-for-tick identical by
   ``lax.top_k`` (lower index first), so the two paths agree draw-for-draw,
   not just in distribution.
 
-All randomness is drawn *outside* (plain ``jax.random`` on-device) and
-passed in, so ref and kernel consume identical noise and the sweep's RNG
-stream is independent of ``impl``.
+All randomness — step-duration jitter, β-sample scores, churn uniforms
+*and* the minibatch blob — is drawn *outside* (plain ``jax.random``
+on-device) and passed in, so ref and kernel consume identical noise and
+the sweep's RNG stream is independent of ``impl``.
 
-Shapes and state layout (``B`` scenario rows × ``P`` node slots):
+Rows carry a **horizon**: merged sweeps batch scenarios with different
+durations, and a row whose horizon lies before this tick's time is
+frozen — no churn, no finishes, no decisions, no data-plane update.  The
+same gate makes the dead padding ticks of the chunked scan
+(:mod:`repro.core.sweep_plan`) semantics-free.
 
-========== ============ ==================================================
-key         shape        meaning
-========== ============ ==================================================
-steps       i32[B, P]    logical clock per node
-alive       bool[B, P]   membership (churn / ragged padding)
-computing   bool[B, P]   node busy with a local step
-event_time  f32[B, P]    finish time while computing, else next check time
-ready       f32[B, P]    continuous anchor of the current decide attempt
-blocked     bool[B, P]   failed its last barrier check
-pend_*      i32[B]       carried-over churn events (≤ 1 fires per tick)
-========== ============ ==================================================
+Shapes and state layout (``B`` scenario rows × ``P`` node slots,
+``d``-dim model, ``m`` minibatch rows):
 
-VMEM budget: the dominant buffer is one ``P × P`` f32 score matrix per
-grid row (~4 MB at P = 1024), comfortably resident; P beyond ~1500 would
-need a lane-tiled variant.
+========== ============== ================================================
+key         shape          meaning
+========== ============== ================================================
+steps       i32[B, P]      logical clock per node
+alive       bool[B, P]     membership (churn / ragged padding)
+computing   bool[B, P]     node busy with a local step
+event_time  f32[B, P]      finish time while computing, else next check
+ready       f32[B, P]      continuous anchor of the current decide attempt
+blocked     bool[B, P]     failed its last barrier check
+pend_*      i32[B]         carried-over churn events (≤ 1 fires per tick)
+w           f32[B, d]      server model (data plane)
+pulled      f32[B, P, d]   per-node model view at its last pull
+========== ============== ================================================
+
+The data-plane noise is shared across rows (``X`` f32[P, m, d] minibatch
+features, ``mb`` f32[P, m] label noise) — each row's marginal is an exact
+fresh draw; cross-row correlation is irrelevant for per-row statistics.
+
+VMEM budget: the dominant buffers are one ``P × P`` f32 score matrix per
+grid row (~4 MB at P = 1024) and the shared ``P × m × d`` minibatch blob;
+both comfortably resident for the paper-scale shapes, P beyond ~1500
+would need a lane-tiled variant.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,9 +83,59 @@ from repro.core import barrier_kernel
 
 __all__ = ["psp_tick_ref", "psp_tick_tpu", "STATE_KEYS"]
 
-#: carried control-plane state, in canonical order
+
+#: data-plane row-block width: the SGD push always runs as GEMMs of
+#: exactly this many scenario rows (batches pad up with inert rows).
+#: XLA's CPU backend picks its dot strategy — and therefore its f32
+#: reduction order — by operand *shape*, so a width that followed the
+#: batch (or the per-device shard) would make results depend on how rows
+#: are grouped; a constant width makes each row's bits a function of
+#: that row alone, which is what keeps sharded sweeps bit-identical to
+#: single-device ones.  16 rows amortises the GEMM without inflating
+#: small batches too much (measured best of {8, 16, 32} on the Fig-2
+#: smoke sweep).
+DATA_PLANE_BLOCK = 16
+
+
+def _data_plane_block(X: jax.Array, diff: jax.Array, fin: jax.Array,
+                      start: jax.Array, w: jax.Array, pulled: jax.Array,
+                      lr: jax.Array, noise_std: jax.Array, mb: jax.Array,
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """One fixed-width block of scenario rows' SGD push + model-view pull.
+
+    The whole data plane of :data:`DATA_PLANE_BLOCK` rows in two
+    contractions whose shapes depend only on ``(P, m, d)`` — never on the
+    batch or shard width (see :data:`DATA_PLANE_BLOCK`).  A GEMM performs
+    no cross-row arithmetic, so padded/foreign rows inside a block cannot
+    perturb a real row's bits.
+
+    Args:
+      X: f32[P, m, d] minibatch features (shared across rows).
+      diff: f32[W, P, d] node views minus ground truth.
+      fin / start: bool[W, P] finisher and starter masks.
+      w: f32[W, d] server models; ``pulled`` f32[W, P, d] node views.
+      lr / noise_std: f32[W]; ``mb`` f32[P, m] label noise.
+
+    Returns:
+      (w', pulled'): updated server models and node views.
+    """
+    m = X.shape[1]
+    # residual as broadcast-multiply + minor-axis reduce, NOT a batched
+    # dot: the per-node (m, d) × (d, W) GEMMs are so small that XLA's
+    # batched-dot loop is all dispatch overhead (~1.3× the whole sweep),
+    # while the fused multiply-reduce is one flat kernel — and its f32
+    # reduction order is width-invariant, which a dot's would not be
+    resid = (jnp.sum(X[None] * diff[:, :, None, :], axis=-1)
+             - noise_std[:, None, None] * mb[None])
+    resid = jnp.where(fin[:, :, None], resid, 0.0)
+    gsum = jnp.einsum("kpm,pmd->kd", resid, X) / m
+    w_new = w - lr[:, None] * gsum
+    pulled_new = jnp.where(start[..., None], w_new[:, None, :], pulled)
+    return w_new, pulled_new
+
+#: carried tick state, in canonical order (control plane, then data plane)
 STATE_KEYS = ("steps", "alive", "computing", "event_time", "ready",
-              "blocked", "pend_leave", "pend_join")
+              "blocked", "pend_leave", "pend_join", "w", "pulled")
 
 _I32_MAX = np.iinfo(np.int32).max
 _I32_MIN = np.iinfo(np.int32).min
@@ -79,19 +149,21 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
                  leave_n: jax.Array, join_n: jax.Array, *,
                  k_max: int, has_churn: bool, masked: bool,
                  ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
-    """One control-plane tick, batched over B scenario rows (pure jnp).
+    """One full tick, batched over B scenario rows (pure jnp).
 
     Args:
-      state: the ``(B, P)`` control-plane pytree (:data:`STATE_KEYS`).
-      rand: pre-drawn uniforms — ``dur`` f32[B, P]; plus ``scores``
-        (f32[B, P, P] when ``masked`` else f32[P, P]) or ``u1`` f32[P]
-        (β = 1 fast path) when ``k_max > 0``; plus ``leave``/``join``
-        f32[B, P] when ``has_churn``.
+      state: the tick-state pytree (:data:`STATE_KEYS`).
+      rand: pre-drawn noise — ``dur`` f32[B, P] step-duration jitter;
+        ``X`` f32[P, m, d] / ``mb`` f32[P, m] shared minibatch blob; plus
+        ``scores`` (f32[B, P, P] when ``masked`` else f32[P, P]) or
+        ``u1`` f32[P] (β = 1 fast path) when ``k_max > 0``; plus
+        ``leave``/``join`` f32[B, P] when ``has_churn``.
       params: per-row policy arrays — ``staleness``/``beta_clip``/
         ``dist_hops`` i32[B]; ``is_asp``/``full_view``/``sampled`` bool[B];
         ``compute_time`` f32[B, P]; ``valid_slot`` bool[B, P] (ragged
-        padding mask); scalars ``eps``/``poll``.
-      t: f32[] — this tick's grid time.
+        padding mask); ``horizon``/``lr``/``noise_std`` f32[B];
+        ``w_true`` f32[B, d]; scalars ``eps``/``poll``.
+      t: f32[] — this tick's grid time; rows with ``horizon < t`` freeze.
       leave_n / join_n: i32[B] — churn events due this tick.
       k_max: static max sample-slot count over the batch.
       has_churn: static — whether churn state/noise is present.
@@ -107,18 +179,21 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
     B, P = steps.shape
     eps, poll = params["eps"], params["poll"]
     iota = jnp.arange(P, dtype=jnp.int32)
+    #: row liveness: frozen past the row horizon (merged durations and the
+    #: chunk scheduler's dead padding ticks both route through this gate)
+    active = t <= params["horizon"] + eps
 
     # 0. churn: at most one pre-sampled leave/join fires per row per tick
     #    (surplus carries forward in pend_*; Poisson totals are preserved)
     if has_churn:
         pend_l = state["pend_leave"] + leave_n
         pend_j = state["pend_join"] + join_n
-        do_l = (pend_l > 0) & (jnp.sum(alive, axis=1) > 2)
+        do_l = active & (pend_l > 0) & (jnp.sum(alive, axis=1) > 2)
         victim = barrier_kernel.churn_victim(rand["leave"], alive)
         v_oh = victim[:, None] == iota
         alive = alive & ~(do_l[:, None] & v_oh)
         pool = ~alive & params["valid_slot"]
-        do_j = (pend_j > 0) & jnp.any(pool, axis=1)
+        do_j = active & (pend_j > 0) & jnp.any(pool, axis=1)
         joiner = barrier_kernel.churn_joiner(rand["join"], alive,
                                              params["valid_slot"])
         sel = do_j[:, None] & (joiner[:, None] == iota)
@@ -129,14 +204,16 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
         event_time = jnp.where(sel, t, event_time)
         ready = jnp.where(sel, t, ready)
         blocked = blocked & ~sel
-        pend_leave = pend_l - (pend_l > 0)
-        pend_join = pend_j - (pend_j > 0)
+        pend_leave = jnp.where(active, pend_l - (pend_l > 0),
+                               state["pend_leave"])
+        pend_join = jnp.where(active, pend_j - (pend_j > 0),
+                              state["pend_join"])
     else:
         pend_leave, pend_join = state["pend_leave"], state["pend_join"]
 
-    # 1. finishes: advance steps, become "deciding"; the data-plane push
-    #    happens outside on the returned fin mask
-    fin = computing & alive & (event_time <= t + eps)
+    # 1. finishes: advance steps, become "deciding"; the masked data-plane
+    #    push at the bottom consumes this fin mask
+    fin = computing & alive & (event_time <= t + eps) & active[:, None]
     any_fin = jnp.any(fin, axis=1)
     row_last = jnp.max(jnp.where(fin, event_time, -jnp.inf), axis=1)
     row_unblock = jnp.where(any_fin, jnp.minimum(row_last, t), t)
@@ -147,7 +224,7 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
 
     # 2. barrier decisions for every due deciding node, through the
     #    unified barrier model (single source with the SPMD trainer)
-    cand = ~computing & alive & (event_time <= t + eps)
+    cand = ~computing & alive & (event_time <= t + eps) & active[:, None]
     stal = jnp.broadcast_to(params["staleness"][:, None], (B, P))
     pass_fv = barrier_kernel.full_view_allowed(steps, stal, alive)
     if k_max > 0:
@@ -178,51 +255,82 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
     ready = jnp.where(sm_fail, ready + poll, ready)
     event_time = jnp.where(sm_fail, ready, event_time)
 
+    # 4. data plane: masked SGD push of every finisher, then the starters
+    #    pull the updated server model into their view.  The fin mask
+    #    zeroes non-finisher residuals, so frozen/inactive rows see
+    #    w − lr·0 — exactly w.  Executed in fixed-width row blocks
+    #    (:data:`DATA_PLANE_BLOCK`): the GEMM shapes never follow the
+    #    batch/shard width, so each row's bits are independent of how
+    #    rows are grouped — the sharded-sweep bit-identity invariant.
+    X, mbn = rand["X"], rand["mb"]
+    w, pulled = state["w"], state["pulled"]
+    diff = pulled - params["w_true"][:, None, :]
+    W = DATA_PLANE_BLOCK
+    Bp = -(-B // W) * W
+
+    def pad(a):
+        return a if Bp == B else jnp.concatenate(
+            [a, jnp.zeros((Bp - B,) + a.shape[1:], a.dtype)], axis=0)
+
+    d_p, f_p, s_p = pad(diff), pad(fin), pad(start)
+    w_p, pu_p = pad(w), pad(pulled)
+    lr_p, ns_p = pad(params["lr"]), pad(params["noise_std"])
+    blocks = [_data_plane_block(X, d_p[i:i + W], f_p[i:i + W],
+                                s_p[i:i + W], w_p[i:i + W], pu_p[i:i + W],
+                                lr_p[i:i + W], ns_p[i:i + W], mbn)
+              for i in range(0, Bp, W)]
+    w = jnp.concatenate([b[0] for b in blocks])[:B]
+    pulled = jnp.concatenate([b[1] for b in blocks])[:B]
+
     new_state = {"steps": steps, "alive": alive, "computing": computing,
                  "event_time": event_time, "ready": ready,
                  "blocked": blocked, "pend_leave": pend_leave,
-                 "pend_join": pend_join}
+                 "pend_join": pend_join, "w": w, "pulled": pulled}
     out = {"fin": fin, "start": start,
            "n_fin": jnp.sum(fin, axis=1).astype(jnp.int32), "ctrl": ctrl}
     return new_state, out
 
-
 # --------------------------------------------------------------------------- #
-# Pallas kernel (one grid row per scenario)
+# Pallas kernel (one grid step per row block)
 # --------------------------------------------------------------------------- #
-def _first_argmax(scores: jax.Array, mask: jax.Array,
-                  jj: jax.Array, P: int) -> jax.Array:
-    """Index of the first maximum of ``scores`` under ``mask`` (2D-safe).
+def _first_argmax_rows(scores: jax.Array, mask: jax.Array,
+                       iota: jax.Array, P: int) -> jax.Array:
+    """Per-row index of the first maximum of ``scores`` under ``mask``.
 
-    The lowest index attaining the masked maximum — exactly
-    ``jnp.argmax(where(mask, scores, -1))`` for scores in [0, 1), written
-    with reductions only (no argmax lowering dependence).
+    The lowest index attaining each row's masked maximum — exactly
+    ``jnp.argmax(where(mask, scores, -1), axis=1)`` for scores in [0, 1),
+    written with reductions only (no argmax lowering dependence).
+    Shapes: ``scores``/``mask`` (W, P), ``iota`` (1, P) → (W, 1).
     """
     s = jnp.where(mask, scores, -1.0)
-    m = jnp.max(s)
-    return jnp.min(jnp.where(s == m, jj, P))
+    mx = jnp.max(s, axis=1, keepdims=True)
+    return jnp.min(jnp.where(s == mx, iota, P), axis=1, keepdims=True)
 
 
 def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
-                 use_u1: bool, P: int):
-    """Kernel body: one scenario row's full control-plane tick in VMEM."""
+                 use_u1: bool, W: int, P: int, d: int, m: int):
+    """Kernel body: one W-row block's full tick in VMEM."""
     it = iter(refs)
     steps_ref, alive_ref, computing_ref, event_ref, ready_ref, blocked_ref,\
         pl_ref, pj_ref = (next(it) for _ in range(8))
+    w_ref, pulled_ref = next(it), next(it)
     ln_ref, jn_ref = next(it), next(it)
     u_dur_ref = next(it)
     samp_ref = next(it) if (k_max > 0) else None
     ul_ref = next(it) if has_churn else None
     uj_ref = next(it) if has_churn else None
+    x_ref, mb_ref = next(it), next(it)
     ct_ref, vs_ref = next(it), next(it)
     stal_ref, beta_ref, asp_ref, fv_ref, sm_ref, dh_ref = \
         (next(it) for _ in range(6))
+    wt_ref, lr_ref, ns_ref, hz_ref = (next(it) for _ in range(4))
     t_ref, eps_ref, poll_ref = next(it), next(it), next(it)
     (o_steps, o_alive, o_comp, o_event, o_ready, o_block, o_pl, o_pj,
-     o_fin, o_start, o_nfin, o_ctrl) = (next(it) for _ in range(12))
+     o_w, o_pulled, o_fin, o_start, o_nfin, o_ctrl) = \
+        (next(it) for _ in range(14))
 
     i32 = jnp.int32
-    steps = steps_ref[...]                      # (1, P) i32
+    steps = steps_ref[...]                      # (W, P) i32
     alive = alive_ref[...] != 0
     computing = computing_ref[...] != 0
     event_time = event_ref[...]
@@ -231,38 +339,42 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
     valid_slot = vs_ref[...] != 0
     t = t_ref[0, 0]
     eps, poll = eps_ref[0, 0], poll_ref[0, 0]
-    stal, beta = stal_ref[0, 0], beta_ref[0, 0]
+    stal, beta = stal_ref[...], beta_ref[...]   # (W, 1) i32
+    active = t <= hz_ref[...] + eps             # (W, 1) row liveness
     iota = jax.lax.broadcasted_iota(i32, (1, P), 1)
     jj = jax.lax.broadcasted_iota(i32, (P, P), 1)
 
     # 0. churn: one pre-sampled leave/join per row per tick
     if has_churn:
-        pend_l = pl_ref[0, 0] + ln_ref[0, 0]
-        pend_j = pj_ref[0, 0] + jn_ref[0, 0]
-        do_l = (pend_l > 0) & (jnp.sum(alive.astype(i32)) > 2)
-        vid = _first_argmax(ul_ref[...], alive, iota, P)
+        pend_l = pl_ref[...] + ln_ref[...]      # (W, 1)
+        pend_j = pj_ref[...] + jn_ref[...]
+        n_alive = jnp.sum(alive.astype(i32), axis=1, keepdims=True)
+        do_l = active & (pend_l > 0) & (n_alive > 2)
+        vid = _first_argmax_rows(ul_ref[...], alive, iota, P)
         alive = alive & ~(do_l & (iota == vid))
         pool = ~alive & valid_slot
-        do_j = (pend_j > 0) & jnp.any(pool)
-        jid = _first_argmax(uj_ref[...], pool, iota, P)
+        do_j = active & (pend_j > 0) & jnp.any(pool, axis=1, keepdims=True)
+        jid = _first_argmax_rows(uj_ref[...], pool, iota, P)
         sel = do_j & (iota == jid)
         alive = alive | sel
-        fresh = jnp.max(jnp.where(alive, steps, _I32_MIN))
+        fresh = jnp.max(jnp.where(alive, steps, _I32_MIN), axis=1,
+                        keepdims=True)
         steps = jnp.where(sel, fresh, steps)
         computing = computing & ~sel
         event_time = jnp.where(sel, t, event_time)
         ready = jnp.where(sel, t, ready)
         blocked = blocked & ~sel
-        o_pl[0, 0] = pend_l - (pend_l > 0)
-        o_pj[0, 0] = pend_j - (pend_j > 0)
+        o_pl[...] = jnp.where(active, pend_l - (pend_l > 0), pl_ref[...])
+        o_pj[...] = jnp.where(active, pend_j - (pend_j > 0), pj_ref[...])
     else:
-        o_pl[0, 0] = pl_ref[0, 0]
-        o_pj[0, 0] = pj_ref[0, 0]
+        o_pl[...] = pl_ref[...]
+        o_pj[...] = pj_ref[...]
 
     # 1. finishes
-    fin = computing & alive & (event_time <= t + eps)
-    any_fin = jnp.any(fin)
-    row_last = jnp.max(jnp.where(fin, event_time, -jnp.inf))
+    fin = computing & alive & (event_time <= t + eps) & active
+    any_fin = jnp.any(fin, axis=1, keepdims=True)
+    row_last = jnp.max(jnp.where(fin, event_time, -jnp.inf), axis=1,
+                       keepdims=True)
     row_unblock = jnp.where(any_fin, jnp.minimum(row_last, t), t)
     steps = steps + fin
     computing = computing & ~fin
@@ -270,53 +382,60 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
     blocked = blocked & ~fin
 
     # 2. barrier decisions
-    cand = ~computing & alive & (event_time <= t + eps)
-    min_alive = jnp.min(jnp.where(alive, steps, _I32_MAX))
+    cand = ~computing & alive & (event_time <= t + eps) & active
+    min_alive = jnp.min(jnp.where(alive, steps, _I32_MAX), axis=1,
+                        keepdims=True)
     pass_fv = steps - min_alive <= stal
     if k_max == 0:
-        pass_sm = jnp.ones((1, P), dtype=bool)
-        n_sampled = jnp.zeros((1, P), dtype=i32)
+        pass_sm = jnp.ones((W, P), dtype=bool)
+        n_sampled = jnp.zeros((W, P), dtype=i32)
     elif use_u1:
-        # β = 1 fast path: one uniform over the P−1 non-self slots, the
-        # exact formula of sample_peer_indices_jax's k == 1 branch
+        # β = 1 fast path: one shared uniform over the P−1 non-self
+        # slots, the exact formula of sample_peer_indices_jax's k == 1
+        # branch.  The peer's step is fetched with a one-hot matmul —
+        # exact for counters below 2²⁴, a single small dot instead of a
+        # (W, P, P) mask pipeline, and gather-free for the TPU MXU.
         draw = jnp.floor(samp_ref[...] * max(P - 1, 1)).astype(i32)
         take = jnp.minimum(draw + (draw >= iota), P - 1)       # (1, P)
-        oh = jnp.reshape(take, (P, 1)) == jj                   # (P, P)
-        step_i = jnp.reshape(steps, (P, 1))
-        step_j = jnp.reshape(steps, (1, P))
-        lag_bad = jnp.any(oh & (step_i - step_j > stal), axis=1)
-        ok = (P - 1 >= 1) & (beta >= 1)
-        pass_sm = jnp.reshape(~lag_bad, (1, P)) | ~ok
-        n_sampled = jnp.full((1, P), jnp.minimum(beta, P - 1), dtype=i32)
+        oh = (jnp.reshape(take, (P, 1)) == jj).astype(jnp.float32)
+        step_peer = jax.lax.dot_general(
+            steps.astype(jnp.float32), oh,
+            (((1,), (1,)), ((), ()))).astype(i32)              # (W, P)
+        lag_bad = steps - step_peer > stal
+        ok = (P - 1 >= 1) & (beta >= 1)                        # (W, 1)
+        pass_sm = ~lag_bad | ~ok
+        n_sampled = jnp.broadcast_to(
+            jnp.minimum(beta, P - 1), (W, P)).astype(i32)
     else:
         # rank form of the top-k β-sample: the lowest-(score, index) bad
         # peer is inside the sample iff fewer than β eligible peers
         # precede it — identical to lax.top_k selection, fused, no gather
-        sc = samp_ref[0]                                       # (P, P)
-        step_i = jnp.reshape(steps, (P, 1))
-        step_j = jnp.reshape(steps, (1, P))
+        sc = samp_ref[...]                      # (W, P, P) or (1, P, P)
         ii = jax.lax.broadcasted_iota(i32, (P, P), 0)
         # the shared-draw fast path (masked=False) matches the unmasked
         # reference primitive: every non-self peer is in the pool — the
         # sweep engine only takes it when the whole batch is fully alive
-        eligible = jj != ii
+        eligible = (jj != ii)[None]                            # (1, P, P)
         if masked:
-            eligible = eligible & jnp.reshape(alive, (1, P))
-        bad = eligible & (step_i - step_j > stal)
-        any_bad = jnp.any(bad, axis=1)
-        mbs = jnp.min(jnp.where(bad, sc, 3.0), axis=1, keepdims=True)
-        mbi = jnp.min(jnp.where(bad & (sc == mbs), jj, P), axis=1,
+            eligible = eligible & alive[:, None, :]            # (W, P, P)
+        lag = steps[:, :, None] - steps[:, None, :]
+        bad = eligible & (lag > stal[:, :, None])              # (W, P, P)
+        any_bad = jnp.any(bad, axis=2)
+        mbs = jnp.min(jnp.where(bad, sc, 3.0), axis=2, keepdims=True)
+        mbi = jnp.min(jnp.where(bad & (sc == mbs), jj[None], P), axis=2,
                       keepdims=True)
-        before = eligible & ((sc < mbs) | ((sc == mbs) & (jj < mbi)))
-        cnt = jnp.sum(before.astype(i32), axis=1)
+        before = eligible & ((sc < mbs) | ((sc == mbs) & (jj[None] < mbi)))
+        cnt = jnp.sum(before.astype(i32), axis=2)              # (W, P)
         fail_sm = any_bad & (cnt < beta)
-        pass_sm = jnp.reshape(~fail_sm, (1, P))
-        n_elig = jnp.sum(eligible.astype(i32), axis=1)
-        n_sampled = jnp.reshape(jnp.minimum(beta, n_elig), (1, P))
-    is_asp, full_view = asp_ref[0, 0] != 0, fv_ref[0, 0] != 0
+        pass_sm = ~fail_sm
+        n_elig = jnp.sum(
+            jnp.broadcast_to(eligible, (W, P, P)).astype(i32), axis=2)
+        n_sampled = jnp.minimum(beta, n_elig)
+    is_asp, full_view = asp_ref[...] != 0, fv_ref[...] != 0    # (W, 1)
     passed = jnp.where(is_asp, True,
                        jnp.where(full_view, pass_fv, pass_sm))
-    o_ctrl[0, 0] = jnp.sum(jnp.where(cand, n_sampled * dh_ref[0, 0], 0))
+    o_ctrl[...] = jnp.sum(jnp.where(cand, n_sampled * dh_ref[...], 0),
+                          axis=1, keepdims=True)
 
     # 3. starts / re-polls
     start = cand & passed
@@ -328,9 +447,21 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
     computing = computing | start
     fail = cand & ~passed
     blocked = (blocked | fail) & ~start
-    sm_fail = fail & (sm_ref[0, 0] != 0)
+    sm_fail = fail & (sm_ref[...] != 0)
     ready = jnp.where(sm_fail, ready + poll, ready)
     event_time = jnp.where(sm_fail, ready, event_time)
+
+    # 4. data plane: the block's SGD push + model-view pull — literally
+    #    _data_plane_block, the same code the jnp reference runs, so the
+    #    two impls match bit for bit.  All operands are VMEM resident;
+    #    the fin/start masks come straight from the phases above.
+    X = x_ref[...]                              # (P, m, d)
+    pulled = pulled_ref[...]                    # (W, P, d)
+    diff = pulled - wt_ref[...][:, None, :]     # view − ground truth
+    w_new, pulled_new = _data_plane_block(
+        X, diff, fin, start, w_ref[...], pulled,
+        jnp.reshape(lr_ref[...], (W,)), jnp.reshape(ns_ref[...], (W,)),
+        mb_ref[...])
 
     o_steps[...] = steps
     o_alive[...] = alive.astype(i32)
@@ -338,9 +469,34 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
     o_event[...] = event_time
     o_ready[...] = ready
     o_block[...] = blocked.astype(i32)
+    o_w[...] = w_new
+    o_pulled[...] = pulled_new
     o_fin[...] = fin.astype(i32)
     o_start[...] = start.astype(i32)
-    o_nfin[0, 0] = jnp.sum(fin.astype(i32))
+    o_nfin[...] = jnp.sum(fin.astype(i32), axis=1, keepdims=True)
+
+
+def _kernel_block_width(P: int, k_max: int, masked: bool,
+                        interpret: bool) -> int:
+    """Rows per kernel grid step.
+
+    Interpret/CPU always uses :data:`DATA_PLANE_BLOCK` — that makes the
+    kernel's data plane byte-identical to the jnp reference's blocks (and
+    keeps the interpreter's grid loop short).  On real TPU hardware the
+    (W, P, P) score/lag tiles bound W by VMEM: halve until the dominant
+    per-step buffers fit a ~8 MB budget (worst case W = 1, the PR-3
+    layout).
+    """
+    W = DATA_PLANE_BLOCK
+    if interpret:
+        return W
+    # the β = 1 shared-u1 path carries only a W-independent (P, P)
+    # one-hot plus (W, P) buffers; per-row P² tiles exist only for the
+    # rank form (k_max > 1) and the per-row masked scores
+    per_row = 4 * (P * P if k_max > 1 or masked else P)
+    while W > 1 and W * per_row > (8 << 20):
+        W //= 2
+    return W
 
 
 def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
@@ -351,23 +507,38 @@ def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
                  ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
     """Fused Pallas tick: same contract as :func:`psp_tick_ref`.
 
-    Grid = (B,): each grid step owns one scenario row — its ``(1, P)``
-    state slices, its ``P × P`` score tile (or the shared tile when the
-    whole batch reuses one draw), and its scalar policy row in SMEM.
-    Booleans travel as i32 (TPU-friendly); the wrapper restores dtypes.
+    Grid = (⌈B/W⌉,): each grid step owns one W-row block of scenarios —
+    its ``(W, P)`` state slices, its ``(W, P, d)`` model views, its score
+    tiles (or the shared tile when the whole batch reuses one draw), the
+    shared minibatch blob, and its ``(W, 1)`` policy columns.  W is
+    :data:`DATA_PLANE_BLOCK` in interpret mode (bit-identical to the
+    reference's data-plane blocks) and VMEM-clamped on real TPUs; batches
+    pad up to a W multiple with inert rows (negative horizon).  Booleans
+    travel as i32 (TPU-friendly); the wrapper restores dtypes.
     """
     B, P = state["steps"].shape
+    d = state["w"].shape[-1]
+    m = rand["X"].shape[1]
     i32, f32 = jnp.int32, jnp.float32
     use_u1 = k_max == 1 and not masked
+    W = _kernel_block_width(P, k_max, masked, interpret)
+    Bp = -(-B // W) * W
+
+    def pad(a, fill=0):
+        a = jnp.asarray(a)
+        if Bp == B:
+            return a
+        filler = jnp.full((Bp - B,) + a.shape[1:], fill, a.dtype)
+        return jnp.concatenate([a, filler], axis=0)
 
     def row(a, dtype=None):
-        a = jnp.asarray(a)
-        return (a if dtype is None else a.astype(dtype)), \
-            pl.BlockSpec((1, P), lambda b: (b, 0))
+        a = pad(jnp.asarray(a) if dtype is None
+                else jnp.asarray(a).astype(dtype))
+        return a, pl.BlockSpec((W, P), lambda b: (b, 0))
 
-    def scalar_col(a, dtype=i32):
-        return jnp.asarray(a, dtype).reshape(B, 1), \
-            pl.BlockSpec((1, 1), lambda b: (b, 0))
+    def col(a, dtype=i32, fill=0):
+        return pad(jnp.asarray(a, dtype), fill).reshape(Bp, 1), \
+            pl.BlockSpec((W, 1), lambda b: (b, 0))
 
     def scalar(a, dtype=f32):
         return jnp.asarray(a, dtype).reshape(1, 1), \
@@ -385,10 +556,14 @@ def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
     push(row(state["event_time"], f32))
     push(row(state["ready"], f32))
     push(row(state["blocked"], i32))
-    push(scalar_col(state["pend_leave"]))
-    push(scalar_col(state["pend_join"]))
-    push(scalar_col(leave_n))
-    push(scalar_col(join_n))
+    push(col(state["pend_leave"]))
+    push(col(state["pend_join"]))
+    inputs.append(pad(jnp.asarray(state["w"], f32)))
+    specs.append(pl.BlockSpec((W, d), lambda b: (b, 0)))
+    inputs.append(pad(jnp.asarray(state["pulled"], f32)))
+    specs.append(pl.BlockSpec((W, P, d), lambda b: (b, 0, 0)))
+    push(col(leave_n))
+    push(col(join_n))
     push(row(rand["dur"], f32))
     if k_max > 0:
         if use_u1:
@@ -396,39 +571,55 @@ def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
             inputs.append(u1)
             specs.append(pl.BlockSpec((1, P), lambda b: (0, 0)))
         elif masked:
-            inputs.append(jnp.asarray(rand["scores"], f32))
-            specs.append(pl.BlockSpec((1, P, P), lambda b: (b, 0, 0)))
+            inputs.append(pad(jnp.asarray(rand["scores"], f32)))
+            specs.append(pl.BlockSpec((W, P, P), lambda b: (b, 0, 0)))
         else:
             inputs.append(jnp.asarray(rand["scores"], f32).reshape(1, P, P))
             specs.append(pl.BlockSpec((1, P, P), lambda b: (0, 0, 0)))
     if has_churn:
         push(row(rand["leave"], f32))
         push(row(rand["join"], f32))
+    inputs.append(jnp.asarray(rand["X"], f32))
+    specs.append(pl.BlockSpec((P, m, d), lambda b: (0, 0, 0)))
+    inputs.append(jnp.asarray(rand["mb"], f32))
+    specs.append(pl.BlockSpec((P, m), lambda b: (0, 0)))
     push(row(params["compute_time"], f32))
     push(row(params["valid_slot"], i32))
-    push(scalar_col(params["staleness"]))
-    push(scalar_col(params["beta_clip"]))
-    push(scalar_col(params["is_asp"]))
-    push(scalar_col(params["full_view"]))
-    push(scalar_col(params["sampled"]))
-    push(scalar_col(params["dist_hops"]))
+    push(col(params["staleness"]))
+    push(col(params["beta_clip"]))
+    push(col(params["is_asp"]))
+    push(col(params["full_view"]))
+    push(col(params["sampled"]))
+    push(col(params["dist_hops"]))
+    inputs.append(pad(jnp.asarray(params["w_true"], f32)))
+    specs.append(pl.BlockSpec((W, d), lambda b: (b, 0)))
+    push(col(params["lr"], f32))
+    push(col(params["noise_std"], f32))
+    # padded rows freeze: a negative horizon keeps them inert forever
+    push(col(params["horizon"], f32, fill=-1.0))
     push(scalar(t))
     push(scalar(params["eps"]))
     push(scalar(params["poll"]))
 
-    rp = lambda dt: jax.ShapeDtypeStruct((B, P), dt)
-    cp = lambda: jax.ShapeDtypeStruct((B, 1), i32)
+    rp = lambda dt: jax.ShapeDtypeStruct((Bp, P), dt)
+    cp = lambda: jax.ShapeDtypeStruct((Bp, 1), i32)
     out_shape = [rp(i32), rp(i32), rp(i32), rp(f32), rp(f32), rp(i32),
-                 cp(), cp(), rp(i32), rp(i32), cp(), cp()]
-    out_specs = ([pl.BlockSpec((1, P), lambda b: (b, 0))] * 6
-                 + [pl.BlockSpec((1, 1), lambda b: (b, 0))] * 2
-                 + [pl.BlockSpec((1, P), lambda b: (b, 0))] * 2
-                 + [pl.BlockSpec((1, 1), lambda b: (b, 0))] * 2)
+                 cp(), cp(),
+                 jax.ShapeDtypeStruct((Bp, d), f32),
+                 jax.ShapeDtypeStruct((Bp, P, d), f32),
+                 rp(i32), rp(i32), cp(), cp()]
+    out_specs = ([pl.BlockSpec((W, P), lambda b: (b, 0))] * 6
+                 + [pl.BlockSpec((W, 1), lambda b: (b, 0))] * 2
+                 + [pl.BlockSpec((W, d), lambda b: (b, 0)),
+                    pl.BlockSpec((W, P, d), lambda b: (b, 0, 0))]
+                 + [pl.BlockSpec((W, P), lambda b: (b, 0))] * 2
+                 + [pl.BlockSpec((W, 1), lambda b: (b, 0))] * 2)
 
     outs = pl.pallas_call(
         functools.partial(_tick_kernel, k_max=k_max, has_churn=has_churn,
-                          masked=masked, use_u1=use_u1, P=P),
-        grid=(B,),
+                          masked=masked, use_u1=use_u1, W=W, P=P, d=d,
+                          m=m),
+        grid=(Bp // W,),
         in_specs=specs,
         out_specs=out_specs,
         out_shape=out_shape,
@@ -436,11 +627,12 @@ def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
     )(*inputs)
 
     (steps, alive, computing, event_time, ready, blocked, pend_l, pend_j,
-     fin, start, n_fin, ctrl) = outs
+     w, pulled, fin, start, n_fin, ctrl) = (o[:B] for o in outs)
     new_state = {"steps": steps, "alive": alive != 0,
                  "computing": computing != 0, "event_time": event_time,
                  "ready": ready, "blocked": blocked != 0,
-                 "pend_leave": pend_l[:, 0], "pend_join": pend_j[:, 0]}
+                 "pend_leave": pend_l[:, 0], "pend_join": pend_j[:, 0],
+                 "w": w, "pulled": pulled}
     out = {"fin": fin != 0, "start": start != 0, "n_fin": n_fin[:, 0],
            "ctrl": ctrl[:, 0]}
     return new_state, out

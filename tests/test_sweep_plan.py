@@ -1,0 +1,112 @@
+"""Unit tests for the sweep execution planner (:mod:`repro.core.sweep_plan`).
+
+The planner is pure host-side arithmetic, so these tests pin its
+invariants directly: record alignment with the measurement grid, exact
+pow2 chunk decomposition, memory-capped strides for score-heavy batches,
+mesh clamping, and the env overrides the benchmarks/tests rely on.
+"""
+import numpy as np
+import pytest
+
+from repro.core.sweep_plan import plan_sweep
+
+
+def _measure_idx(n_ticks, every):
+    return np.arange(every - 1, n_ticks, every)
+
+
+class TestStride:
+    def test_stride_divides_measurement_cadence(self):
+        plan = plan_sweep(1000, _measure_idx(1000, 25), 25, 100,
+                          batch=8, d=32, k_max=1, masked=False,
+                          has_churn=False, n_devices=1)
+        assert plan.stride == 25
+        # every measurement index lands exactly on a record boundary
+        for m in _measure_idx(1000, 25):
+            assert (m + 1) % plan.stride == 0
+
+    def test_full_grid_lands_on_a_record(self):
+        # 130 ticks, measurements every 25: gcd(25, 130) = 5
+        plan = plan_sweep(130, _measure_idx(130, 25), 4, 16,
+                          batch=4, d=8, k_max=1, masked=False,
+                          has_churn=False, n_devices=1)
+        assert plan.stride == 5
+        assert plan.n_rec_live * plan.stride >= 130
+
+    def test_masked_scores_cap_the_stride(self):
+        # B·P² per-row score matrices: a large churn batch must pick a
+        # smaller stride than the no-churn fast path would
+        fast = plan_sweep(4096, _measure_idx(4096, 64), 64, 256,
+                          batch=8, d=32, k_max=4, masked=False,
+                          has_churn=False, n_devices=1)
+        heavy = plan_sweep(4096, _measure_idx(4096, 64), 64, 256,
+                           batch=8, d=32, k_max=4, masked=True,
+                           has_churn=True, n_devices=1)
+        assert heavy.stride < fast.stride
+        assert fast.stride % heavy.stride == 0   # still cadence-aligned
+
+    def test_env_override_snaps_to_divisor(self, monkeypatch):
+        monkeypatch.setenv("PSP_TRACE_STRIDE", "10")
+        plan = plan_sweep(1000, _measure_idx(1000, 25), 25, 100,
+                          batch=8, d=32, k_max=1, masked=False,
+                          has_churn=False, n_devices=1)
+        # 10 does not divide 25; the nearest admissible divisor is 5
+        assert plan.stride == 5
+
+
+class TestChunks:
+    def test_binary_decomposition_is_exact_largest_first(self):
+        plan = plan_sweep(1000, _measure_idx(1000, 25), 25, 100,
+                          batch=8, d=32, k_max=1, masked=False,
+                          has_churn=False, n_devices=1)
+        assert plan.chunks == (32, 8)
+        assert sum(plan.chunks) == plan.n_rec == plan.n_rec_live
+        assert list(plan.chunks) == sorted(plan.chunks, reverse=True)
+        assert all(c & (c - 1) == 0 for c in plan.chunks)   # pow2
+
+    def test_forced_uniform_chunks_cover_live_records(self, monkeypatch):
+        monkeypatch.setenv("PSP_SWEEP_CHUNK", "16")
+        plan = plan_sweep(1000, _measure_idx(1000, 25), 25, 100,
+                          batch=8, d=32, k_max=1, masked=False,
+                          has_churn=False, n_devices=1)
+        assert plan.chunks == (16, 16, 16)
+        assert plan.n_rec >= plan.n_rec_live
+
+
+class TestMesh:
+    def test_clamped_to_rows_and_available_devices(self):
+        import jax
+        plan = plan_sweep(100, _measure_idx(100, 25), 3, 16,
+                          batch=4, d=8, k_max=1, masked=False,
+                          has_churn=False, n_devices=64)
+        assert plan.n_devices <= min(3, len(jax.devices()))
+        assert plan.b_pad % plan.n_devices == 0
+        assert plan.node_pad % plan.n_devices == 0
+        assert plan.b_pad >= 3
+        assert plan.node_pad >= 16
+
+    def test_env_override(self, monkeypatch):
+        from repro.kernels.psp_tick import DATA_PLANE_BLOCK
+        monkeypatch.setenv("PSP_SWEEP_DEVICES", "1")
+        plan = plan_sweep(100, _measure_idx(100, 25), 8, 16,
+                          batch=4, d=8, k_max=1, masked=False,
+                          has_churn=False)
+        assert plan.n_devices == 1
+        # rows pad to the data-plane GEMM block width per device
+        assert plan.b_pad == DATA_PLANE_BLOCK
+
+
+@pytest.mark.parametrize("B,ndev", [(5, 2), (7, 4), (1, 8)])
+def test_row_padding_is_even(B, ndev, monkeypatch):
+    import jax
+    from repro.kernels.psp_tick import DATA_PLANE_BLOCK
+    plan = plan_sweep(100, _measure_idx(100, 25), B, 12,
+                      batch=4, d=8, k_max=1, masked=False,
+                      has_churn=False, n_devices=ndev)
+    eff = min(ndev, B, len(jax.devices()))
+    assert plan.n_devices == eff
+    # per-device block: ceil(B/eff) rows, rounded up to the GEMM width
+    b_rows = -(-B // eff)
+    b_loc = -(-b_rows // DATA_PLANE_BLOCK) * DATA_PLANE_BLOCK
+    assert plan.b_pad == b_loc * eff
+    assert plan.b_pad % (eff * DATA_PLANE_BLOCK) == 0

@@ -3,7 +3,7 @@
 
 Compares a *fresh* ``benchmarks.sweep_bench`` smoke run against the
 committed baseline ``BENCH_sweep.json`` and fails when a grid engine's
-throughput regressed by more than the tolerance (default 25%).
+throughput regressed by more than its tolerance.
 
 The compared metric is ``speedup_vs_event`` — each engine's throughput
 normalized by the event-driven reference timed *in the same run on the
@@ -11,18 +11,23 @@ same machine* — so the committed baseline transfers across hosts: a slow
 CI runner slows the event loop and the grid engines alike, while a real
 regression (extra compiles, host transfers, a de-vectorized tick) drops
 only the grid engine's ratio.  Gated engines default to ``numpy`` and
-``jax``; the Pallas-interpret row is too noisy on CPU to gate.
+``jax`` at 25% tolerance plus ``pallas`` at a looser 45% — the
+Pallas-interpret row is noisier on CPU (the interpreter lowers the
+kernel through extra masking), but a kernel-path collapse (e.g. a
+change that silently de-fuses the tick) still has to fail CI.
 
 Usage (the CI fast lane runs exactly this)::
 
-    python -m benchmarks.sweep_bench --no-pallas --out bench_fresh.json
+    python -m benchmarks.sweep_bench --out bench_fresh.json
     python tools/check_bench.py --fresh bench_fresh.json
 
-Without ``--fresh`` the gate runs the smoke benchmark itself (pallas row
-skipped) and writes the fresh JSON next to the baseline as
-``BENCH_fresh.json``.  Exit status 0 when every gated engine is within
-tolerance, 1 otherwise (one ``FAIL`` line per regressed engine),
-mirroring the doc-coverage gate's contract.
+Engine selection accepts optional per-engine tolerances:
+``--engines numpy,jax,pallas:0.45`` gates the first two at
+``--tolerance`` and pallas at 45%.  Without ``--fresh`` the gate runs
+the smoke benchmark itself (pallas row included) and writes the fresh
+JSON next to the baseline as ``BENCH_fresh.json``.  Exit status 0 when
+every gated engine is within tolerance, 1 otherwise (one ``FAIL`` line
+per regressed engine), mirroring the doc-coverage gate's contract.
 """
 from __future__ import annotations
 
@@ -30,12 +35,15 @@ import argparse
 import json
 import os
 import sys
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_sweep.json")
-DEFAULT_ENGINES = ("numpy", "jax")
 DEFAULT_TOLERANCE = 0.25
+#: per-engine default tolerance overrides (looser for the noisy
+#: interpret-mode kernel row)
+ENGINE_TOLERANCE = {"pallas": 0.45}
+DEFAULT_ENGINES = ("numpy", "jax", "pallas")
 METRIC = "speedup_vs_event"
 
 
@@ -50,15 +58,44 @@ def load_engines(path: str) -> Dict[str, Dict]:
     return engines
 
 
+def parse_engines(spec: str, tolerance: float) -> List[Tuple[str, float]]:
+    """``name[:tol],...`` → [(engine, tolerance)].
+
+    A bare name takes its :data:`ENGINE_TOLERANCE` default (falling back
+    to the global ``tolerance``); an explicit ``:tol`` suffix wins.
+    """
+    out = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if ":" in item:
+            name, tol = item.split(":", 1)
+            out.append((name, float(tol)))
+        else:
+            out.append((item, ENGINE_TOLERANCE.get(item, tolerance)))
+    return out
+
+
 def check(baseline: Dict[str, Dict], fresh: Dict[str, Dict],
-          engines: List[str], tolerance: float) -> List[str]:
-    """Return one failure line per engine regressed beyond ``tolerance``.
+          engines: List[Tuple[str, float]]) -> List[str]:
+    """Return one failure line per engine regressed beyond its tolerance.
 
     An engine missing from either file is a failure too — a silently
     dropped benchmark row must not read as a pass.
     """
+    jb, jf = baseline.get("jax", {}), fresh.get("jax", {})
+    if jb.get("n_devices") != jf.get("n_devices"):
+        # the event-loop normalization cancels host *speed* but not mesh
+        # size: more devices only loosen this one-sided gate, fewer can
+        # trip it without a real regression — surface it either way
+        print(f"WARN jax: mesh size differs (baseline "
+              f"n_devices={jb.get('n_devices')}, fresh "
+              f"{jf.get('n_devices')}); speedups are not directly "
+              "comparable — recalibrate the baseline on this runner "
+              "class (docs/BENCHMARKS.md)")
     failures = []
-    for name in engines:
+    for name, tolerance in engines:
         base_row, fresh_row = baseline.get(name), fresh.get(name)
         if base_row is None or fresh_row is None:
             line = (f"FAIL {name}: engine row missing "
@@ -91,11 +128,15 @@ def main(argv=None) -> int:
                     help="committed baseline JSON (default: repo root)")
     ap.add_argument("--fresh", default=None,
                     help="fresh sweep_bench JSON; omitted = run the smoke "
-                         "benchmark now (pallas row skipped)")
+                         "benchmark now (pallas row included)")
     ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
-                    help="allowed fractional throughput drop (default 0.25)")
+                    help="allowed fractional throughput drop for engines "
+                         "without a per-engine override (default 0.25; "
+                         "pallas defaults to 0.45)")
     ap.add_argument("--engines", default=",".join(DEFAULT_ENGINES),
-                    help="comma-separated engine rows to gate")
+                    help="comma-separated engine rows to gate, each "
+                         "optionally suffixed :tolerance "
+                         "(e.g. numpy,jax,pallas:0.5)")
     a = ap.parse_args(argv)
 
     baseline = load_engines(a.baseline)
@@ -107,14 +148,14 @@ def main(argv=None) -> int:
         from benchmarks.sweep_bench import sweep_speedup
         fresh_path = os.path.join(REPO_ROOT, "BENCH_fresh.json")
         print(f"running smoke sweep_bench -> {fresh_path}", file=sys.stderr)
-        fresh = sweep_speedup(pallas=False, out_path=fresh_path)["engines"]
+        fresh = sweep_speedup(pallas=True, out_path=fresh_path)["engines"]
     else:
         fresh = load_engines(a.fresh)
 
-    failures = check(baseline, fresh, a.engines.split(","), a.tolerance)
+    failures = check(baseline, fresh, parse_engines(a.engines, a.tolerance))
     if failures:
         print(f"bench-regression gate: {len(failures)} engine(s) regressed "
-              f">{a.tolerance:.0%}", file=sys.stderr)
+              "beyond tolerance", file=sys.stderr)
         return 1
     print("bench-regression gate: all engines within tolerance",
           file=sys.stderr)
