@@ -195,3 +195,38 @@ def fig3_scalability(full: bool = False, backend: str = "numpy") -> Dict:
                 100.0 * r.mean_progress / base)})
         out[name] = rows
     return out
+
+
+def fig6_adaptive_churn(full: bool = False, backend: str = "numpy") -> Dict:
+    """Adaptive-vs-static convergence curves (virtual wall-clock x-axis).
+
+    The PR-6 deliverable figure: for each adaptive barrier policy
+    (DSSP / Elastic-BSP / annealed pBSP / annealed pSSP) and its static
+    parent, the normalized-error-vs-virtual-time trace of the elastic
+    SPMD trainer under the two :mod:`benchmarks.churn_bench` scenarios
+    (Poisson churn, heavy stragglers).  Series are keyed
+    ``{scenario}/{policy}`` with a ``pair`` field linking each adaptive
+    curve to its parent; the ``adaptive_vs_static`` scoreboard (error at
+    equal virtual time) rides along under ``"scoreboard"``.
+
+    ``backend`` is accepted for harness uniformity and ignored — the
+    elastic trainer is jax-only.
+    """
+    from benchmarks import churn_bench
+
+    res = churn_bench.elastic_churn(full=full, backend=backend)
+    out: Dict = {"scoreboard": res["adaptive_vs_static"]}
+    scenarios = {"churn": {k: res[k] for k in churn_bench.NINE},
+                 "stragglers": res["stragglers"]}
+    for scenario, runs in scenarios.items():
+        for name, parent in churn_bench.PARENT.items():
+            for member, role in ((name, "adaptive"), (parent, "static")):
+                r = runs[member]
+                out[f"{scenario}/{member}"] = {
+                    "role": role,
+                    "pair": f"{name} vs {parent}",
+                    "virtual_time": r["virtual_time"],
+                    "error": r["error"],
+                    "final_error": r["final_error"],
+                }
+    return out

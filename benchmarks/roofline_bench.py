@@ -3,12 +3,18 @@
 Prints the per-(arch × shape) three-term roofline for the single-pod mesh
 (EXPERIMENTS.md §Roofline is generated from this) and flags the dominant
 bottleneck.  ``derived`` = count of combos per bottleneck class.
+
+Also exports :func:`sweep_tick_row` — the sweep engine's hot path (the
+fused ``psp_tick`` inside its chunked scan) scored against the same
+three-term roofline, so the table covers the control-plane kernel and
+not just the model archs.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import time
 from typing import Dict, List
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
@@ -43,6 +49,76 @@ def table(mesh: str = "single") -> List[dict]:
             "args_gb": r["memory"]["argument_bytes"] / 1e9,
         })
     return out
+
+
+def sweep_tick_row(n_nodes: int = 128, dim: int = 32, rows: int = 8) -> dict:
+    """Roofline row for the fused sweep-tick hot path (ROADMAP leftover).
+
+    Lowers the *production* chunked scan — the fused
+    :func:`repro.kernels.psp_tick` tick inside its donated ``lax.scan``
+    chunk — for a representative straggler-sweep batch, runs the
+    trip-count-aware HLO cost analysis on the compiled module, and
+    scores per-chunk FLOPs/bytes against the TPU-v5e roofline
+    (:class:`repro.roofline.analysis.HW`).  The compiled chunk is also
+    timed on this host (best-of-3), so the row records both the analytic
+    distance to the accelerator roofline and the achieved tick rate of
+    the current backend: ``useful_ratio`` is the fraction of the v5e
+    roofline the measured run achieves (≈ 0 on a CPU host, meaningful on
+    TPU).
+    """
+    import jax
+    from repro.core import vector_sim_jax
+    from repro.core.barriers import make_barrier
+    from repro.core.simulator import SimConfig
+    from repro.core.vector_sim import VectorSimulator
+    from repro.roofline.analysis import roofline_report
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    cfgs = [SimConfig(n_nodes=n_nodes, duration=10.0, dim=dim, seed=s,
+                      straggler_frac=0.2,
+                      barrier=make_barrier("pssp", staleness=4,
+                                           sample_size=2))
+            for s in range(rows)]
+    sim = VectorSimulator(cfgs, backend="jax")
+    try:
+        chunk_fn, plan, params, carry, xs_chunks = \
+            vector_sim_jax._prepare(sim)
+        xs = xs_chunks[0]
+        ticks = int(jax.tree_util.tree_leaves(xs)[0].shape[0]) * plan.stride
+        compiled = chunk_fn.lower(params, carry, xs).compile()
+        hlo = compiled.as_text()
+        cost = analyze_hlo(hlo)
+        rep = roofline_report(
+            {"flops": cost.flops, "bytes accessed": cost.bytes}, hlo,
+            chips=1, model_flops_total=float(cost.flops))
+        best = float("inf")
+        for _ in range(3):           # donated carry: fresh copies per call
+            c = {k: v.copy() for k, v in carry.items()}
+            t0 = time.time()
+            out, _ = chunk_fn(params, c, xs)
+            jax.block_until_ready(out)
+            best = min(best, time.time() - t0)
+        roofline_s = max(rep.compute_s, rep.memory_s, rep.collective_s)
+        nbytes = lambda tree: sum(
+            v.size * v.dtype.itemsize for v in jax.tree_util.tree_leaves(tree))
+        return {
+            "arch": "sweep_tick", "status": "ok",
+            "shape": f"B{rows}xP{n_nodes}xd{dim}x{ticks}t",
+            "compute_s": rep.compute_s, "memory_s": rep.memory_s,
+            "collective_s": rep.collective_s, "bottleneck": rep.bottleneck,
+            "useful_ratio": min(roofline_s / max(best, 1e-12), 1.0),
+            "temp_gb": nbytes(carry) / 1e9,
+            "args_gb": (nbytes(params) + nbytes(xs)) / 1e9,
+            "ticks_per_chunk": ticks,
+            "flops_per_tick": cost.flops / max(ticks, 1),
+            "bytes_per_tick": cost.bytes / max(ticks, 1),
+            "arithmetic_intensity": cost.flops / max(cost.bytes, 1),
+            "measured_chunk_s": best,
+            "measured_tick_us": best / max(ticks, 1) * 1e6,
+            "host_backend": jax.default_backend(),
+        }
+    finally:
+        vector_sim_jax._compiled_chunk.cache_clear()
 
 
 def print_table(mesh: str = "single") -> Dict[str, int]:

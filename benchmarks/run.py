@@ -25,7 +25,7 @@ import time
 
 from benchmarks import _host_mesh  # noqa: F401  (must precede jax import)
 from benchmarks import churn_bench, fig45_bounds, figures, sweep_bench
-from benchmarks.roofline_bench import print_table, table
+from benchmarks.roofline_bench import print_table, sweep_tick_row, table
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                        "benchmarks")
@@ -106,6 +106,12 @@ BENCHES = [
     ("elastic_churn", churn_bench.elastic_churn,
      lambda res: "err@T " + " ".join(
          f"{k}={res[k]['final_error']:.3f}" for k in ("bsp", "pssp", "asp"))),
+    # adaptive-vs-static reshape of the same runs (elastic_churn result
+    # is cached, so the 18 trainer runs are not repeated)
+    ("fig6_adaptive_churn", figures.fig6_adaptive_churn,
+     lambda res: "dominant " + (",".join(
+         name for name, s in res["scoreboard"]["stragglers"].items()
+         if s["dominates"]) or "none") + " (stragglers)"),
 ]
 
 
@@ -119,6 +125,7 @@ def main(argv=None) -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     a = ap.parse_args(argv)
     os.makedirs(OUT_DIR, exist_ok=True)
+    sweep_bench.enable_compile_cache()
 
     print("name,us_per_call,derived")
     for name, fn, derive in BENCHES:
@@ -132,20 +139,22 @@ def main(argv=None) -> None:
         print(f"{name},{us:.0f},{derive(res)}")
 
     if not a.skip_roofline and (a.only in (None, "roofline")):
+        t0 = time.time()
         rows = table("single")
+        if not rows:
+            print("note: no dry-run artifacts (run repro.launch.dryrun); "
+                  "roofline table holds the sweep-tick row only")
+        # the sweep engine's own hot path sits in the same table as the
+        # model archs (ROADMAP: sweep-kernel roofline row)
+        rows.append(sweep_tick_row())
         ok = [r for r in rows if r["status"] == "ok"]
-        if ok:
-            t0 = time.time()
-            with open(os.path.join(OUT_DIR, "roofline.json"), "w") as f:
-                json.dump(rows, f, indent=1)
-            counts = {}
-            for r in ok:
-                counts[r["bottleneck"]] = counts.get(r["bottleneck"], 0) + 1
-            us = (time.time() - t0) * 1e6
-            print(f"roofline,{us:.0f},"
-                  f"combos={len(ok)} bottlenecks={counts}")
-        else:
-            print("roofline,0,no dry-run artifacts (run repro.launch.dryrun)")
+        with open(os.path.join(OUT_DIR, "roofline.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+        counts = {}
+        for r in ok:
+            counts[r["bottleneck"]] = counts.get(r["bottleneck"], 0) + 1
+        us = (time.time() - t0) * 1e6
+        print(f"roofline,{us:.0f},combos={len(ok)} bottlenecks={counts}")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@ schedules + an alive mask), not control flow.
 
     PYTHONPATH=src python examples/elastic_train.py
     PYTHONPATH=src python examples/elastic_train.py --barrier bsp --ticks 400
+    PYTHONPATH=src python examples/elastic_train.py --barrier ebsp \
+        --max-advance 8 --contribution mean-alive
 """
 import argparse
 
@@ -25,15 +27,28 @@ def main():
     """Train the linear task under churn, printing the population live."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--barrier", default="pssp",
-                    choices=("bsp", "ssp", "asp", "pbsp", "pssp"))
+                    choices=("bsp", "ssp", "asp", "pbsp", "pssp",
+                             "dssp", "ebsp", "apbsp", "apssp"),
+                    help="static protocol or adaptive policy "
+                         "(dssp / ebsp / annealed p(b|s)sp)")
     ap.add_argument("--ticks", type=int, default=300)
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--leave-rate", type=float, default=1.5)
     ap.add_argument("--join-rate", type=float, default=1.5)
+    ap.add_argument("--staleness-lo", type=int, default=0,
+                    help="dssp: lower end of the dynamic staleness range")
+    ap.add_argument("--max-advance", type=int, default=4,
+                    help="ebsp: slack budget for EMA-fast workers")
+    ap.add_argument("--contribution", default="mean",
+                    choices=("mean", "mean-alive", "sum"),
+                    help="gradient scaling; mean-alive tracks the EMA "
+                         "of the live population in the policy state")
     a = ap.parse_args()
 
     cfg = PSPConfig(barrier=a.barrier, n_workers=a.workers, sample_size=2,
                     staleness=3, straggler_frac=0.25,
+                    staleness_lo=a.staleness_lo, max_advance=a.max_advance,
+                    contribution=a.contribution,
                     churn=ChurnConfig(leave_rate=a.leave_rate,
                                       join_rate=a.join_rate,
                                       horizon=60.0, seed=7))

@@ -30,7 +30,7 @@ the tick-for-tick equivalence.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,10 +38,14 @@ import jax.numpy as jnp
 from repro.core.sampling import (sample_alive_peer_indices_jax,
                                  sample_peer_indices_jax)
 
-__all__ = ["BarrierKernel", "churn_joiner", "churn_victim",
-           "full_view_allowed", "sampled_allowed", "step_duration"]
+__all__ = ["BarrierKernel", "BarrierPolicy", "BetaAnnealPolicy",
+           "DSSPPolicy", "ElasticBSPPolicy", "POLICY_REGISTRY",
+           "churn_joiner", "churn_victim", "elastic_slack",
+           "full_view_allowed", "make_policy", "progress_gap",
+           "sampled_allowed", "step_duration"]
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
+_I32_MIN = jnp.iinfo(jnp.int32).min
 
 
 def step_duration(u: jax.Array, base: jax.Array,
@@ -151,6 +155,40 @@ def churn_joiner(u: jax.Array, alive: jax.Array,
     return jnp.argmax(jnp.where(pool, u, -1.0), axis=-1)
 
 
+def progress_gap(steps: jax.Array,
+                 alive: Optional[jax.Array] = None) -> jax.Array:
+    """Observed alive-step spread ``max − min`` per scenario (i32[...]).
+
+    The single observable every adaptive policy keys off: DSSP clips its
+    dynamic threshold to it, β-annealing widens/narrows its sample with
+    it.  Rows with no alive worker report a gap of 0 (nothing can be
+    observed, so nothing adapts).
+    """
+    if alive is None:
+        return jnp.max(steps, axis=-1) - jnp.min(steps, axis=-1)
+    mx = jnp.max(jnp.where(alive, steps, _I32_MIN), axis=-1)
+    mn = jnp.min(jnp.where(alive, steps, _I32_MAX), axis=-1)
+    return jnp.where(jnp.any(alive, axis=-1), mx - mn, 0)
+
+
+def elastic_slack(ema: jax.Array, max_advance: jax.Array,
+                  alive: Optional[jax.Array] = None) -> jax.Array:
+    """Elastic-BSP per-worker step credit from the duration EMA (i32[..., W]).
+
+    ``⌊max_advance · (1 − ema_i / max(alive ema))⌋``: the slowest observed
+    worker gets zero slack (it blocks exactly like BSP), an infinitely
+    fast one gets ``max_advance`` steps of run-ahead — the grid analogue
+    of Elastic BSP's "schedule the next sync point from predicted worker
+    speeds".  Workers with no observations yet (EMA 0) get full credit.
+    With ``max_advance = 0`` the credit is identically zero, which is
+    what makes the constant-schedule reduction to BSP bit-exact.
+    """
+    live = ema if alive is None else jnp.where(alive, ema, 0.0)
+    mx = jnp.max(live, axis=-1, keepdims=True)
+    frac = 1.0 - ema / jnp.maximum(mx, 1e-9)
+    return jnp.floor(max_advance * frac).astype(jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class BarrierKernel:
     """Trainer-facing bundle of the unified barrier + straggler model.
@@ -175,8 +213,14 @@ class BarrierKernel:
 
     @property
     def is_full_view(self) -> bool:
-        """Classic barriers evaluate the full step vector."""
-        return self.barrier in ("bsp", "ssp")
+        """Classic barriers evaluate the full step vector.
+
+        The adaptive full-view members (dssp/ebsp) are included: stripped
+        of their state, they degrade to the classic predicate at their
+        static bound — the stateful refinement lives in
+        :class:`BarrierPolicy`.
+        """
+        return self.barrier in ("bsp", "ssp", "dssp", "ebsp")
 
     def allowed(self, key: jax.Array, steps: jax.Array,
                 alive: Optional[jax.Array] = None) -> jax.Array:
@@ -198,3 +242,218 @@ class BarrierKernel:
                       jitter: float = 1.0) -> jax.Array:
         """See :func:`step_duration` (re-exported for consumers)."""
         return step_duration(u, base, jitter)
+
+
+# --------------------------------------------------------------------------- #
+# BarrierPolicy: the barrier decision as a stateful, jittable object.
+#
+# A policy owns a (possibly empty) state pytree plus an init/decide pair:
+#
+#     state = policy.init(W)                                # pytree of arrays
+#     allowed, state = policy.decide(state, key, steps, durations, alive)
+#
+# The five static protocols are trivially-stateless policies (empty state,
+# decide delegates to BarrierKernel.allowed — bit-identical to the
+# pre-policy dispatch); the adaptive members carry state:
+#
+#   ============  =====================  ==================================
+#   policy        state                  update rule (per decide)
+#   ============  =====================  ==================================
+#   dssp          thr    i32[]           clip(progress_gap, r, s)
+#   ebsp          ema    f32[W]          (1−α)·ema + α·durations (alive)
+#   apbsp/apssp   beta   i32[]           clip(β_min + gap − s, β_min, β_max)
+#   ============  =====================  ==================================
+#
+# Contract notes:
+# * decide consumes `key` exactly as BarrierKernel.allowed does (full-view
+#   and ASP policies consume none) — static policies therefore leave every
+#   engine's RNG stream untouched.
+# * decide reads/writes only its own state keys and passes any other
+#   entries through unchanged, so engines may co-locate extra per-run
+#   state (e.g. the trainer's churn-aware contribution denominator) in the
+#   same pytree.
+# * The sweep engines do not call these objects per tick (a batch row mixes
+#   policies); they evaluate the same formulas vectorised per row —
+#   progress_gap / elastic_slack above are the shared definitions, and the
+#   property suite pins the scalar and batched forms to each other.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class BarrierPolicy:
+    """A barrier predicate plus its decision state (base: stateless).
+
+    Wraps a :class:`BarrierKernel`; ``decide`` is pure jnp and jit/scan
+    safe, so the state pytree can ride in any engine's carry.
+    """
+
+    kernel: BarrierKernel
+
+    @property
+    def stateful(self) -> bool:
+        """Whether :meth:`init` returns a non-empty state pytree."""
+        return False
+
+    def init(self, W: int) -> Dict[str, jax.Array]:
+        """Initial policy state for a W-worker run (empty when stateless)."""
+        del W
+        return {}
+
+    def decide(self, state: Dict[str, jax.Array], key: jax.Array,
+               steps: jax.Array, durations: Optional[jax.Array] = None,
+               alive: Optional[jax.Array] = None,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """(allowed bool[..., W], new_state): may each worker advance?
+
+        ``durations`` is this round's per-worker step-duration draw
+        (f32[..., W]); stateless policies and DSSP ignore it, Elastic-BSP
+        folds it into its EMA.  ``None`` skips duration-driven updates.
+        """
+        del durations
+        return self.kernel.allowed(key, steps, alive), state
+
+
+@dataclasses.dataclass(frozen=True)
+class DSSPPolicy(BarrierPolicy):
+    """Dynamic SSP (arXiv 1908.11848): staleness searched in ``[lo, hi]``.
+
+    The threshold is the last observed alive-step spread clipped into the
+    configured range — the online search collapses to "track the gap".
+    ``lo == hi`` pins the threshold, reducing bit-for-bit to SSP at that
+    bound.
+    """
+
+    lo: int = 0
+
+    @property
+    def hi(self) -> int:
+        """Upper search bound s (the kernel's static staleness)."""
+        return self.kernel.staleness
+
+    @property
+    def stateful(self) -> bool:
+        """True: carries the ``thr`` scalar."""
+        return True
+
+    def init(self, W: int) -> Dict[str, jax.Array]:
+        """State ``{"thr": i32[]}`` starting at the upper bound s."""
+        del W
+        return {"thr": jnp.asarray(self.hi, jnp.int32)}
+
+    def decide(self, state, key, steps, durations=None, alive=None):
+        """SSP predicate at the tracked threshold; thr ← clip(gap, lo, hi)."""
+        del key, durations                     # full view consumes no RNG
+        thr = state["thr"].astype(steps.dtype)
+        allowed = full_view_allowed(steps, thr, alive)
+        gap = progress_gap(steps, alive)
+        new = jnp.clip(gap, self.lo, self.hi).astype(jnp.int32)
+        return allowed, {**state, "thr": new}
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticBSPPolicy(BarrierPolicy):
+    """Elastic BSP (arXiv 2001.01347): sync points from a duration EMA.
+
+    Each worker's next sync point is scheduled
+    ``elastic_slack(ema, max_advance)`` steps ahead of the global minimum;
+    the EMA tracks observed step durations.  ``max_advance == 0``
+    schedules a barrier every step — bit-for-bit BSP.
+    """
+
+    max_advance: int = 4
+    ema_alpha: float = 0.5
+
+    @property
+    def stateful(self) -> bool:
+        """True: carries the per-worker duration EMA."""
+        return True
+
+    def init(self, W: int) -> Dict[str, jax.Array]:
+        """State ``{"ema": f32[W]}``, zeros (slack 0 ≡ BSP until observed)."""
+        return {"ema": jnp.zeros((W,), jnp.float32)}
+
+    def decide(self, state, key, steps, durations=None, alive=None):
+        """SSP-shaped predicate at the elastic slack; EMA folds durations."""
+        del key                                # full view consumes no RNG
+        ema = state["ema"]
+        slack = elastic_slack(ema, float(self.max_advance), alive)
+        allowed = full_view_allowed(steps, slack.astype(steps.dtype), alive)
+        if durations is not None:
+            a = jnp.float32(self.ema_alpha)
+            new = (1.0 - a) * ema + a * durations.astype(jnp.float32)
+            ema = new if alive is None else jnp.where(alive, new, ema)
+        return allowed, {**state, "ema": ema}
+
+
+@dataclasses.dataclass(frozen=True)
+class BetaAnnealPolicy(BarrierPolicy):
+    """β-annealing pBSP/pSSP: PSP's sample size tracks the progress spread.
+
+    The effective β is ``clip(β_min + gap − s, β_min, β_max)`` — one extra
+    sampled peer per step of spread beyond the staleness bound.  The
+    sample itself still routes through the shared sampling primitive with
+    ``k_max = β_max`` slots, so the pre-drawn score stream is identical to
+    a static pBSP/pSSP row's.  ``β_min == β_max`` reduces to the static
+    parent.
+    """
+
+    beta_lo: int = 1
+
+    @property
+    def beta_hi(self) -> int:
+        """Upper annealing bound β_max (the kernel's static β)."""
+        return self.kernel.beta
+
+    @property
+    def stateful(self) -> bool:
+        """True: carries the annealed ``beta`` scalar."""
+        return True
+
+    def init(self, W: int) -> Dict[str, jax.Array]:
+        """State ``{"beta": i32[]}`` starting at β_min (clipped to W−1)."""
+        lo = min(max(self.beta_lo, 0), max(min(self.beta_hi, W - 1), 0))
+        return {"beta": jnp.asarray(lo, jnp.int32)}
+
+    def decide(self, state, key, steps, durations=None, alive=None):
+        """Sampled predicate at the annealed β; β ← clip(lo + gap − s)."""
+        del durations
+        W = steps.shape[-1]
+        k = min(self.beta_hi, W - 1)
+        gap = progress_gap(steps, alive)
+        s = jnp.asarray(self.kernel.staleness, steps.dtype)
+        lo = min(max(self.beta_lo, 0), max(k, 0))
+        new = jnp.clip(lo + gap - s, lo, max(k, 0)).astype(jnp.int32)
+        if k <= 0:                  # S = ∅ degenerates to ASP
+            return jnp.ones(steps.shape, bool), {**state, "beta": new}
+        ok, _ = sampled_allowed(steps, jnp.broadcast_to(s, steps.shape), k,
+                                beta=state["beta"], key=key, alive=alive)
+        return ok, {**state, "beta": new}
+
+
+#: adaptive policy names → their static parent's registry entry
+POLICY_REGISTRY = ("bsp", "ssp", "asp", "pbsp", "pssp",
+                   "dssp", "ebsp", "apbsp", "apssp")
+
+
+def make_policy(name: str, *, staleness: int = 0, beta: int = 0,
+                staleness_lo: int = 0, beta_lo: int = 1,
+                max_advance: int = 4,
+                ema_alpha: float = 0.5) -> BarrierPolicy:
+    """Factory mirroring :func:`repro.core.barriers.make_barrier`.
+
+    Static names yield a stateless :class:`BarrierPolicy` around the
+    matching :class:`BarrierKernel`; adaptive names yield the stateful
+    subclass with its bounds wired up.
+    """
+    name = name.lower()
+    if name not in POLICY_REGISTRY:
+        raise ValueError(
+            f"unknown barrier policy {name!r}; options: "
+            f"{sorted(POLICY_REGISTRY)}")
+    kern = BarrierKernel(barrier=name, staleness=staleness, beta=beta)
+    if name == "dssp":
+        return DSSPPolicy(kernel=kern, lo=staleness_lo)
+    if name == "ebsp":
+        return ElasticBSPPolicy(kernel=kern, max_advance=max_advance,
+                                ema_alpha=ema_alpha)
+    if name in ("apbsp", "apssp"):
+        return BetaAnnealPolicy(kernel=kern, beta_lo=beta_lo)
+    return BarrierPolicy(kernel=kern)

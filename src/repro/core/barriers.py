@@ -38,7 +38,7 @@ worker-centric form is what each node evaluates locally.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import ClassVar, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,10 @@ __all__ = [
     "ASP",
     "PBSP",
     "PSSP",
+    "DSSP",
+    "EBSP",
+    "APBSP",
+    "APSSP",
     "make_barrier",
     "BARRIER_REGISTRY",
 ]
@@ -70,6 +74,12 @@ class BarrierControl:
 
     #: registry name, overridden by subclasses
     name: str = "base"
+
+    #: adaptive-policy kind: "" for the static protocols, else one of
+    #: "dssp" / "ebsp" / "anneal".  The engines key their stateful
+    #: :class:`~repro.core.barrier_kernel.BarrierPolicy` machinery off
+    #: this tag; static barriers keep the zero-state fast paths.
+    adaptive: ClassVar[str] = ""
 
     # ------------------------------------------------------------------ #
     # python path (simulator)
@@ -198,18 +208,112 @@ class PSSP(BarrierControl):
     name: str = "pssp"
 
 
+# --------------------------------------------------------------------------- #
+# adaptive barrier family: the barrier itself becomes a runtime decision.
+# These classes only *declare* the policy (bounds + smoothing knobs); the
+# per-engine decision state lives in repro.core.barrier_kernel's
+# BarrierPolicy objects and in each engine's carried state.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class DSSP(BarrierControl):
+    """Dynamic SSP — staleness searched online in ``[staleness_lo, staleness]``.
+
+    After arXiv 1908.11848: instead of a fixed bound s, the threshold
+    tracks the *observed* alive-step spread, clipped to the configured
+    ``[r, s]`` range — tight synchronisation while workers are level,
+    SSP-like slack once stragglers open a gap.  With
+    ``staleness_lo == staleness`` the search range is a point and the
+    policy reduces bit-for-bit to :class:`SSP` (pinned by the
+    cross-engine property suite).
+    """
+
+    staleness: int = 4              # upper bound s of the search range
+    sample_size: Optional[int] = None
+    name: str = "dssp"
+    staleness_lo: int = 0           # lower bound r of the search range
+    adaptive: ClassVar[str] = "dssp"
+
+
+@dataclasses.dataclass(frozen=True)
+class EBSP(BarrierControl):
+    """Elastic BSP — per-worker sync points scheduled from a duration EMA.
+
+    After arXiv 2001.01347 (ZipLine): each worker carries an EMA of its
+    observed step durations; the next synchronisation point is scheduled
+    so that a worker measured r× faster than the slowest may run up to
+    ``⌊max_advance·(1 − ema_i/ema_max)⌋`` steps ahead before blocking.
+    ``max_advance = 0`` schedules a sync point every step — bit-for-bit
+    :class:`BSP` (the "constant schedule" reduction of the property
+    suite).
+    """
+
+    staleness: int = 0
+    sample_size: Optional[int] = None
+    name: str = "ebsp"
+    max_advance: int = 4            # step credit of an infinitely-fast worker
+    ema_alpha: float = 0.5          # duration-EMA smoothing factor
+    adaptive: ClassVar[str] = "ebsp"
+
+
+@dataclasses.dataclass(frozen=True)
+class APBSP(BarrierControl):
+    """β-annealing pBSP — PSP's sample size adapted to the observed spread.
+
+    The sample widens towards ``sample_size`` (β_max) while the alive-step
+    spread exceeds the staleness bound and narrows back towards
+    ``sample_size_lo`` (β_min) as workers level out — cheap probabilistic
+    checks in calm phases, near-full-view scrutiny under stragglers.
+    """
+
+    staleness: int = 0
+    sample_size: Optional[int] = 16  # β_max
+    name: str = "apbsp"
+    sample_size_lo: int = 1          # β_min
+    adaptive: ClassVar[str] = "anneal"
+
+
+@dataclasses.dataclass(frozen=True)
+class APSSP(BarrierControl):
+    """β-annealing pSSP — :class:`APBSP` with a nonzero staleness bound."""
+
+    staleness: int = 4
+    sample_size: Optional[int] = 16  # β_max
+    name: str = "apssp"
+    sample_size_lo: int = 1          # β_min
+    adaptive: ClassVar[str] = "anneal"
+
+
 BARRIER_REGISTRY = {
     "bsp": BSP,
     "ssp": SSP,
     "asp": ASP,
     "pbsp": PBSP,
     "pssp": PSSP,
+    "dssp": DSSP,
+    "ebsp": EBSP,
+    "apbsp": APBSP,
+    "apssp": APSSP,
 }
+
+#: names whose ``staleness`` field is configurable (s > 0 is meaningful)
+_STALENESS_NAMES = ("ssp", "pssp", "dssp", "apssp")
+#: names whose ``sample_size`` field is configurable (the β knob)
+_SAMPLED_NAMES = ("pbsp", "pssp", "apbsp", "apssp")
 
 
 def make_barrier(name: str, *, staleness: Optional[int] = None,
-                 sample_size: Optional[int] = None) -> BarrierControl:
-    """Factory: ``make_barrier('pssp', staleness=4, sample_size=16)``."""
+                 sample_size: Optional[int] = None,
+                 staleness_lo: Optional[int] = None,
+                 sample_size_lo: Optional[int] = None,
+                 max_advance: Optional[int] = None,
+                 ema_alpha: Optional[float] = None) -> BarrierControl:
+    """Factory: ``make_barrier('pssp', staleness=4, sample_size=16)``.
+
+    The adaptive-family knobs (``staleness_lo`` for dssp,
+    ``sample_size_lo`` for apbsp/apssp, ``max_advance``/``ema_alpha`` for
+    ebsp) are forwarded only to the policies they parameterise, like the
+    classic ``staleness``/``sample_size`` arguments.
+    """
     name = name.lower()
     if name not in BARRIER_REGISTRY:
         raise ValueError(
@@ -218,8 +322,16 @@ def make_barrier(name: str, *, staleness: Optional[int] = None,
     kwargs = {}
     # staleness is meaningful only for the SSP family (BSP/pBSP are s=0 by
     # definition; ASP ignores it)
-    if staleness is not None and name in ("ssp", "pssp"):
+    if staleness is not None and name in _STALENESS_NAMES:
         kwargs["staleness"] = staleness
-    if sample_size is not None and name in ("pbsp", "pssp"):
+    if sample_size is not None and name in _SAMPLED_NAMES:
         kwargs["sample_size"] = sample_size
+    if staleness_lo is not None and name == "dssp":
+        kwargs["staleness_lo"] = staleness_lo
+    if sample_size_lo is not None and name in ("apbsp", "apssp"):
+        kwargs["sample_size_lo"] = sample_size_lo
+    if max_advance is not None and name == "ebsp":
+        kwargs["max_advance"] = max_advance
+    if ema_alpha is not None and name == "ebsp":
+        kwargs["ema_alpha"] = ema_alpha
     return cls(**kwargs)

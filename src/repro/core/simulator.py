@@ -186,6 +186,22 @@ class Simulator:
         # fast-path state for full-view (deterministic) barriers
         self._full_view = self.barrier.sample_size is None and \
             not isinstance(self.barrier, ASP)
+        # --- adaptive barrier-policy state (dssp / ebsp / β-annealing) --- #
+        # Mutable mirrors of the BarrierPolicy state pytree; static
+        # barriers have kind "" and never touch them.  Decisions read the
+        # current state; observations update it at this engine's natural
+        # points (finishes for the step spread, starts for the duration
+        # EMA) — the engines are equivalent at the distribution level.
+        self._adaptive = getattr(self.barrier, "adaptive", "")
+        if self._adaptive:
+            cap = max(min(int(self.barrier.sample_size or 0), P - 1), 0)
+            self._beta_cap = cap
+            self._beta_lo = min(max(int(getattr(
+                self.barrier, "sample_size_lo", 0)), 0), cap)
+            self._pol_thr = int(self.barrier.staleness)
+            self._pol_beta = self._beta_lo if self._adaptive == "anneal" \
+                else cap
+            self._pol_ema = np.zeros(P)
 
     # ------------------------------------------------------------------ #
     def _push(self, t: float, kind: int, node: int = -1) -> None:
@@ -223,6 +239,20 @@ class Simulator:
         if isinstance(self.barrier, ASP):
             return True
         beta = self.barrier.sample_size
+        staleness = self.barrier.staleness
+        if self._adaptive == "dssp":
+            # dynamic threshold searched in [staleness_lo, staleness]
+            staleness = self._pol_thr
+        elif self._adaptive == "ebsp":
+            # per-node step credit from the duration EMA (the scalar form
+            # of barrier_kernel.elastic_slack); slowest node gets 0 — BSP
+            live = np.where(self.alive, self._pol_ema, 0.0)
+            frac = 1.0 - self._pol_ema[node] / max(float(live.max()), 1e-9)
+            staleness = int(np.floor(self.barrier.max_advance * frac))
+        elif self._adaptive == "anneal":
+            # annealed sample size; β = 0 samples nobody (degenerate ASP,
+            # and CentralSampler draws no RNG for an empty sample)
+            beta = self._pol_beta
         # avoid the O(N) alive-mask gather on the hot path when there is
         # no churn (the common case)
         all_alive = self._all_alive if hasattr(self, "_all_alive") else True
@@ -244,7 +274,7 @@ class Simulator:
             pool = sample.steps
         if pool.size == 0:
             return True
-        return bool(np.all(self.steps[node] - pool <= self.barrier.staleness))
+        return bool(np.all(self.steps[node] - pool <= staleness))
 
     def _try_advance(self, node: int, from_poll: bool = False) -> None:
         """Barrier check; on success begin the node's next step."""
@@ -253,7 +283,14 @@ class Simulator:
         if self._can_pass(node):
             self._waiting.pop(node, None)
             self._pull_model(node)
-            self._push(self.now + self._step_duration(node), _FINISH, node)
+            dur = self._step_duration(node)
+            if self._adaptive == "ebsp":
+                # fold the freshly drawn duration into the node's EMA —
+                # the event engine's observation point for worker speed
+                a = self.barrier.ema_alpha
+                self._pol_ema[node] = (1.0 - a) * self._pol_ema[node] \
+                    + a * dur
+            self._push(self.now + dur, _FINISH, node)
         else:
             newly_waiting = node not in self._waiting
             if newly_waiting:
@@ -280,8 +317,32 @@ class Simulator:
         self._push_update(node)
         old_min = int(self.steps[self.alive].min())
         self.steps[node] += 1
+        thr_moved = False
+        if self._adaptive in ("dssp", "anneal"):
+            # observe the post-finish alive-step spread and update the
+            # carried threshold / sample size (clip into the configured
+            # range — the grid engines' block-3b rule at this engine's
+            # per-event granularity)
+            a_steps = self.steps[self.alive]
+            gap = int(a_steps.max() - a_steps.min())
+            if self._adaptive == "dssp":
+                new = int(np.clip(gap, self.barrier.staleness_lo,
+                                  self.barrier.staleness))
+                thr_moved = new != self._pol_thr
+                self._pol_thr = new
+            else:
+                self._pol_beta = int(np.clip(
+                    self._beta_lo + gap - self.barrier.staleness,
+                    self._beta_lo, self._beta_cap))
         self._try_advance(node)
-        if self._full_view and int(self.steps[self.alive].min()) != old_min:
+        # full-view waiters are event-woken: on global-min movement, on a
+        # DSSP threshold change, and on every finish for Elastic-BSP
+        # (a finisher's restart shifts the EMA, so any waiter's slack may
+        # have widened).  Wakes draw no RNG for full-view barriers, so
+        # the extra re-checks cannot perturb the stream.
+        if self._full_view and (
+                int(self.steps[self.alive].min()) != old_min or thr_moved
+                or self._adaptive == "ebsp"):
             self._wake_waiters()
 
     def _on_measure(self) -> None:

@@ -84,8 +84,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.barrier_kernel import (BarrierKernel, churn_joiner,
-                                       churn_victim)
+from repro.core.barrier_kernel import (BarrierKernel, BarrierPolicy,
+                                       churn_joiner, churn_victim,
+                                       make_policy)
 from repro.core.barriers import BarrierControl, make_barrier
 
 __all__ = ["ChurnConfig", "PSPConfig", "PSPState", "elastic_drive",
@@ -119,7 +120,7 @@ class ChurnConfig:
 class PSPConfig:
     """Barrier-control configuration for the SPMD trainer."""
 
-    barrier: str = "pssp"          # bsp | ssp | asp | pbsp | pssp
+    barrier: str = "pssp"          # bsp|ssp|asp|pbsp|pssp|dssp|ebsp|ap(b|s)sp
     staleness: int = 4             # s (ignored by bsp/asp)
     sample_size: int = 16          # β (ignored by classic barriers)
     n_workers: int = 8             # W — data-parallel worker groups
@@ -129,7 +130,15 @@ class PSPConfig:
     straggler_frac: float = 0.0
     straggler_slowdown: float = 4.0
     poll_interval: float = 0.02    # blocked-worker re-sample cadence (virtual s)
-    contribution: str = "mean"     # "mean" | "sum" over pushing workers
+    #: "mean" (pushing-worker mean), "sum", or "mean-alive" (divide by an
+    #: EMA of the alive-worker count — contribution per worker stays
+    #: stable when churn shrinks the pushing set; the PR-4 leftover)
+    contribution: str = "mean"
+    # adaptive-policy knobs (ignored by the five static barriers)
+    staleness_lo: int = 0          # DSSP lower search bound r
+    sample_size_lo: int = 1        # β-annealing lower bound β_min
+    max_advance: int = 4           # Elastic-BSP max run-ahead R
+    ema_alpha: float = 0.5         # Elastic-BSP duration-EMA α
     #: elastic worker set: None ⇒ fixed W workers (the pre-elastic trainer,
     #: bit-for-bit); a :class:`ChurnConfig` enables Poisson leave/join churn
     churn: Optional[ChurnConfig] = None
@@ -137,7 +146,11 @@ class PSPConfig:
     def make_barrier(self) -> BarrierControl:
         """Instantiate the configured :class:`BarrierControl` policy."""
         return make_barrier(self.barrier, staleness=self.staleness,
-                            sample_size=self.sample_size)
+                            sample_size=self.sample_size,
+                            staleness_lo=self.staleness_lo,
+                            sample_size_lo=self.sample_size_lo,
+                            max_advance=self.max_advance,
+                            ema_alpha=self.ema_alpha)
 
     @property
     def beta(self) -> int:
@@ -180,6 +193,22 @@ class PSPConfig:
                              staleness=self.effective_staleness,
                              beta=self.beta)
 
+    @property
+    def barrier_policy(self) -> BarrierPolicy:
+        """The (possibly stateful) decision policy this trainer executes.
+
+        Static barriers yield a stateless wrapper whose ``decide`` is
+        exactly :meth:`barrier_kernel`'s predicate — the pre-policy
+        trainer bit-for-bit.  Adaptive names (``dssp`` / ``ebsp`` /
+        ``apbsp`` / ``apssp``) yield the stateful policy whose state
+        pytree rides in :attr:`PSPState.policy`.
+        """
+        return make_policy(self.barrier, staleness=self.effective_staleness,
+                           beta=self.beta, staleness_lo=self.staleness_lo,
+                           beta_lo=self.sample_size_lo,
+                           max_advance=self.max_advance,
+                           ema_alpha=self.ema_alpha)
+
 
 class PSPState(NamedTuple):
     """Replicated-or-sharded training state carried across ticks.
@@ -207,6 +236,12 @@ class PSPState(NamedTuple):
     join_times: jax.Array          # f32[Ej] pre-sampled join schedule
     leave_cursor: jax.Array        # i32[] next unconsumed leave event
     join_cursor: jax.Array         # i32[] next unconsumed join event
+    #: adaptive barrier-policy state (``cfg.barrier_policy.init``): empty
+    #: for the five static barriers, so their pytree — and compiled
+    #: program — is unchanged.  ``contribution="mean-alive"`` co-locates
+    #: its alive-count EMA here under the ``"denom"`` key (policies pass
+    #: unknown keys through untouched).
+    policy: PyTree = {}
 
 
 def _duration(cfg: PSPConfig, key: jax.Array, slow: jax.Array) -> jax.Array:
@@ -250,6 +285,9 @@ def psp_init(cfg: PSPConfig, params: PyTree, opt_init: Callable[[PyTree], PyTree
                                         cfg.churn.horizon)
     else:
         lt = jt = np.empty(0)
+    policy = dict(cfg.barrier_policy.init(w))
+    if cfg.contribution == "mean-alive":
+        policy["denom"] = jnp.asarray(float(w), jnp.float32)
     return PSPState(
         server_params=params,
         opt_state=opt_init(params),
@@ -267,6 +305,7 @@ def psp_init(cfg: PSPConfig, params: PyTree, opt_init: Callable[[PyTree], PyTree
         join_times=jnp.asarray(jt, jnp.float32),
         leave_cursor=jnp.zeros((), jnp.int32),
         join_cursor=jnp.zeros((), jnp.int32),
+        policy=policy,
     )
 
 
@@ -386,7 +425,14 @@ def psp_train_step(
     completed = state.busy_until <= state.now
     push_mask = completed & ~state.pushed & alive
     denom = jnp.maximum(jnp.sum(push_mask), 1)
-    scale = jnp.where(cfg.contribution == "mean", 1.0 / denom, 1.0)
+    if cfg.contribution == "mean-alive":
+        # churn-aware scaling: divide by the carried alive-count EMA, not
+        # by this tick's pushing-set size — per-worker contribution stays
+        # stable as churn shrinks/grows the population.  Reads the OLD
+        # state (the EMA update lands below with the policy state).
+        scale = 1.0 / jnp.maximum(state.policy["denom"], 1.0)
+    else:
+        scale = jnp.where(cfg.contribution == "mean", 1.0 / denom, 1.0)
 
     def _masked_sum(g):
         m = push_mask.reshape((-1,) + (1,) * (g.ndim - 1))
@@ -404,12 +450,19 @@ def psp_train_step(
         state.opt_state)
     pushed = state.pushed | push_mask
 
-    # (3) barrier: completed alive workers try to start their next step
-    allowed = _barrier_allowed(cfg, k_bar, state.step,
-                               alive if cfg.has_churn else None)
+    # (3) barrier: completed alive workers try to start their next step.
+    # The next-step duration is drawn *before* the decide so adaptive
+    # policies (Elastic-BSP's duration EMA) can observe it; k_dur and
+    # k_bar are independent splits of the same parent key, so hoisting
+    # the draw leaves every RNG stream bit-identical.  For static
+    # barriers ``decide`` is exactly the old ``_barrier_allowed``
+    # predicate and passes the (empty) policy state through.
+    next_dur = _duration(cfg, k_dur, state.slow)
+    allowed, new_policy = cfg.barrier_policy.decide(
+        state.policy, k_bar, state.step, next_dur,
+        alive if cfg.has_churn else None)
     allowed = allowed & completed & alive
     new_step = state.step + allowed.astype(jnp.int32)
-    next_dur = _duration(cfg, k_dur, state.slow)
     new_busy = jnp.where(allowed, state.now + next_dur, state.busy_until)
     new_pushed = jnp.where(allowed, False, pushed)
 
@@ -418,6 +471,11 @@ def psp_train_step(
         return jnp.where(m, p[None], view)
 
     new_views = jax.tree.map(_pull, state.views, new_params)
+
+    if cfg.contribution == "mean-alive":
+        new_policy = dict(new_policy)
+        new_policy["denom"] = (0.9 * state.policy["denom"]
+                               + 0.1 * jnp.sum(alive).astype(jnp.float32))
 
     # (4) event-driven virtual-time advance: jump to the earlier of (a) the
     # next completion of a still-busy alive worker, (b) the next poll of a
@@ -446,6 +504,7 @@ def psp_train_step(
         key=key,
         tick=state.tick + 1,
         total_pushes=state.total_pushes + jnp.sum(push_mask),
+        policy=new_policy,
     )
     if cfg.has_churn:
         # progress statistics over the *current* worker set only — a

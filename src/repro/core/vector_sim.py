@@ -220,6 +220,16 @@ class VectorSimulator:
         self.beta = np.full(B, -1, dtype=np.int64)    # -1 = full view
         self.is_asp = np.zeros(B, dtype=bool)
         self.distributed = np.zeros(B, dtype=bool)
+        # adaptive barrier-policy rows (dssp / ebsp / β-annealing): row
+        # tags + per-row knobs; the static-policy fast path never reads
+        # these (self.adaptive gates every use)
+        self.is_dssp = np.zeros(B, dtype=bool)
+        self.is_ebsp = np.zeros(B, dtype=bool)
+        self.is_anneal = np.zeros(B, dtype=bool)
+        self.pol_lo = np.zeros(B, dtype=np.int64)      # DSSP lower bound r
+        self.beta_lo = np.zeros(B, dtype=np.int64)     # annealing β_min
+        self.ebsp_range = np.zeros(B)                  # Elastic max_advance
+        self.ebsp_alpha = np.full(B, 0.5)              # Elastic EMA α
         for b, cfg in enumerate(configs):
             rng = np.random.default_rng(cfg.seed)
             self.w_true[b], ct = draw_static_state(cfg, rng)
@@ -234,8 +244,31 @@ class VectorSimulator:
             if not self.is_asp[b] and bar.sample_size is not None:
                 self.beta[b] = bar.sample_size
             self.distributed[b] = cfg.distributed_sampling
+            kind = getattr(bar, "adaptive", "")
+            if kind == "dssp":
+                self.is_dssp[b] = True
+                self.pol_lo[b] = bar.staleness_lo
+            elif kind == "ebsp":
+                self.is_ebsp[b] = True
+                self.ebsp_range[b] = bar.max_advance
+                self.ebsp_alpha[b] = bar.ema_alpha
+            elif kind == "anneal":
+                self.is_anneal[b] = True
+                self.beta_lo[b] = bar.sample_size_lo
         self.full_view = (self.beta < 0) & ~self.is_asp
         self.sampled = self.beta >= 0
+        self.adaptive = bool(self.is_dssp.any() or self.is_ebsp.any()
+                             or self.is_anneal.any())
+        #: per-row effective sample-slot cap (β clipped to the row's true
+        #: peer count) — the annealing bounds live inside it
+        self.beta_cap = np.maximum(np.minimum(self.beta, self.n_true - 1), 0)
+        self.beta_lo = np.clip(self.beta_lo, 0, self.beta_cap)
+        # ---- adaptive policy state (decisions read the OLD state; the
+        # ---- end-of-tick update mirrors psp_tick_ref block 3b) ---------- #
+        self.pol_thr = self.staleness.copy()           # DSSP threshold
+        self.pol_ema = np.zeros((B, P))                # Elastic duration EMA
+        self.pol_beta = np.where(self.is_anneal, self.beta_lo,
+                                 np.maximum(self.beta, 0))
         self.w_true_norm = np.linalg.norm(self.w_true, axis=1)
 
         # one dynamics stream for the whole batch, seeded from all rows;
@@ -373,18 +406,37 @@ class VectorSimulator:
         passed = np.zeros((self.B, self.P), dtype=bool)
         passed[self.is_asp] = True
         if self.full_view.any():
-            fv_steps = self.steps[self.full_view]
+            fv = self.full_view
+            fv_steps = self.steps[fv]
             # min over *alive* steps: a departed straggler's frozen counter
             # must not gate waiters (the event engine's churn-wake fix)
-            masked = np.where(self.alive[self.full_view], fv_steps,
+            masked = np.where(self.alive[fv], fv_steps,
                               np.iinfo(np.int64).max)
             lag = fv_steps - masked.min(axis=1, keepdims=True)
-            passed[self.full_view] = \
-                lag <= self.staleness[self.full_view, None]
+            thr = np.broadcast_to(self.staleness[fv, None], fv_steps.shape)
+            if self.adaptive:
+                # adaptive rows swap their effective threshold in: DSSP
+                # the carried dynamic bound, Elastic-BSP the per-node
+                # EMA step credit (same formulas as psp_tick_ref /
+                # barrier_kernel.elastic_slack)
+                thr = np.where(self.is_dssp[fv, None],
+                               self.pol_thr[fv, None], thr)
+                if self.is_ebsp.any():
+                    live = np.where(self.alive, self.pol_ema, 0.0)
+                    frac = 1.0 - self.pol_ema / np.maximum(
+                        live.max(axis=1, keepdims=True), 1e-9)
+                    slack = np.floor(self.ebsp_range[:, None] * frac
+                                     ).astype(np.int64)
+                    thr = np.where(self.is_ebsp[fv, None], slack[fv], thr)
+            passed[fv] = lag <= thr
         sm = cand & self.sampled[:, None]
         b_idx, p_idx = np.nonzero(sm)
         if b_idx.size:
             betas = self.beta[b_idx]
+            if self.adaptive:
+                # β-annealing rows sample with their carried β
+                betas = np.where(self.is_anneal[b_idx],
+                                 self.pol_beta[b_idx], betas)
             for beta in np.unique(betas):
                 pick = betas == beta
                 bb, pp = b_idx[pick], p_idx[pick]
@@ -511,6 +563,16 @@ class VectorSimulator:
                 self.event_time[start] = t0 + dur
                 self.computing[start] = True
                 self.blocked[start] = False
+                if self.adaptive and self.is_ebsp.any():
+                    # Elastic-BSP folds each starter's freshly drawn
+                    # duration into its per-node EMA (the grid engines'
+                    # observation point — see psp_tick_ref block 3b)
+                    eb = self.is_ebsp[b_idx]
+                    if eb.any():
+                        al = self.ebsp_alpha[b_idx[eb]]
+                        old = self.pol_ema[b_idx[eb], p_idx[eb]]
+                        self.pol_ema[b_idx[eb], p_idx[eb]] = \
+                            (1.0 - al) * old + al * dur[eb]
             fail = cand & ~passed
             if fail.any():
                 self.blocked[fail] = True
@@ -519,6 +581,22 @@ class VectorSimulator:
                 sm_fail = fail & self.sampled[:, None]
                 self.ready[sm_fail] += self.poll_interval
                 self.event_time[sm_fail] = self.ready[sm_fail]
+
+        # 2b. adaptive-policy state updates from this tick's observed
+        #     post-finish step spread (decisions above used the OLD state)
+        if self.adaptive:
+            masked = np.where(self.alive, self.steps,
+                              np.iinfo(np.int64).min)
+            gap = masked.max(axis=1) - np.where(
+                self.alive, self.steps, np.iinfo(np.int64).max).min(axis=1)
+            gap = np.where(self.alive.any(axis=1), gap, 0)
+            self.pol_thr = np.where(
+                self.is_dssp,
+                np.clip(gap, self.pol_lo, self.staleness), self.pol_thr)
+            self.pol_beta = np.where(
+                self.is_anneal,
+                np.clip(self.beta_lo + gap - self.staleness,
+                        self.beta_lo, self.beta_cap), self.pol_beta)
 
     def _results(self, errs: np.ndarray, upds: np.ndarray) -> List[SimResult]:
         """Assemble per-row :class:`SimResult`\\ s from [B, M] traces.

@@ -62,9 +62,16 @@ Design notes for the hot path:
 * Times are f32 (no global x64 flag); the due-comparison epsilon scales
   with ``dt`` to stay above f32 resolution at the horizon.
 * The compiled chunk scan is cached by structural signature
-  (``P, d, batch, k_max, has_churn, masked, impl, stride, ndev``) so
-  repeated sweeps of the same shape (the common benchmark/test pattern)
-  compile once per chunk length.
+  (``P, d, batch, k_max, has_churn, masked, adaptive, impl, stride,
+  ndev``) so repeated sweeps of the same shape (the common
+  benchmark/test pattern) compile once per chunk length.
+* Adaptive barrier policies (dssp / ebsp / β-annealing) ride in the
+  scanned carry as the :data:`~repro.kernels.psp_tick.POLICY_STATE_KEYS`
+  pytree entries; static batches have ``adaptive=False`` and compile the
+  exact pre-policy tick (the keys are simply absent), which is what
+  keeps the static golden traces bit-identical.  Adaptive rows draw no
+  extra noise — the annealed β consumes the same pre-drawn score slots
+  (``k_max`` covers β_max) — so the planner's noise budget is unchanged.
 """
 from __future__ import annotations
 
@@ -82,7 +89,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.core.simulator import SimResult
 from repro.core.sweep_plan import plan_sweep
 from repro.kernels import ops
-from repro.kernels.psp_tick import STATE_KEYS
+from repro.kernels.psp_tick import POLICY_STATE_KEYS, STATE_KEYS
 
 __all__ = ["run_batch", "tick_impl"]
 
@@ -126,7 +133,8 @@ def _specs(params: Dict, carry: Dict, xs: Dict) -> Tuple[Dict, Dict, Dict]:
 
 @functools.lru_cache(maxsize=32)
 def _compiled_chunk(P: int, d: int, batch: int, k_max: int, has_churn: bool,
-                    masked: bool, impl: str, stride: int, ndev: int):
+                    masked: bool, adaptive: bool, impl: str, stride: int,
+                    ndev: int):
     """(jitted chunk scan, mesh), specialised on structural shape.
 
     The returned function maps ``(params, carry, xs) -> (carry', (err,
@@ -136,10 +144,12 @@ def _compiled_chunk(P: int, d: int, batch: int, k_max: int, has_churn: bool,
     block while this wrapper caches the mesh + shard_map plumbing.
     """
     mesh = Mesh(np.array(jax.devices()[:ndev]), ("rows",))
-    kw = dict(k_max=k_max, has_churn=has_churn, masked=masked, impl=impl)
+    kw = dict(k_max=k_max, has_churn=has_churn, masked=masked,
+              adaptive=adaptive, impl=impl)
+    state_keys = STATE_KEYS + (POLICY_STATE_KEYS if adaptive else ())
 
     def tick(params, carry, xt):
-        state = {k: carry[k] for k in STATE_KEYS}
+        state = {k: carry[k] for k in state_keys}
         rand = {k: xt[k] for k in xt
                 if k in ("dur", "scores", "u1", "leave", "join", "X", "mb")}
         state, out = ops.psp_tick(state, rand, params, xt["t"],
@@ -277,6 +287,19 @@ def _prepare(sim):
             pad_rows(np.where(sim.distributed & sim.sampled,
                               sim.hops_per_peer, 0)), jnp.int32),
     }
+    adaptive = bool(getattr(sim, "adaptive", False))
+    if adaptive:
+        # adaptive-policy row tags + knobs; padded rows are tagged static
+        # (they are frozen anyway)
+        params.update(
+            is_dssp=jnp.asarray(pad_rows(sim.is_dssp)),
+            is_ebsp=jnp.asarray(pad_rows(sim.is_ebsp)),
+            is_anneal=jnp.asarray(pad_rows(sim.is_anneal)),
+            pol_lo=jnp.asarray(pad_rows(sim.pol_lo), jnp.int32),
+            beta_lo=jnp.asarray(pad_rows(sim.beta_lo), jnp.int32),
+            ebsp_range=jnp.asarray(pad_rows(sim.ebsp_range), f32),
+            ebsp_alpha=jnp.asarray(pad_rows(sim.ebsp_alpha), f32),
+        )
     carry = {
         "w": jnp.zeros((Bp, d), f32),
         "pulled": jnp.zeros((Bp, P, d), f32),
@@ -292,6 +315,13 @@ def _prepare(sim):
         "pend_leave": jnp.zeros(Bp, jnp.int32),
         "pend_join": jnp.zeros(Bp, jnp.int32),
     }
+    if adaptive:
+        # policy state joins the scanned carry (donated with the rest)
+        carry.update(
+            pol_thr=jnp.asarray(pad_rows(sim.pol_thr), jnp.int32),
+            pol_ema=jnp.asarray(pad_rows(sim.pol_ema.astype(np.float32))),
+            pol_beta=jnp.asarray(pad_rows(sim.pol_beta), jnp.int32),
+        )
 
     # scheduled tick grid: live ticks, then dead padding beyond every
     # horizon (the fused tick's active gate makes them no-ops)
@@ -307,8 +337,8 @@ def _prepare(sim):
         jc[:T, :B] = sim.join_counts
 
     chunk_fn, mesh = _compiled_chunk(P, d, sim.batch, k_max, sim.has_churn,
-                                     masked, tick_impl(), plan.stride,
-                                     plan.n_devices)
+                                     masked, adaptive, tick_impl(),
+                                     plan.stride, plan.n_devices)
     p_specs, c_specs, _ = _specs(params, carry,
                                  {"sup": 0, "t": 0, "leave": 0, "join": 0})
     shard = lambda spec: NamedSharding(mesh, spec)
@@ -380,4 +410,8 @@ def run_batch(sim) -> List[SimResult]:
     sim.alive = np.asarray(final["alive"][:B])
     sim.total_updates = np.asarray(final["total_updates"][:B], np.int64)
     sim.control_messages = np.asarray(final["control"][:B], np.int64)
+    if "pol_thr" in final:
+        sim.pol_thr = np.asarray(final["pol_thr"][:B], np.int64)
+        sim.pol_ema = np.asarray(final["pol_ema"][:B], np.float64)
+        sim.pol_beta = np.asarray(final["pol_beta"][:B], np.int64)
     return sim._results(errs, upds)

@@ -100,7 +100,8 @@ def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
 
 
 def psp_tick(state, rand, params, t, leave_n, join_n, *,
-             k_max: int, has_churn: bool, masked: bool, impl: str = "auto"):
+             k_max: int, has_churn: bool, masked: bool,
+             adaptive: bool = False, impl: str = "auto"):
     """One fused PSP sweep-grid tick — control plane *and* data plane
     (see :mod:`repro.kernels.psp_tick`).
 
@@ -115,6 +116,7 @@ def psp_tick(state, rand, params, t, leave_n, join_n, *,
     if use_kernel or interp:
         return psp_tick_tpu(state, rand, params, t, leave_n, join_n,
                             k_max=k_max, has_churn=has_churn, masked=masked,
-                            interpret=interp)
+                            adaptive=adaptive, interpret=interp)
     return psp_tick_ref(state, rand, params, t, leave_n, join_n,
-                        k_max=k_max, has_churn=has_churn, masked=masked)
+                        k_max=k_max, has_churn=has_churn, masked=masked,
+                        adaptive=adaptive)

@@ -81,7 +81,8 @@ from jax.experimental import pallas as pl
 
 from repro.core import barrier_kernel
 
-__all__ = ["psp_tick_ref", "psp_tick_tpu", "STATE_KEYS"]
+__all__ = ["psp_tick_ref", "psp_tick_tpu", "STATE_KEYS",
+           "POLICY_STATE_KEYS"]
 
 
 #: data-plane row-block width: the SGD push always runs as GEMMs of
@@ -137,6 +138,15 @@ def _data_plane_block(X: jax.Array, diff: jax.Array, fin: jax.Array,
 STATE_KEYS = ("steps", "alive", "computing", "event_time", "ready",
               "blocked", "pend_leave", "pend_join", "w", "pulled")
 
+#: adaptive barrier-policy state, carried *only* when the batch contains
+#: adaptive rows (``adaptive=True``) — static batches pass zero-width
+#: policy state (the keys are simply absent) and compile the exact
+#: pre-policy tick, so golden traces and kernel paths are unchanged.
+#: ``pol_thr`` i32[B] is DSSP's dynamic staleness threshold, ``pol_ema``
+#: f32[B, P] Elastic-BSP's per-worker duration EMA, ``pol_beta`` i32[B]
+#: the β-annealing rows' current sample size.
+POLICY_STATE_KEYS = ("pol_thr", "pol_ema", "pol_beta")
+
 _I32_MAX = np.iinfo(np.int32).max
 _I32_MIN = np.iinfo(np.int32).min
 
@@ -148,11 +158,13 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
                  params: Dict[str, jax.Array], t: jax.Array,
                  leave_n: jax.Array, join_n: jax.Array, *,
                  k_max: int, has_churn: bool, masked: bool,
+                 adaptive: bool = False,
                  ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
     """One full tick, batched over B scenario rows (pure jnp).
 
     Args:
-      state: the tick-state pytree (:data:`STATE_KEYS`).
+      state: the tick-state pytree (:data:`STATE_KEYS`; plus
+        :data:`POLICY_STATE_KEYS` when ``adaptive``).
       rand: pre-drawn noise — ``dur`` f32[B, P] step-duration jitter;
         ``X`` f32[P, m, d] / ``mb`` f32[P, m] shared minibatch blob; plus
         ``scores`` (f32[B, P, P] when ``masked`` else f32[P, P]) or
@@ -162,12 +174,18 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
         ``dist_hops`` i32[B]; ``is_asp``/``full_view``/``sampled`` bool[B];
         ``compute_time`` f32[B, P]; ``valid_slot`` bool[B, P] (ragged
         padding mask); ``horizon``/``lr``/``noise_std`` f32[B];
-        ``w_true`` f32[B, d]; scalars ``eps``/``poll``.
+        ``w_true`` f32[B, d]; scalars ``eps``/``poll``.  When
+        ``adaptive``: ``is_dssp``/``is_ebsp``/``is_anneal`` bool[B] row
+        tags plus ``pol_lo``/``beta_lo`` i32[B] lower bounds and
+        ``ebsp_range``/``ebsp_alpha`` f32[B] Elastic-BSP knobs (upper
+        bounds reuse ``staleness``/``beta_clip``).
       t: f32[] — this tick's grid time; rows with ``horizon < t`` freeze.
       leave_n / join_n: i32[B] — churn events due this tick.
       k_max: static max sample-slot count over the batch.
       has_churn: static — whether churn state/noise is present.
       masked: static — per-row alive-masked sampling (churn or ragged).
+      adaptive: static — whether the batch carries adaptive-policy rows
+        (and therefore the :data:`POLICY_STATE_KEYS` state/param arrays).
 
     Returns:
       (new_state, out) where ``out`` holds ``fin``/``start`` bool[B, P]
@@ -226,10 +244,24 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
     #    unified barrier model (single source with the SPMD trainer)
     cand = ~computing & alive & (event_time <= t + eps) & active[:, None]
     stal = jnp.broadcast_to(params["staleness"][:, None], (B, P))
+    beta_eff = params["beta_clip"][:, None]
+    if adaptive:
+        # adaptive rows swap their *effective* staleness/β in before the
+        # (unchanged) predicates run: DSSP rows read the carried dynamic
+        # threshold, Elastic-BSP rows their per-worker EMA step credit,
+        # β-annealing rows the carried sample size — static rows keep the
+        # per-row constants bit-for-bit
+        slack = barrier_kernel.elastic_slack(
+            state["pol_ema"], params["ebsp_range"][:, None], alive)
+        stal = jnp.where(params["is_dssp"][:, None],
+                         state["pol_thr"][:, None],
+                         jnp.where(params["is_ebsp"][:, None], slack, stal))
+        beta_eff = jnp.where(params["is_anneal"], state["pol_beta"],
+                             params["beta_clip"])[:, None]
     pass_fv = barrier_kernel.full_view_allowed(steps, stal, alive)
     if k_max > 0:
         pass_sm, n_sampled = barrier_kernel.sampled_allowed(
-            steps, stal, k_max, beta=params["beta_clip"][:, None],
+            steps, stal, k_max, beta=beta_eff,
             scores=rand.get("scores"), u=rand.get("u1"),
             alive=alive if masked else None)
     else:
@@ -254,6 +286,27 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
     sm_fail = fail & params["sampled"][:, None]
     ready = jnp.where(sm_fail, ready + poll, ready)
     event_time = jnp.where(sm_fail, ready, event_time)
+
+    # 3b. adaptive-policy state updates: decisions above used the OLD
+    #     state; the new state is a pure function of this tick's
+    #     observations (post-finish step spread, starters' drawn
+    #     durations) — frozen rows (past horizon) keep their state
+    if adaptive:
+        gap = barrier_kernel.progress_gap(steps, alive)
+        pol_thr = jnp.where(
+            params["is_dssp"] & active,
+            jnp.clip(gap, params["pol_lo"], params["staleness"]),
+            state["pol_thr"]).astype(jnp.int32)
+        pol_beta = jnp.where(
+            params["is_anneal"] & active,
+            jnp.clip(params["beta_lo"] + gap - params["staleness"],
+                     params["beta_lo"], params["beta_clip"]),
+            state["pol_beta"]).astype(jnp.int32)
+        al = params["ebsp_alpha"][:, None]
+        pol_ema = jnp.where(
+            params["is_ebsp"][:, None] & start,
+            (1.0 - al) * state["pol_ema"] + al * dur,
+            state["pol_ema"])
 
     # 4. data plane: masked SGD push of every finisher, then the starters
     #    pull the updated server model into their view.  The fin mask
@@ -286,6 +339,9 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
                  "event_time": event_time, "ready": ready,
                  "blocked": blocked, "pend_leave": pend_leave,
                  "pend_join": pend_join, "w": w, "pulled": pulled}
+    if adaptive:
+        new_state.update(pol_thr=pol_thr, pol_ema=pol_ema,
+                         pol_beta=pol_beta)
     out = {"fin": fin, "start": start,
            "n_fin": jnp.sum(fin, axis=1).astype(jnp.int32), "ctrl": ctrl}
     return new_state, out
@@ -308,7 +364,8 @@ def _first_argmax_rows(scores: jax.Array, mask: jax.Array,
 
 
 def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
-                 use_u1: bool, W: int, P: int, d: int, m: int):
+                 use_u1: bool, adaptive: bool, W: int, P: int, d: int,
+                 m: int):
     """Kernel body: one W-row block's full tick in VMEM."""
     it = iter(refs)
     steps_ref, alive_ref, computing_ref, event_ref, ready_ref, blocked_ref,\
@@ -323,11 +380,19 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
     ct_ref, vs_ref = next(it), next(it)
     stal_ref, beta_ref, asp_ref, fv_ref, sm_ref, dh_ref = \
         (next(it) for _ in range(6))
+    if adaptive:
+        # adaptive-policy operands (zero-width for static batches: absent)
+        thr_ref, pbeta_ref, ema_ref = (next(it) for _ in range(3))
+        dssp_ref, ebsp_ref, ann_ref, lo_ref, blo_ref = \
+            (next(it) for _ in range(5))
+        ebr_ref, eba_ref = next(it), next(it)
     wt_ref, lr_ref, ns_ref, hz_ref = (next(it) for _ in range(4))
     t_ref, eps_ref, poll_ref = next(it), next(it), next(it)
     (o_steps, o_alive, o_comp, o_event, o_ready, o_block, o_pl, o_pj,
      o_w, o_pulled, o_fin, o_start, o_nfin, o_ctrl) = \
         (next(it) for _ in range(14))
+    if adaptive:
+        o_thr, o_ema, o_beta = (next(it) for _ in range(3))
 
     i32 = jnp.int32
     steps = steps_ref[...]                      # (W, P) i32
@@ -383,9 +448,23 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
 
     # 2. barrier decisions
     cand = ~computing & alive & (event_time <= t + eps) & active
+    stal_eff, beta_eff = stal, beta
+    if adaptive:
+        # effective staleness/β per row, via the same shared helper (and
+        # the same op order) as psp_tick_ref — ref ↔ kernel stay
+        # bit-identical for adaptive rows too; static rows read the
+        # constant columns unchanged
+        is_dssp = dssp_ref[...] != 0            # (W, 1)
+        is_ebsp = ebsp_ref[...] != 0
+        is_ann = ann_ref[...] != 0
+        slack = barrier_kernel.elastic_slack(ema_ref[...], ebr_ref[...],
+                                             alive)
+        stal_eff = jnp.where(is_dssp, thr_ref[...],
+                             jnp.where(is_ebsp, slack, stal))   # (W, P)
+        beta_eff = jnp.where(is_ann, pbeta_ref[...], beta)      # (W, 1)
     min_alive = jnp.min(jnp.where(alive, steps, _I32_MAX), axis=1,
                         keepdims=True)
-    pass_fv = steps - min_alive <= stal
+    pass_fv = steps - min_alive <= stal_eff
     if k_max == 0:
         pass_sm = jnp.ones((W, P), dtype=bool)
         n_sampled = jnp.zeros((W, P), dtype=i32)
@@ -401,11 +480,11 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
         step_peer = jax.lax.dot_general(
             steps.astype(jnp.float32), oh,
             (((1,), (1,)), ((), ()))).astype(i32)              # (W, P)
-        lag_bad = steps - step_peer > stal
-        ok = (P - 1 >= 1) & (beta >= 1)                        # (W, 1)
+        lag_bad = steps - step_peer > stal_eff
+        ok = (P - 1 >= 1) & (beta_eff >= 1)                    # (W, 1)
         pass_sm = ~lag_bad | ~ok
         n_sampled = jnp.broadcast_to(
-            jnp.minimum(beta, P - 1), (W, P)).astype(i32)
+            jnp.minimum(beta_eff, P - 1), (W, P)).astype(i32)
     else:
         # rank form of the top-k β-sample: the lowest-(score, index) bad
         # peer is inside the sample iff fewer than β eligible peers
@@ -419,18 +498,18 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
         if masked:
             eligible = eligible & alive[:, None, :]            # (W, P, P)
         lag = steps[:, :, None] - steps[:, None, :]
-        bad = eligible & (lag > stal[:, :, None])              # (W, P, P)
+        bad = eligible & (lag > stal_eff[:, :, None])          # (W, P, P)
         any_bad = jnp.any(bad, axis=2)
         mbs = jnp.min(jnp.where(bad, sc, 3.0), axis=2, keepdims=True)
         mbi = jnp.min(jnp.where(bad & (sc == mbs), jj[None], P), axis=2,
                       keepdims=True)
         before = eligible & ((sc < mbs) | ((sc == mbs) & (jj[None] < mbi)))
         cnt = jnp.sum(before.astype(i32), axis=2)              # (W, P)
-        fail_sm = any_bad & (cnt < beta)
+        fail_sm = any_bad & (cnt < beta_eff)
         pass_sm = ~fail_sm
         n_elig = jnp.sum(
             jnp.broadcast_to(eligible, (W, P, P)).astype(i32), axis=2)
-        n_sampled = jnp.minimum(beta, n_elig)
+        n_sampled = jnp.minimum(beta_eff, n_elig)
     is_asp, full_view = asp_ref[...] != 0, fv_ref[...] != 0    # (W, 1)
     passed = jnp.where(is_asp, True,
                        jnp.where(full_view, pass_fv, pass_sm))
@@ -450,6 +529,29 @@ def _tick_kernel(*refs, k_max: int, has_churn: bool, masked: bool,
     sm_fail = fail & (sm_ref[...] != 0)
     ready = jnp.where(sm_fail, ready + poll, ready)
     event_time = jnp.where(sm_fail, ready, event_time)
+
+    # 3b. adaptive-policy state updates — mirrors psp_tick_ref block 3b
+    #     value-for-value (keepdims reductions instead of progress_gap's
+    #     flat ones; same inputs, same clip/EMA arithmetic)
+    if adaptive:
+        mxs = jnp.max(jnp.where(alive, steps, _I32_MIN), axis=1,
+                      keepdims=True)
+        mns = jnp.min(jnp.where(alive, steps, _I32_MAX), axis=1,
+                      keepdims=True)
+        gap = jnp.where(jnp.any(alive, axis=1, keepdims=True),
+                        mxs - mns, 0)                          # (W, 1)
+        o_thr[...] = jnp.where(
+            is_dssp & active,
+            jnp.clip(gap, lo_ref[...], stal),
+            thr_ref[...]).astype(i32)
+        o_beta[...] = jnp.where(
+            is_ann & active,
+            jnp.clip(blo_ref[...] + gap - stal, blo_ref[...], beta),
+            pbeta_ref[...]).astype(i32)
+        al = eba_ref[...]                                      # (W, 1)
+        o_ema[...] = jnp.where(is_ebsp & start,
+                               (1.0 - al) * ema_ref[...] + al * dur,
+                               ema_ref[...])
 
     # 4. data plane: the block's SGD push + model-view pull — literally
     #    _data_plane_block, the same code the jnp reference runs, so the
@@ -503,7 +605,7 @@ def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
                  params: Dict[str, jax.Array], t: jax.Array,
                  leave_n: jax.Array, join_n: jax.Array, *,
                  k_max: int, has_churn: bool, masked: bool,
-                 interpret: bool = False,
+                 adaptive: bool = False, interpret: bool = False,
                  ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
     """Fused Pallas tick: same contract as :func:`psp_tick_ref`.
 
@@ -591,6 +693,20 @@ def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
     push(col(params["full_view"]))
     push(col(params["sampled"]))
     push(col(params["dist_hops"]))
+    if adaptive:
+        # policy-state/knob operands — pushed like the churn refs:
+        # static batches never materialise them, so their kernel is the
+        # exact pre-policy trace
+        push(col(state["pol_thr"]))
+        push(col(state["pol_beta"]))
+        push(row(state["pol_ema"], f32))
+        push(col(params["is_dssp"]))
+        push(col(params["is_ebsp"]))
+        push(col(params["is_anneal"]))
+        push(col(params["pol_lo"]))
+        push(col(params["beta_lo"]))
+        push(col(params["ebsp_range"], f32))
+        push(col(params["ebsp_alpha"], f32))
     inputs.append(pad(jnp.asarray(params["w_true"], f32)))
     specs.append(pl.BlockSpec((W, d), lambda b: (b, 0)))
     push(col(params["lr"], f32))
@@ -614,11 +730,16 @@ def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
                     pl.BlockSpec((W, P, d), lambda b: (b, 0, 0))]
                  + [pl.BlockSpec((W, P), lambda b: (b, 0))] * 2
                  + [pl.BlockSpec((W, 1), lambda b: (b, 0))] * 2)
+    if adaptive:
+        out_shape += [cp(), rp(f32), cp()]      # pol_thr, pol_ema, pol_beta
+        out_specs += [pl.BlockSpec((W, 1), lambda b: (b, 0)),
+                      pl.BlockSpec((W, P), lambda b: (b, 0)),
+                      pl.BlockSpec((W, 1), lambda b: (b, 0))]
 
     outs = pl.pallas_call(
         functools.partial(_tick_kernel, k_max=k_max, has_churn=has_churn,
-                          masked=masked, use_u1=use_u1, W=W, P=P, d=d,
-                          m=m),
+                          masked=masked, use_u1=use_u1, adaptive=adaptive,
+                          W=W, P=P, d=d, m=m),
         grid=(Bp // W,),
         in_specs=specs,
         out_specs=out_specs,
@@ -626,13 +747,18 @@ def psp_tick_tpu(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
         interpret=interpret,
     )(*inputs)
 
+    outs = [o[:B] for o in outs]
     (steps, alive, computing, event_time, ready, blocked, pend_l, pend_j,
-     w, pulled, fin, start, n_fin, ctrl) = (o[:B] for o in outs)
+     w, pulled, fin, start, n_fin, ctrl) = outs[:14]
     new_state = {"steps": steps, "alive": alive != 0,
                  "computing": computing != 0, "event_time": event_time,
                  "ready": ready, "blocked": blocked != 0,
                  "pend_leave": pend_l[:, 0], "pend_join": pend_j[:, 0],
                  "w": w, "pulled": pulled}
+    if adaptive:
+        pol_thr, pol_ema, pol_beta = outs[14:]
+        new_state.update(pol_thr=pol_thr[:, 0], pol_ema=pol_ema,
+                         pol_beta=pol_beta[:, 0])
     out = {"fin": fin != 0, "start": start != 0, "n_fin": n_fin[:, 0],
            "ctrl": ctrl[:, 0]}
     return new_state, out

@@ -116,3 +116,135 @@ def test_barrier_kernel_beta_zero_degenerates_to_asp():
     one = bk.BarrierKernel(barrier="pbsp", staleness=0, beta=4)
     assert bool(jnp.all(one.allowed(jax.random.PRNGKey(0),
                                     jnp.asarray([3], jnp.int32))))
+
+
+# --------------------------------------------------------------------------- #
+# BarrierPolicy: the stateful decision layer over the kernel
+# --------------------------------------------------------------------------- #
+ADAPTIVE = ("dssp", "ebsp", "apbsp", "apssp")
+
+
+@pytest.mark.parametrize("barrier", FIVE)
+def test_static_policy_decide_is_kernel_allowed(barrier):
+    """Static names wrap the kernel: decide ≡ allowed, state untouched."""
+    pol = bk.make_policy(barrier, staleness=2, beta=2)
+    assert not pol.stateful
+    assert pol.init(8) == {}
+    key, steps = jax.random.PRNGKey(3), _steps(3)
+    carried = {"denom": jnp.float32(8.0)}        # foreign keys ride along
+    allowed, new_state = pol.decide(carried, key, steps,
+                                    jnp.ones(8, jnp.float32))
+    want = pol.kernel.allowed(key, steps)
+    np.testing.assert_array_equal(np.asarray(allowed), np.asarray(want))
+    assert new_state is carried
+
+
+@pytest.mark.parametrize("name", ADAPTIVE)
+def test_adaptive_policy_state_roundtrip(name):
+    """init → decide chains keep the state pytree's structure/dtypes and
+    pass foreign keys (the trainer's ``denom``) through untouched."""
+    pol = bk.make_policy(name, staleness=3, beta=3, staleness_lo=1,
+                         beta_lo=1)
+    assert pol.stateful
+    state = dict(pol.init(8), denom=jnp.float32(5.0))
+    ref_struct = jax.tree.map(lambda x: (jnp.shape(x), jnp.asarray(x).dtype),
+                              state)
+    key = jax.random.PRNGKey(0)
+    for i in range(4):
+        allowed, state = pol.decide(state, jax.random.fold_in(key, i),
+                                    _steps(i, hi=5),
+                                    jnp.ones(8, jnp.float32) * (i + 1))
+        assert allowed.shape == (8,) and allowed.dtype == bool
+        got = jax.tree.map(lambda x: (jnp.shape(x), jnp.asarray(x).dtype),
+                           state)
+        assert got == ref_struct
+        assert float(state["denom"]) == 5.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dssp_pinned_range_reduces_to_ssp(seed):
+    """lo == hi pins the threshold: DSSP ≡ SSP bit-for-bit."""
+    dssp = bk.make_policy("dssp", staleness=2, staleness_lo=2)
+    ssp = bk.make_policy("ssp", staleness=2)
+    state = dssp.init(8)
+    key = jax.random.PRNGKey(seed)
+    for i in range(5):
+        steps = _steps(seed * 10 + i, hi=5)
+        a, state = dssp.decide(state, key, steps)
+        b, _ = ssp.decide({}, key, steps)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_ebsp_zero_advance_reduces_to_bsp(seed):
+    """max_advance == 0 schedules a barrier every step: ≡ BSP."""
+    ebsp = bk.make_policy("ebsp", max_advance=0)
+    bsp = bk.make_policy("bsp")
+    state = ebsp.init(8)
+    key = jax.random.PRNGKey(seed)
+    for i in range(5):
+        steps = _steps(seed * 10 + i, hi=3)
+        dur = jnp.abs(jnp.sin(jnp.arange(8.0) + i))
+        a, state = ebsp.decide(state, key, steps, dur)
+        b, _ = bsp.decide({}, key, steps)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ["apbsp", "apssp"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_anneal_pinned_beta_reduces_to_static_parent(name, seed):
+    """β_min == β_max freezes the sample size: ≡ pBSP/pSSP (same key
+    stream — the annealed sample routes through the same primitive)."""
+    s = 2 if name == "apssp" else 0
+    anneal = bk.make_policy(name, staleness=s, beta=3, beta_lo=3)
+    parent = bk.make_policy(name[1:], staleness=s, beta=3)
+    state = anneal.init(8)
+    for i in range(5):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        steps = _steps(seed * 10 + i, hi=6)
+        a, state = anneal.decide(state, key, steps)
+        b, _ = parent.decide({}, key, steps)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dssp_threshold_tracks_observed_gap():
+    """The carried threshold is last tick's alive spread, clipped."""
+    pol = bk.make_policy("dssp", staleness=4, staleness_lo=1)
+    state = pol.init(4)
+    assert int(state["thr"]) == 4
+    steps = jnp.asarray([0, 2, 2, 9], jnp.int32)
+    alive = jnp.asarray([True, True, True, False])
+    _, state = pol.decide(state, jax.random.PRNGKey(0), steps, alive=alive)
+    assert int(state["thr"]) == 2          # departed outlier masked out
+    _, state = pol.decide(state, jax.random.PRNGKey(0),
+                          jnp.zeros(4, jnp.int32))
+    assert int(state["thr"]) == 1          # clipped up to lo
+
+
+def test_ebsp_slack_rewards_fast_workers():
+    """Faster-than-slowest workers earn slack; the slowest earns none."""
+    ema = jnp.asarray([1.0, 0.5, 0.25, 1.0], jnp.float32)
+    slack = bk.elastic_slack(ema, 4.0, None)
+    assert slack.tolist() == [0, 2, 3, 0]
+    # a departed slowest worker stops defining the denominator
+    alive = jnp.asarray([False, True, True, True])
+    slack = bk.elastic_slack(ema, 4.0, alive)
+    assert slack.tolist()[1:] == [2, 3, 0]
+
+
+def test_anneal_beta_rises_with_spread_and_clips():
+    """β grows one per step of spread beyond s, clipped into [lo, hi]."""
+    pol = bk.make_policy("apssp", staleness=2, beta=4, beta_lo=1)
+    state = pol.init(8)
+    assert int(state["beta"]) == 1
+    _, state = pol.decide(state, jax.random.PRNGKey(0),
+                          jnp.asarray([0, 0, 0, 0, 0, 0, 0, 8], jnp.int32))
+    assert int(state["beta"]) == 4         # 1 + 8 − 2 = 7 → clip hi (β=4)
+    _, state = pol.decide(state, jax.random.PRNGKey(0),
+                          jnp.zeros(8, jnp.int32))
+    assert int(state["beta"]) == 1         # gap 0 → clip lo
+
+
+def test_make_policy_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown barrier policy"):
+        bk.make_policy("gossip")

@@ -1,0 +1,112 @@
+"""Unit tests for the benchmark-regression gate (tools/check_bench.py).
+
+The gate compares ``speedup_vs_event`` per engine row between a fresh
+sweep run and the committed baseline.  The asymmetry under test: a row
+missing from the *fresh* run is a failure (a silently dropped benchmark
+must not pass), while a row missing from the *baseline* only is skipped
+— it was added by a PR newer than the committed ``BENCH_sweep.json`` and
+starts being gated once the baseline is regenerated.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_bench  # noqa: E402
+
+
+def _row(speedup, **extra):
+    return {"speedup_vs_event": speedup, "seconds": 1.0, **extra}
+
+
+BASELINE = {
+    "event": {"seconds": 10.0},
+    "numpy": _row(8.0),
+    "jax": _row(30.0, n_devices=1),
+}
+GATE = [("numpy", 0.25), ("jax", 0.25)]
+
+
+class TestCheck:
+    def test_within_tolerance_passes(self):
+        fresh = {"numpy": _row(7.0), "jax": _row(28.0, n_devices=1)}
+        assert check_bench.check(BASELINE, fresh, GATE) == []
+
+    def test_regression_fails(self):
+        fresh = {"numpy": _row(2.0), "jax": _row(28.0, n_devices=1)}
+        failures = check_bench.check(BASELINE, fresh, GATE)
+        assert len(failures) == 1
+        assert "numpy" in failures[0] and "FAIL" in failures[0]
+
+    def test_row_missing_from_fresh_fails(self):
+        # a gated engine silently dropped from the fresh run = failure
+        fresh = {"numpy": _row(8.0)}
+        failures = check_bench.check(BASELINE, fresh, GATE)
+        assert len(failures) == 1
+        assert "jax" in failures[0] and "fresh" in failures[0]
+
+    def test_row_missing_from_baseline_skips(self, capsys):
+        # the fresh run carries a row the committed baseline predates
+        # (e.g. this PR's adaptive-policy benchmark additions): the gate
+        # must note-and-skip it, not fail
+        fresh = {"numpy": _row(8.0), "jax": _row(30.0, n_devices=1),
+                 "pallas": _row(12.0)}
+        gate = GATE + [("pallas", 0.45)]
+        assert check_bench.check(BASELINE, fresh, gate) == []
+        out = capsys.readouterr().out
+        assert "skip pallas" in out
+        assert "baseline" in out
+
+    def test_missing_metric_fails(self):
+        fresh = {"numpy": {"seconds": 1.0}, "jax": _row(30.0, n_devices=1)}
+        failures = check_bench.check(BASELINE, fresh, GATE)
+        assert len(failures) == 1
+        assert "numpy" in failures[0]
+
+    def test_mesh_mismatch_warns_but_does_not_fail(self, capsys):
+        fresh = {"numpy": _row(8.0), "jax": _row(30.0, n_devices=8)}
+        assert check_bench.check(BASELINE, fresh, GATE) == []
+        assert "mesh size differs" in capsys.readouterr().out
+
+
+class TestParseEngines:
+    def test_bare_names_take_defaults(self):
+        got = check_bench.parse_engines("numpy,jax,pallas", 0.25)
+        assert got == [("numpy", 0.25), ("jax", 0.25), ("pallas", 0.45)]
+
+    def test_explicit_tolerance_wins(self):
+        got = check_bench.parse_engines("numpy:0.1,pallas:0.9", 0.25)
+        assert got == [("numpy", 0.1), ("pallas", 0.9)]
+
+
+class TestMain:
+    def _dump(self, tmp_path, name, engines):
+        path = tmp_path / name
+        path.write_text(json.dumps({"engines": engines}))
+        return str(path)
+
+    def test_cli_new_row_in_fresh_passes(self, tmp_path):
+        base = self._dump(tmp_path, "base.json",
+                          {"numpy": _row(8.0), "jax": _row(30.0)})
+        fresh = self._dump(tmp_path, "fresh.json",
+                           {"numpy": _row(8.0), "jax": _row(30.0),
+                            "pallas": _row(12.0)})
+        assert check_bench.main(["--baseline", base, "--fresh", fresh]) == 0
+
+    def test_cli_regression_exits_nonzero(self, tmp_path):
+        base = self._dump(tmp_path, "base.json", {"numpy": _row(8.0)})
+        fresh = self._dump(tmp_path, "fresh.json", {"numpy": _row(1.0)})
+        assert check_bench.main(["--baseline", base, "--fresh", fresh,
+                                 "--engines", "numpy"]) == 1
+
+    def test_cli_rejects_non_sweep_json(self, tmp_path):
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"not_engines": {}}))
+        with pytest.raises(ValueError):
+            check_bench.main(["--baseline", str(bad),
+                              "--fresh", str(bad)])

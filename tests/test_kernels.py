@@ -140,11 +140,14 @@ def test_xla_flash_custom_vjp_grads():
 # --------------------------------------------------------------------------- #
 # psp_tick: fused sweep tick (control + data plane) vs its jnp reference
 # --------------------------------------------------------------------------- #
-def _tick_problem(seed, B, P, churn, ragged, k_max, d=5, m=4):
+def _tick_problem(seed, B, P, churn, ragged, k_max, d=5, m=4,
+                  adaptive=False):
     """Random mid-flight tick state + params + one tick's noise.
 
     Row 0 gets a short horizon so the chained-tick tests cross the
     row-freeze gate (the merged-duration / dead-padding path) mid-run.
+    With ``adaptive`` the batch mixes static rows with DSSP / Elastic-BSP
+    / β-annealing rows carrying mid-flight policy state.
     """
     rng = np.random.default_rng(seed)
     n_true = np.full(B, P)
@@ -199,18 +202,44 @@ def _tick_problem(seed, B, P, churn, ragged, k_max, d=5, m=4):
         rand["join"] = rng.random((B, P)).astype(np.float32)
     leave_n = rng.integers(0, 2, B).astype(np.int32) * churn
     join_n = rng.integers(0, 2, B).astype(np.int32) * churn
+    if adaptive:
+        # draws appended last so static problems stay bit-identical
+        akind = rng.integers(0, 4, size=B)   # 0=keep 1=dssp 2=ebsp 3=anneal
+        is_dssp, is_ebsp = akind == 1, akind == 2
+        is_ann = (akind == 3) & (k_max > 0)
+        adapt = is_dssp | is_ebsp | is_ann
+        params["is_dssp"], params["is_ebsp"] = is_dssp, is_ebsp
+        params["is_anneal"] = is_ann
+        params["full_view"] = np.where(adapt, is_dssp | is_ebsp,
+                                       params["full_view"])
+        params["sampled"] = np.where(adapt, is_ann, params["sampled"])
+        params["is_asp"] = np.where(adapt, False, params["is_asp"])
+        params["pol_lo"] = rng.integers(
+            0, params["staleness"] + 1).astype(np.int32)
+        params["beta_lo"] = rng.integers(
+            0, params["beta_clip"] + 1).astype(np.int32)
+        params["ebsp_range"] = (rng.random(B) * 4).astype(np.float32)
+        params["ebsp_alpha"] = np.full(B, 0.5, np.float32)
+        state["pol_thr"] = rng.integers(
+            0, params["staleness"] + 1).astype(np.int32)
+        state["pol_ema"] = (rng.random((B, P)) * 0.3).astype(np.float32)
+        state["pol_beta"] = np.where(
+            is_ann, params["beta_lo"], max(k_max, 0)).astype(np.int32)
     return state, rand, params, leave_n, join_n, masked
 
 
-@pytest.mark.parametrize("churn,ragged,k_max", [
-    (False, False, 0),
-    (False, False, 1),        # β = 1 fast path
-    (False, False, 3),        # shared-score rank path
-    (True, False, 2),         # churn: per-row masked scores
-    (False, True, 2),         # ragged padding: dead-slot masking
-    (True, True, 2),          # churn × ragged
+@pytest.mark.parametrize("churn,ragged,k_max,adaptive", [
+    (False, False, 0, False),
+    (False, False, 1, False),        # β = 1 fast path
+    (False, False, 3, False),        # shared-score rank path
+    (True, False, 2, False),         # churn: per-row masked scores
+    (False, True, 2, False),         # ragged padding: dead-slot masking
+    (True, True, 2, False),          # churn × ragged
+    (False, False, 0, True),         # adaptive full-view (dssp/ebsp) rows
+    (False, False, 3, True),         # adaptive incl. β-annealing rows
+    (True, True, 2, True),           # adaptive × churn × ragged
 ])
-def test_psp_tick_kernel_matches_ref(churn, ragged, k_max):
+def test_psp_tick_kernel_matches_ref(churn, ragged, k_max, adaptive):
     """Interpret-mode Pallas tick ≡ jnp reference, bit for bit, tick for
     tick — including the data-plane state (``w``/``pulled``) carried
     across several chained ticks, and the row-freeze (horizon) gate.
@@ -224,10 +253,10 @@ def test_psp_tick_kernel_matches_ref(churn, ragged, k_max):
     from repro.kernels import ops as kops
     B, P = 3, 8
     state, rand, params, leave_n, join_n, masked = _tick_problem(
-        0, B, P, churn, ragged, k_max)
+        0, B, P, churn, ragged, k_max, adaptive=adaptive)
     tick = {impl: jax.jit(functools.partial(
         kops.psp_tick, k_max=k_max, has_churn=churn, masked=masked,
-        impl=impl)) for impl in ("ref", "interpret")}
+        adaptive=adaptive, impl=impl)) for impl in ("ref", "interpret")}
     s_ref, s_ker = dict(state), dict(state)
     for i in range(5):
         t = np.float32(0.4 * (i + 1))
@@ -249,22 +278,24 @@ def test_psp_tick_kernel_matches_ref(churn, ragged, k_max):
                                           err_msg=f"tick {i} out {k}")
 
 
-def test_psp_tick_frozen_row_is_inert():
-    """A row past its horizon must not move at all — state bit-frozen,
-    zero finishes, zero control traffic (the dead-padding-tick
-    guarantee the chunk scheduler relies on)."""
+@pytest.mark.parametrize("adaptive", (False, True))
+def test_psp_tick_frozen_row_is_inert(adaptive):
+    """A row past its horizon must not move at all — state bit-frozen
+    (including adaptive policy state), zero finishes, zero control
+    traffic (the dead-padding-tick guarantee the chunk scheduler
+    relies on)."""
     import functools
     import jax
     from repro.kernels import ops as kops
     B, P = 3, 8
     state, rand, params, leave_n, join_n, masked = _tick_problem(
-        1, B, P, True, False, 2)
+        1, B, P, True, False, 2, adaptive=adaptive)
     params = dict(params)
     params["horizon"] = np.zeros(B, np.float32)      # all rows frozen
     leave_n = leave_n + 1                            # pending churn too
     tick = jax.jit(functools.partial(kops.psp_tick, k_max=2,
                                      has_churn=True, masked=masked,
-                                     impl="ref"))
+                                     adaptive=adaptive, impl="ref"))
     new_state, out = tick(state, rand, params, np.float32(1.0),
                           leave_n, join_n)
     for k in state:

@@ -193,6 +193,106 @@ class TestElasticChurn:
         assert int(st.leave_cursor) + int(st.join_cursor) > 0
 
 
+class TestAdaptivePolicies:
+    """Adaptive barrier policies threaded through the trainer: the policy
+    state rides in ``PSPState.policy``, pinned ranges reduce bit-for-bit
+    to the static parents, and ``contribution="mean-alive"`` co-locates
+    its churn-aware denominator EMA in the same pytree."""
+
+    @staticmethod
+    def _traj(cfg, ticks=60, dim=8):
+        w_true, it = elastic_drive(cfg, dim, ticks)
+        out = []
+        for st, m in it:
+            out.append((np.asarray(st.server_params["w"]),
+                        np.asarray(st.step), float(st.now),
+                        np.asarray(st.key)))
+        return out, st
+
+    BASE = dict(n_workers=6, straggler_frac=0.3)
+    PAIRS = [
+        (dict(barrier="dssp", staleness=3, staleness_lo=3),
+         dict(barrier="ssp", staleness=3)),
+        (dict(barrier="ebsp", max_advance=0), dict(barrier="bsp")),
+        (dict(barrier="apssp", staleness=3, sample_size=3,
+              sample_size_lo=3),
+         dict(barrier="pssp", staleness=3, sample_size=3)),
+    ]
+
+    @pytest.mark.parametrize("i", range(3))
+    def test_pinned_range_reduces_to_static_parent(self, i):
+        akw, skw = self.PAIRS[i]
+        ta, _ = self._traj(PSPConfig(**akw, **self.BASE))
+        tb, _ = self._traj(PSPConfig(**skw, **self.BASE))
+        for (wa, sa, na, ka), (wb, sb, nb, kb) in zip(ta, tb):
+            np.testing.assert_array_equal(wa, wb)
+            np.testing.assert_array_equal(sa, sb)
+            assert na == nb
+            np.testing.assert_array_equal(ka, kb)
+
+    @pytest.mark.parametrize("barrier", ("dssp", "ebsp", "apbsp", "apssp"))
+    def test_adaptive_policies_converge(self, barrier):
+        cfg = PSPConfig(barrier=barrier, staleness=3, sample_size=2,
+                        staleness_lo=0, sample_size_lo=1, max_advance=3,
+                        **self.BASE)
+        _, st = self._traj(cfg, ticks=200, dim=8)
+        w_true, _, _ = linear_psp_task(8)
+        err = float(jnp.linalg.norm(st.server_params["w"] - w_true)
+                    / jnp.linalg.norm(w_true))
+        assert err < 0.3, (barrier, err)
+        assert st.policy                      # stateful policy carried
+        assert int(st.total_pushes) > 0
+
+    def test_policy_state_evolves(self):
+        cfg = PSPConfig(barrier="ebsp", max_advance=3, **self.BASE)
+        _, st = self._traj(cfg, ticks=50)
+        ema = np.asarray(st.policy["ema"])
+        assert ema.shape == (6,) and np.all(ema > 0)
+        # stragglers' duration EMA must exceed the fast workers'
+        slow = np.asarray(st.slow)
+        assert ema[slow].min() > ema[~slow].max()
+
+    def test_static_policy_state_is_empty(self):
+        cfg = PSPConfig(barrier="pssp", **self.BASE)
+        _, st = self._traj(cfg, ticks=5)
+        assert st.policy == {}
+
+    def test_mean_alive_contribution_tracks_population(self):
+        cfg = PSPConfig(barrier="pssp", contribution="mean-alive",
+                        churn=ChurnConfig(leave_rate=2.0, join_rate=0.2,
+                                          horizon=30.0, seed=3),
+                        **self.BASE)
+        _, st = self._traj(cfg, ticks=150)
+        denom = float(st.policy["denom"])
+        n_alive = int(np.asarray(st.alive).sum())
+        assert 1.0 <= denom <= 6.0
+        assert denom < 6.0                    # EMA followed the leaves
+        assert abs(denom - n_alive) < 3.0
+        w_true, _, _ = linear_psp_task(8)
+        err = float(jnp.linalg.norm(st.server_params["w"] - w_true)
+                    / jnp.linalg.norm(w_true))
+        assert err < 0.4, err
+
+    def test_adaptive_jit_single_compilation(self, task):
+        w_true, grad_fn, opt_update = task
+        cfg = PSPConfig(barrier="dssp", staleness=3, n_workers=4)
+        st = psp_init(cfg, {"w": jnp.zeros((D,))}, lambda p: None,
+                      jax.random.PRNGKey(0))
+        calls = 0
+
+        def counting(s, b):
+            nonlocal calls
+            calls += 1
+            return psp_train_step(cfg, grad_fn, opt_update, s, b)
+
+        step = jax.jit(counting)
+        x = jnp.ones((4, 8, D))
+        for _ in range(10):
+            st, _ = step(st, (x, jnp.ones((4, 8))))
+        assert calls == 1
+        assert int(st.policy["thr"]) <= 3
+
+
 def test_jit_single_compilation(task):
     w_true, grad_fn, opt_update = task
     cfg = PSPConfig(barrier="pssp", n_workers=4, sample_size=2)

@@ -101,6 +101,91 @@ else:
             _check_equivalence(name, frac, churn, seed)
 
 
+class TestAdaptivePolicies:
+    """Adaptive barrier policies (DSSP / Elastic-BSP / β-annealing):
+    the three engines agree at the distribution level, and pinning an
+    adaptive policy's range reduces it to its static parent bit-for-bit
+    on both grid backends and on the event simulator."""
+
+    @pytest.mark.parametrize("name,frac,churn,seed", [
+        ("dssp", 0.2, False, 101),
+        ("ebsp", 0.0, False, 202),
+        ("apssp", 0.2, True, 303),
+        ("apbsp", 0.0, True, 404),
+    ])
+    def test_three_engines_agree(self, name, frac, churn, seed):
+        _check_equivalence(name, frac, churn, seed)
+
+    #: (adaptive kwargs, static-parent kwargs): equal-by-construction pairs
+    REDUCTIONS = [
+        (dict(staleness=3, staleness_lo=3), dict(staleness=3)),
+        (dict(max_advance=0), dict()),
+        (dict(staleness=3, sample_size=2, sample_size_lo=2),
+         dict(staleness=3, sample_size=2)),
+    ]
+    NAMES = [("dssp", "ssp"), ("ebsp", "bsp"), ("apssp", "pssp")]
+
+    @staticmethod
+    def _pair(i, frac, churn, seed):
+        (akw, skw) = TestAdaptivePolicies.REDUCTIONS[i]
+        an, sn = TestAdaptivePolicies.NAMES[i]
+        base = dict(n_nodes=12, duration=4.0, dim=8, batch=4, seed=seed,
+                    straggler_frac=frac,
+                    churn_leave_rate=0.8 if churn else 0.0,
+                    churn_join_rate=0.8 if churn else 0.0)
+        return (SimConfig(barrier=make_barrier(an, **akw), **base),
+                SimConfig(barrier=make_barrier(sn, **skw), **base))
+
+    @pytest.mark.parametrize("backend", ("numpy", "jax"))
+    @pytest.mark.parametrize("i", range(3))
+    @pytest.mark.parametrize("frac,churn", [(0.2, False), (0.2, True)])
+    def test_pinned_range_reduces_to_static_parent(self, i, frac, churn,
+                                                   backend):
+        """DSSP r==s ≡ SSP, Elastic-BSP R=0 ≡ BSP, β_min==β_max ≡ parent
+        — bit-for-bit: the adaptive carry rides along but every decision
+        (and every RNG draw) is the static row's."""
+        a_cfg, s_cfg = self._pair(i, frac, churn, seed=7 * i + churn)
+        a = run_sweep([a_cfg], backend=backend)[0]
+        s = run_sweep([s_cfg], backend=backend)[0]
+        np.testing.assert_array_equal(a.steps, s.steps)
+        np.testing.assert_array_equal(a.errors, s.errors)
+        np.testing.assert_array_equal(a.server_updates, s.server_updates)
+        assert a.total_updates == s.total_updates
+        assert a.control_messages == s.control_messages
+
+    @pytest.mark.parametrize("i", range(3))
+    def test_event_sim_reduction(self, i):
+        a_cfg, s_cfg = self._pair(i, 0.2, False, seed=11 + i)
+        a, s = run_simulation(a_cfg), run_simulation(s_cfg)
+        np.testing.assert_array_equal(a.steps, s.steps)
+        np.testing.assert_array_equal(a.errors, s.errors)
+        assert a.total_updates == s.total_updates
+
+    @pytest.mark.parametrize("backend", ("numpy", "jax"))
+    def test_adaptive_carry_leaves_static_rows_untouched(self, backend):
+        """Mixing an adaptive row into a batch flips the whole batch onto
+        the policy-carry code path — the static rows must not notice: a
+        [dssp(r==s), ssp] batch equals an [ssp, ssp] batch row-for-row,
+        bit-for-bit (the carry adds no RNG draws and no decisions)."""
+        base = dict(n_nodes=12, duration=4.0, dim=8, batch=4,
+                    straggler_frac=0.2)
+        mixed = run_sweep(
+            [SimConfig(barrier=make_barrier("dssp", staleness=3,
+                                            staleness_lo=3),
+                       seed=21, **base),
+             SimConfig(barrier=make_barrier("ssp", staleness=3), seed=22,
+                       **base)], backend=backend)
+        pure = run_sweep(
+            [SimConfig(barrier=make_barrier("ssp", staleness=3), seed=21,
+                       **base),
+             SimConfig(barrier=make_barrier("ssp", staleness=3), seed=22,
+                       **base)], backend=backend)
+        for a, b in zip(mixed, pure):
+            np.testing.assert_array_equal(a.steps, b.steps)
+            np.testing.assert_array_equal(a.errors, b.errors)
+            assert a.total_updates == b.total_updates
+
+
 class TestSweepInvariance:
     """run_sweep output order/shape is invariant to backend and grouping."""
 
@@ -256,17 +341,23 @@ class TestDeviceResidency:
     FULL_STATE = {"w", "pulled", "steps", "alive", "computing",
                   "event_time", "ready", "blocked", "total_updates",
                   "control", "pend_leave", "pend_join"}
+    #: adaptive batches additionally carry the policy state on device
+    POLICY_STATE = {"pol_thr", "pol_ema", "pol_beta"}
 
     @pytest.mark.parametrize("churn", (False, True))
-    def test_chunked_scans_carry_full_state_and_no_transfers(self, churn):
+    @pytest.mark.parametrize("name", ("pssp", "ebsp"))
+    def test_chunked_scans_carry_full_state_and_no_transfers(self, name,
+                                                             churn):
         import jax
         from repro.core import vector_sim_jax
 
-        cfg = _scenario("pssp", 0.2, churn, 7)
+        cfg = _scenario(name, 0.2, churn, 7)
         sim = VectorSimulator([cfg], backend="jax")
         chunk_fn, plan, params, carry, xs_chunks = \
             vector_sim_jax._prepare(sim)
-        assert set(carry) == self.FULL_STATE
+        want = self.FULL_STATE | (self.POLICY_STATE if name == "ebsp"
+                                  else set())
+        assert set(carry) == want
         warm = {k: v.copy() for k, v in carry.items()}
         for xs in xs_chunks:             # compile every shape off-guard
             warm, _ = chunk_fn(params, warm, xs)
@@ -276,7 +367,7 @@ class TestDeviceResidency:
                 c, (err_r, upd_r) = chunk_fn(params, c, xs)
                 recs += err_r.shape[0]
             jax.block_until_ready(c)
-        assert set(c) == self.FULL_STATE
+        assert set(c) == want
         assert recs == plan.n_rec
         assert plan.n_rec * plan.stride >= sim.ticks.size
 
