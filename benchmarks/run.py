@@ -123,10 +123,29 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"),
                     help="grid engine for the figure sweeps")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax-profiler trace of the whole run "
+                         "into DIR (open with TensorBoard/Perfetto); perf "
+                         "PRs argue from these traces")
     a = ap.parse_args(argv)
     os.makedirs(OUT_DIR, exist_ok=True)
     sweep_bench.enable_compile_cache()
 
+    if a.profile:
+        import jax
+        jax.profiler.start_trace(a.profile)
+    try:
+        _run_benches(a)
+    finally:
+        if a.profile:
+            import jax
+            jax.profiler.stop_trace()
+            print(f"profile,0,trace_dir={a.profile}")
+
+
+def _run_benches(a) -> None:
+    """Execute the selected benchmarks (split out so ``--profile`` can
+    bracket every compiled region in one trace)."""
     print("name,us_per_call,derived")
     for name, fn, derive in BENCHES:
         if a.only and name != a.only:

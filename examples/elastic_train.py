@@ -8,17 +8,29 @@ from a fresh pull of the server model at the current max alive step.  The
 whole run is ONE compiled SPMD program — churn is data (pre-sampled
 schedules + an alive mask), not control flow.
 
+With ``--ckpt-dir`` the demo is also kill-and-resume-able: the async
+:class:`repro.checkpoint.CheckpointManager` cuts full-``PSPState``
+checkpoints every ``--save-every`` ticks, and ``--resume`` restores the
+newest one, fast-forwards the minibatch key stream, and continues the
+identical trajectory — the process dying is just one more kind of churn.
+
     PYTHONPATH=src python examples/elastic_train.py
     PYTHONPATH=src python examples/elastic_train.py --barrier bsp --ticks 400
     PYTHONPATH=src python examples/elastic_train.py --barrier ebsp \
         --max-advance 8 --contribution mean-alive
+    PYTHONPATH=src python examples/elastic_train.py --ckpt-dir /tmp/elastic \
+        --save-every 50      # SIGKILL it, then add --resume
 """
 import argparse
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spmd_psp import ChurnConfig, PSPConfig, elastic_drive
+from repro.checkpoint import (CheckpointManager, CheckpointPolicy,
+                              latest_step, restore_checkpoint)
+from repro.core.spmd_psp import (ChurnConfig, PSPConfig, elastic_drive,
+                                 linear_psp_state, state_from_tree,
+                                 state_to_tree)
 
 D = 32
 
@@ -43,6 +55,13 @@ def main():
                     choices=("mean", "mean-alive", "sum"),
                     help="gradient scaling; mean-alive tracks the EMA "
                          "of the live population in the policy state")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="cut async full-state checkpoints here")
+    ap.add_argument("--save-every", type=int, default=25,
+                    help="ticks between checkpoints (with --ckpt-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint and continue "
+                         "(no-op when --ckpt-dir holds none)")
     a = ap.parse_args()
 
     cfg = PSPConfig(barrier=a.barrier, n_workers=a.workers, sample_size=2,
@@ -52,18 +71,41 @@ def main():
                     churn=ChurnConfig(leave_rate=a.leave_rate,
                                       join_rate=a.join_rate,
                                       horizon=60.0, seed=7))
-    w_true, it = elastic_drive(cfg, D, a.ticks)
+    state, start = None, 0
+    if a.resume and a.ckpt_dir and latest_step(a.ckpt_dir) is not None:
+        tree, start = restore_checkpoint(a.ckpt_dir,
+                                         state_to_tree(linear_psp_state(cfg, D)))
+        state = state_from_tree(tree)
+        print(f"resumed tick {start} from {a.ckpt_dir}")
+    if start >= a.ticks:
+        print(f"nothing to do: checkpoint already at tick {start} "
+              f">= --ticks {a.ticks}")
+        return
+    mgr = None
+    if a.ckpt_dir:
+        mgr = CheckpointManager(a.ckpt_dir,
+                                CheckpointPolicy(every_steps=a.save_every))
+    w_true, it = elastic_drive(cfg, D, a.ticks, state=state,
+                               start_tick=start)
     print(f"{a.barrier} with churn {a.leave_rate}-/s {a.join_rate}+/s "
           f"on {a.workers} workers")
     print(f"{'tick':>5s} {'virt_t':>7s} {'alive':>5s} {'members':>10s} "
           f"{'mean_step':>9s} {'err':>8s}")
-    for i, (st, m) in enumerate(it):
+    for i, (st, m) in enumerate(it, start=start):
         if i % 25 == 0 or i == a.ticks - 1:
             err = float(jnp.linalg.norm(st.server_params["w"] - w_true)
                         / jnp.linalg.norm(w_true))
             members = "".join("#" if b else "." for b in np.asarray(st.alive))
             print(f"{i:5d} {float(st.now):7.2f} {int(m['alive']):5d} "
                   f"{members:>10s} {float(m['mean_step']):9.1f} {err:8.4f}")
+        if mgr:
+            mgr.maybe_save(i + 1, state_to_tree(st),
+                           {"barrier": a.barrier, "ticks": i + 1})
+    if mgr:
+        mgr.save(a.ticks, state_to_tree(st), {"barrier": a.barrier,
+                                              "ticks": a.ticks}, block=True)
+        mgr.close()
+        print(f"checkpoint: tick {mgr.latest_step()} in {a.ckpt_dir}")
     print(f"\n{int(st.leave_cursor)} leave events, "
           f"{int(st.join_cursor)} join events consumed; "
           f"{int(st.total_pushes)} server updates")

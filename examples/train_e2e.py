@@ -5,9 +5,16 @@ Default: a ~10M-param reduced qwen2 for 200 PSP ticks on CPU (finishes in
 minutes).  ``--large`` selects a ~100M-param config (same code path; sized
 for a real accelerator or a long CPU run).
 
+Every ``repro.launch.train`` flag passes through — in particular the
+fault-tolerance ones: ``--ckpt-dir`` + ``--save-every``/``--save-interval``
+cut async full-state checkpoints, and a killed run restarted with
+``--resume`` continues bit-for-bit where the latest checkpoint left off.
+
     PYTHONPATH=src python examples/train_e2e.py
     PYTHONPATH=src python examples/train_e2e.py --barrier bsp --steps 300
     PYTHONPATH=src python examples/train_e2e.py --large --steps 400
+    PYTHONPATH=src python examples/train_e2e.py --ckpt-dir /tmp/e2e \
+        --save-every 50      # kill -9 it mid-run, then re-run with --resume
 """
 import argparse
 import sys

@@ -1,4 +1,8 @@
-from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
-                                         save_checkpoint)
+from repro.checkpoint.checkpoint import (latest_step, read_metadata,
+                                         restore_checkpoint, save_checkpoint)
+from repro.checkpoint.manager import (CheckpointManager, CheckpointPolicy,
+                                      host_snapshot)
 
-__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "CheckpointPolicy", "host_snapshot",
+           "latest_step", "read_metadata", "restore_checkpoint",
+           "save_checkpoint"]

@@ -1,10 +1,17 @@
 """Pytree checkpointing (dependency-free .npz format).
 
 Layout: ``<dir>/step_<n>.npz`` holding flattened leaves keyed by their
-pytree path, plus a tiny JSON sidecar with step metadata.  Atomic writes
-(tmp + rename), latest-step discovery, and structural restore into an
+pytree path, plus a tiny JSON sidecar with step metadata.  Writes are
+crash-atomic: both files are staged under ``.tmp`` names and the ``.npz``
+rename is the *last* publication step, so a discoverable checkpoint always
+has its sidecar already in place (``latest_step`` additionally refuses
+entries whose sidecar is missing or unparseable — a torn write can never
+be selected for restore).  Restore is structural: arrays land back in an
 existing template pytree (so dtypes/shardings are preserved by the caller
 putting the arrays back on device).
+
+The async writer / save-policy layer lives in
+:mod:`repro.checkpoint.manager`; this module is the storage format only.
 """
 from __future__ import annotations
 
@@ -35,46 +42,99 @@ def _flatten(tree: PyTree):
     return out
 
 
+def _npz_name(step: int) -> str:
+    return f"step_{step:08d}.npz"
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
                     metadata: Optional[dict] = None) -> str:
+    """Atomically write ``tree`` (+ JSON sidecar) as step ``step``.
+
+    Publication order matters for crash safety: the sidecar is renamed
+    into place *first* and the ``.npz`` *last*, so the moment a
+    checkpoint becomes discoverable (the ``.npz`` exists) its metadata
+    is guaranteed to exist too.  A crash between the two renames leaves
+    an orphan sidecar, which restore ignores and
+    :meth:`repro.checkpoint.manager.CheckpointManager` garbage-collects.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     arrays = _flatten(tree)
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     os.close(fd)
     with open(tmp, "wb") as f:
         np.savez(f, **arrays)
-    final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    os.replace(tmp, final)
+    final = os.path.join(ckpt_dir, _npz_name(step))
     meta = {"step": step, **(metadata or {})}
-    with open(final + ".json", "w") as f:
+    fd, mtmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd)
+    with open(mtmp, "w") as f:
         json.dump(meta, f)
+    os.replace(mtmp, final + ".json")
+    os.replace(tmp, final)            # npz rename last: publishes atomically
     return final
 
 
+def _sidecar_ok(ckpt_dir: str, fn: str) -> bool:
+    """Whether ``fn``'s JSON sidecar exists and parses."""
+    try:
+        with open(os.path.join(ckpt_dir, fn + ".json")) as f:
+            json.load(f)
+    except (OSError, ValueError):
+        return False
+    return True
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Largest step with a complete (npz + parseable sidecar) checkpoint.
+
+    Entries whose sidecar is missing or corrupt are skipped — they are
+    torn writes from a crashed process, not restorable state.
+    """
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
-             if (m := re.match(r"step_(\d+)\.npz$", fn))]
+             if (m := re.match(r"step_(\d+)\.npz$", fn))
+             and _sidecar_ok(ckpt_dir, fn)]
     return max(steps) if steps else None
+
+
+def read_metadata(ckpt_dir: str, step: int) -> dict:
+    """Load the JSON sidecar of checkpoint ``step`` (raises if absent)."""
+    with open(os.path.join(ckpt_dir, _npz_name(step)) + ".json") as f:
+        return json.load(f)
 
 
 def restore_checkpoint(ckpt_dir: str, template: PyTree,
                        step: Optional[int] = None) -> Tuple[PyTree, int]:
-    """Restore into the structure of ``template`` (shapes must match)."""
+    """Restore into the structure of ``template`` (shapes must match).
+
+    Raises :class:`ValueError` — never a bare ``assert`` (which vanishes
+    under ``python -O``) or a cryptic ``KeyError`` — when a template leaf
+    is absent from the archive or stored with a different shape, naming
+    the offending key and both shapes so a config/arch mismatch is
+    diagnosable from the message alone.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    path = os.path.join(ckpt_dir, _npz_name(step))
     data = np.load(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat:
         key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
                         for q in p)
+        if key not in data.files:
+            raise ValueError(
+                f"checkpoint {path} has no entry for template leaf "
+                f"'{key}' (archive holds {sorted(data.files)[:8]}...); "
+                "was it written by a different config?")
         arr = data[key]
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"checkpoint {path} leaf '{key}': stored shape "
+                f"{arr.shape} != template shape {leaf.shape}")
         # cast through jnp: numpy cannot cast into ml_dtypes (bf16)
         leaves.append(np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype)))
     tree = jax.tree_util.tree_unflatten(

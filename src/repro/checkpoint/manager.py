@@ -1,0 +1,253 @@
+"""Checkpoint manager: save policies, async writer, retention.
+
+The storage format (:mod:`repro.checkpoint.checkpoint`) is a dumb atomic
+npz writer; this layer decides *when* to save and keeps the write off the
+training critical path, Levanter-style:
+
+* **policies** — save every N steps (:attr:`CheckpointPolicy.every_steps`)
+  and/or every T wall-clock seconds (:attr:`CheckpointPolicy.every_seconds`);
+  either trigger fires a save.  Step policies give the deterministic
+  cadence the kill-and-resume equivalence tests pin; time policies bound
+  the work lost to a crash on slow configs where a step cadence would be
+  hours apart.  Resume correctness never depends on *when* a checkpoint
+  was cut — restore is exact for any published step.
+* **async writer** — :meth:`CheckpointManager.save` snapshots the state to
+  host memory synchronously (cheap: one ``device_get`` of arrays that are
+  immutable anyway) and hands the serialization + fsync-rename to a
+  single background thread, so training resumes immediately.  A bounded
+  queue applies back-pressure instead of accumulating unbounded snapshots
+  when the disk is slower than the save cadence.
+* **retention / GC** — after each successful write the writer thread keeps
+  the newest ``keep`` checkpoints and deletes the rest (npz + sidecar).
+* **crash hygiene** — construction removes stale ``*.tmp`` staging files
+  and orphan sidecars (a ``.json`` whose ``.npz`` never got published)
+  left behind by a killed process, so a resumed run starts from a clean
+  directory.
+
+Typical wiring (``repro.launch.train``)::
+
+    with CheckpointManager(dir, CheckpointPolicy(every_steps=50)) as mgr:
+        for t in range(start, steps):
+            state = step(state)
+            mgr.maybe_save(t + 1, state, metadata={"data_step": t + 1})
+        mgr.save(steps, state, metadata=..., block=True)
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import os
+import queue
+import re
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import latest_step, save_checkpoint
+
+PyTree = Any
+
+__all__ = ["CheckpointPolicy", "CheckpointManager", "host_snapshot"]
+
+
+def host_snapshot(tree: PyTree) -> PyTree:
+    """Copy every leaf of ``tree`` to a host numpy array.
+
+    This is the synchronous half of an async save: once the snapshot
+    exists, the training loop may donate/overwrite its device buffers
+    freely while the writer thread serializes at leisure.
+    """
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """When to cut a checkpoint (either trigger suffices).
+
+    ``every_steps=None`` disables the step cadence, ``every_seconds=None``
+    the wall-clock cadence; with both ``None`` only explicit
+    :meth:`CheckpointManager.save` calls (e.g. the final save) write.
+    """
+
+    every_steps: Optional[int] = None      # save when step % every_steps == 0
+    every_seconds: Optional[float] = None  # save when this much wall time passed
+
+    def __post_init__(self):
+        if self.every_steps is not None and self.every_steps <= 0:
+            raise ValueError(f"every_steps must be positive, "
+                             f"got {self.every_steps}")
+        if self.every_seconds is not None and self.every_seconds <= 0:
+            raise ValueError(f"every_seconds must be positive, "
+                             f"got {self.every_seconds}")
+
+
+class CheckpointManager:
+    """Policy-driven async checkpointer over one directory.
+
+    Thread model: one daemon writer thread consumes a bounded queue of
+    ``(step, host_tree, metadata)`` snapshots; every disk operation
+    (write, rename, GC) happens on that thread, so publication order is
+    the enqueue order and retention never races a write.  ``wait()``
+    drains the queue (tests and final saves); ``close()`` drains and
+    joins.  The manager is also a context manager — the ``with`` exit
+    closes it.
+    """
+
+    def __init__(self, ckpt_dir: str, policy: CheckpointPolicy | None = None,
+                 *, keep: int = 3, async_write: bool = True,
+                 queue_size: int = 2):
+        self.ckpt_dir = ckpt_dir
+        self.policy = policy or CheckpointPolicy()
+        self.keep = keep
+        self._async = async_write
+        self._last_save_time = time.monotonic()
+        self._last_saved_step: Optional[int] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._clean_stale()
+        self._queue: "queue.Queue" = queue.Queue(maxsize=queue_size)
+        self._error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+        if async_write:
+            self._thread = threading.Thread(target=self._writer_loop,
+                                            name="ckpt-writer", daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ #
+    # policy
+    # ------------------------------------------------------------------ #
+    def should_save(self, step: int) -> bool:
+        """Does the policy call for a checkpoint at ``step``?"""
+        if step == self._last_saved_step:
+            return False
+        p = self.policy
+        if p.every_steps is not None and step % p.every_steps == 0:
+            return True
+        if (p.every_seconds is not None
+                and time.monotonic() - self._last_save_time >= p.every_seconds):
+            return True
+        return False
+
+    def maybe_save(self, step: int, tree: PyTree,
+                   metadata: Optional[dict] = None) -> bool:
+        """Save iff the policy fires; returns whether a save was enqueued."""
+        if not self.should_save(step):
+            return False
+        self.save(step, tree, metadata)
+        return True
+
+    # ------------------------------------------------------------------ #
+    # saving
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree: PyTree, metadata: Optional[dict] = None,
+             *, block: bool = False) -> None:
+        """Snapshot ``tree`` to host and enqueue the write.
+
+        The device→host copy happens here, on the caller's thread — after
+        this returns the caller may mutate/donate its buffers.  With
+        ``block=True`` (or a sync manager) the write is also drained
+        before returning.
+        """
+        self._raise_writer_error()
+        snap = host_snapshot(tree)
+        self._last_save_time = time.monotonic()
+        self._last_saved_step = step
+        if self._thread is None:
+            self._write(step, snap, metadata)
+        else:
+            self._queue.put((step, snap, metadata))
+            if block:
+                self.wait()
+
+    def wait(self) -> None:
+        """Block until every enqueued checkpoint is on disk."""
+        if self._thread is not None:
+            self._queue.join()
+        self._raise_writer_error()
+
+    def close(self) -> None:
+        """Drain pending writes and stop the writer thread."""
+        if self._thread is not None:
+            self._queue.join()
+            self._queue.put(None)           # sentinel: writer exits
+            self._thread.join()
+            self._thread = None
+        self._raise_writer_error()
+
+    def latest_step(self) -> Optional[int]:
+        """Newest restorable step in this manager's directory."""
+        return latest_step(self.ckpt_dir)
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------ #
+    # writer thread
+    # ------------------------------------------------------------------ #
+    def _raise_writer_error(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("checkpoint writer thread failed") from err
+
+    def _writer_loop(self):
+        while True:
+            item = self._queue.get()
+            if item is None:
+                self._queue.task_done()
+                return
+            step, snap, metadata = item
+            try:
+                self._write(step, snap, metadata)
+            except BaseException as e:          # surfaced on next save/wait
+                self._error = e
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step, snap, metadata):
+        save_checkpoint(self.ckpt_dir, step, snap, metadata)
+        self._gc()
+
+    def _gc(self):
+        """Keep the newest ``keep`` published checkpoints, delete the rest."""
+        if self.keep is None or self.keep <= 0:
+            return
+        steps = sorted(
+            int(m.group(1)) for fn in os.listdir(self.ckpt_dir)
+            if (m := re.match(r"step_(\d+)\.npz$", fn)))
+        for s in steps[:-self.keep]:
+            base = os.path.join(self.ckpt_dir, f"step_{s:08d}.npz")
+            for path in (base, base + ".json"):
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+
+    # ------------------------------------------------------------------ #
+    # crash hygiene
+    # ------------------------------------------------------------------ #
+    def _clean_stale(self):
+        """Remove ``*.tmp`` staging files and orphan sidecars.
+
+        Both are leftovers of a process killed mid-save: staging files
+        never renamed, and sidecars published whose npz rename (the last
+        step) never happened.  Only run at construction — a live writer
+        in *this* process always publishes npz-last, so anything matching
+        here is garbage from a previous life.
+        """
+        for tmp in glob.glob(os.path.join(self.ckpt_dir, "*.tmp")):
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+        for side in glob.glob(os.path.join(self.ckpt_dir,
+                                           "step_*.npz.json")):
+            if not os.path.exists(side[:-len(".json")]):
+                try:
+                    os.remove(side)
+                except OSError:
+                    pass

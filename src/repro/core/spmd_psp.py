@@ -90,8 +90,9 @@ from repro.core.barrier_kernel import (BarrierKernel, BarrierPolicy,
 from repro.core.barriers import BarrierControl, make_barrier
 
 __all__ = ["ChurnConfig", "PSPConfig", "PSPState", "elastic_drive",
-           "linear_psp_task", "psp_init", "psp_train_step",
-           "make_psp_step_fn"]
+           "linear_psp_state", "linear_psp_task", "psp_init",
+           "psp_train_step", "make_psp_step_fn", "state_from_tree",
+           "state_to_tree"]
 
 PyTree = Any
 
@@ -536,6 +537,26 @@ def psp_train_step(
     return new_state, metrics
 
 
+def state_to_tree(state: PSPState) -> dict:
+    """The checkpointable pytree of the FULL training state.
+
+    A plain field-name → value dict (``NamedTuple._asdict``), so the
+    archive keys read ``server_params/...``, ``opt_state/...``, ``step``,
+    ``key`` … — every leaf the trainer carries, including the optimizer
+    state, worker views, step/busy/pushed/alive arrays, churn schedules
+    and cursors, the adaptive-policy pytree and the RNG key.  Persisting
+    this tree (not just ``server_params``) is what makes kill-and-resume
+    bit-exact: restoring it and replaying the same minibatch stream
+    reproduces the uninterrupted run's numbers leaf for leaf.
+    """
+    return state._asdict()
+
+
+def state_from_tree(tree: dict) -> PSPState:
+    """Inverse of :func:`state_to_tree` (e.g. on a restored checkpoint)."""
+    return PSPState(**tree)
+
+
 def make_psp_step_fn(cfg: PSPConfig, grad_fn, opt_update):
     """Convenience: partially-applied, jit-ready step function."""
     return functools.partial(psp_train_step, cfg, grad_fn, opt_update)
@@ -571,9 +592,23 @@ def linear_psp_task(dim: int, lr: float = 0.1, seed: int = 0):
     return w_true, grad_fn, opt_update
 
 
+def linear_psp_state(cfg: PSPConfig, dim: int,
+                     init_seed: int = 1) -> PSPState:
+    """The initial :class:`PSPState` of :func:`elastic_drive`'s run.
+
+    Exposed separately because it doubles as the *restore template*: a
+    checkpoint written mid-drive restores into this state's structure
+    (same shapes/dtypes by construction), which is how the elastic demo
+    and the resume tests rebuild a killed run.
+    """
+    return psp_init(cfg, {"w": jnp.zeros((dim,))}, lambda p: None,
+                    jax.random.PRNGKey(init_seed))
+
+
 def elastic_drive(cfg: PSPConfig, dim: int, ticks: int, *, batch: int = 16,
                   lr: float = 0.1, task_seed: int = 0, init_seed: int = 1,
-                  batch_seed: int = 2):
+                  batch_seed: int = 2, state: Optional[PSPState] = None,
+                  start_tick: int = 0):
     """Drive the trainer on the linear task; the canonical tick loop.
 
     One definition of "init the trainer, jit the step, feed random
@@ -583,17 +618,26 @@ def elastic_drive(cfg: PSPConfig, dim: int, ticks: int, *, batch: int = 16,
     trajectories are the same run by construction (the golden churn trace
     pins this loop's exact RNG consumption).
 
+    Resume: pass a restored ``state`` plus the ``start_tick`` it was
+    checkpointed at and the drive fast-forwards the minibatch key stream
+    (``start_tick`` splits, no data materialized) before continuing —
+    ticks ``start_tick..ticks-1`` then consume exactly the keys the
+    uninterrupted run would have, so the resumed trajectory is
+    bit-identical (``tests/test_checkpoint.py``).
+
     Returns:
       (w_true, it): the task ground truth and an iterator yielding one
       ``(state, metrics)`` pair per tick (the state *after* that tick).
     """
     w_true, grad_fn, opt_update = linear_psp_task(dim, lr=lr, seed=task_seed)
-    state = psp_init(cfg, {"w": jnp.zeros((dim,))}, lambda p: None,
-                     jax.random.PRNGKey(init_seed))
+    if state is None:
+        state = linear_psp_state(cfg, dim, init_seed)
     step = jax.jit(make_psp_step_fn(cfg, grad_fn, opt_update))
 
     def _ticks(state, kb):
-        for _ in range(ticks):
+        for _ in range(start_tick):          # replay the consumed key stream
+            kb, _ = jax.random.split(kb)
+        for _ in range(start_tick, ticks):
             kb, k1 = jax.random.split(kb)
             x = jax.random.normal(k1, (cfg.n_workers, batch, dim))
             state, m = step(state, (x, x @ w_true))

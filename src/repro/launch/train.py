@@ -8,29 +8,69 @@ Two modes:
   technique as a first-class feature): W worker views, seeded virtual-clock
   heterogeneity, masked server aggregation (core/spmd_psp.py).
 
+Fault tolerance: with ``--ckpt-dir`` the run cuts *full-state* checkpoints
+through the async :class:`repro.checkpoint.CheckpointManager` — every
+``--save-every`` steps and/or ``--save-interval`` wall-clock seconds, plus
+one at the final step.  The PSP mode persists the entire
+:class:`~repro.core.spmd_psp.PSPState` (server params, optimizer state,
+worker views, step/busy/pushed/alive arrays, churn cursors, policy pytree,
+RNG key), the pjit mode persists ``{params, opt_state}``.  ``--resume``
+restores the newest checkpoint and fast-forwards the synthetic data
+stream to the restored step, so a SIGKILL'd run resumed with the same
+flags reproduces the uninterrupted run bit-for-bit
+(``tests/test_checkpoint.py`` pins this with a real subprocess kill).
+
 CPU example (used by examples/train_e2e.py):
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
-        --steps 200 --batch 8 --seq 128 --barrier pbsp --workers 4
+        --steps 200 --batch 8 --seq 128 --barrier pbsp --workers 4 \
+        --ckpt-dir /tmp/ck --save-every 50
+    # ... SIGKILL mid-run, then:
+    PYTHONPATH=src python -m repro.launch.train ... --ckpt-dir /tmp/ck --resume
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import (CheckpointManager, CheckpointPolicy,
+                              latest_step, restore_checkpoint)
 from repro.configs import get_config, reduced as make_reduced
-from repro.core.spmd_psp import PSPConfig, psp_init, psp_train_step
+from repro.core.spmd_psp import (PSPConfig, psp_init, psp_train_step,
+                                 state_from_tree, state_to_tree)
 from repro.data import SyntheticLM
 from repro.launch.steps import make_train_step
 from repro.models import init_model, loss_fn
-from repro.optim import adamw, apply_updates, clip_by_norm, warmup_cosine
+from repro.optim import adamw, clip_by_norm, warmup_cosine
+
+
+def _make_manager(a) -> CheckpointManager | None:
+    """The run's async checkpointer (None when ``--ckpt-dir`` is unset)."""
+    if not a.ckpt_dir:
+        return None
+    return CheckpointManager(
+        a.ckpt_dir,
+        CheckpointPolicy(every_steps=a.save_every or None,
+                         every_seconds=a.save_interval or None),
+        keep=a.keep)
+
+
+def _maybe_resume(a, template):
+    """Restore the newest checkpoint into ``template`` if ``--resume``.
+
+    Returns ``(tree, start_step)`` — the template itself and 0 when there
+    is nothing to resume from (first launch with ``--resume`` is legal:
+    the flag means "continue if a checkpoint exists", so crash-loop
+    supervisors can pass it unconditionally).
+    """
+    if not (a.resume and a.ckpt_dir) or latest_step(a.ckpt_dir) is None:
+        return template, 0
+    tree, step = restore_checkpoint(a.ckpt_dir, template)
+    print(f"resumed step {step} from {a.ckpt_dir}")
+    return tree, step
 
 
 def main(argv=None) -> int:
@@ -52,6 +92,18 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="checkpoint every N steps (0: final step only)")
+    ap.add_argument("--save-interval", type=float, default=0.0,
+                    help="checkpoint every T wall-clock seconds (0: off)")
+    ap.add_argument("--keep", type=int, default=3,
+                    help="checkpoints retained by GC (older are deleted)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint in --ckpt-dir "
+                         "(no-op when none exists) and continue")
+    ap.add_argument("--throttle", type=float, default=0.0,
+                    help="sleep per step; paces the run so kill-and-resume "
+                         "tests get a deterministic mid-run kill window")
     ap.add_argument("--vocab", type=int, default=512)
     a = ap.parse_args(argv)
 
@@ -65,17 +117,30 @@ def main(argv=None) -> int:
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params:,} barrier={a.barrier}")
 
+    mgr = _make_manager(a)
+    meta = {"arch": cfg.name, "barrier": a.barrier}
     t0 = time.time()
     if a.barrier == "none":
         data = iter(SyntheticLM(cfg.vocab_size, a.seq, a.batch, seed=a.seed))
         state = opt.init(params)
+        tree, start = _maybe_resume(a, {"params": params,
+                                        "opt_state": state})
+        params, state = tree["params"], tree["opt_state"]
+        for _ in range(start):       # replay the consumed data stream
+            next(data)
         step_fn = jax.jit(make_train_step(cfg, opt))
-        for t in range(a.steps):
+        for t in range(start, a.steps):
             batch = next(data)
             params, state, loss, _ = step_fn(params, state, batch)
             if t % a.log_every == 0 or t == a.steps - 1:
                 print(f"step {t:5d} loss {float(loss):.4f} "
                       f"({time.time()-t0:.1f}s)")
+            if mgr:
+                mgr.maybe_save(t + 1, {"params": params, "opt_state": state},
+                               {**meta, "data_step": t + 1})
+            if a.throttle:
+                time.sleep(a.throttle)
+        final_tree = {"params": params, "opt_state": state}
     else:
         W = a.workers
         data = iter(SyntheticLM(cfg.vocab_size, a.seq, W * a.batch,
@@ -90,9 +155,13 @@ def main(argv=None) -> int:
             return loss, clip_by_norm(g, 1.0)
 
         st = psp_init(pcfg, params, opt.init, jax.random.fold_in(key, 1))
+        tree, start = _maybe_resume(a, state_to_tree(st))
+        st = state_from_tree(tree)
+        for _ in range(start):       # replay the consumed data stream
+            next(data)
         step_fn = jax.jit(lambda s, b: psp_train_step(
             pcfg, grad_fn, opt.update, s, b))
-        for t in range(a.steps):
+        for t in range(start, a.steps):
             toks = next(data)["tokens"].reshape(W, a.batch, a.seq)
             st, m = step_fn(st, toks)
             if t % a.log_every == 0 or t == a.steps - 1:
@@ -101,11 +170,19 @@ def main(argv=None) -> int:
                       f"mean_step {float(m['mean_step']):.1f} "
                       f"spread {int(m['step_spread'])} "
                       f"({time.time()-t0:.1f}s)")
+            if mgr:
+                mgr.maybe_save(t + 1, state_to_tree(st),
+                               {**meta, "data_step": t + 1})
+            if a.throttle:
+                time.sleep(a.throttle)
         params = st.server_params
-    if a.ckpt_dir:
-        path = save_checkpoint(a.ckpt_dir, a.steps, params,
-                               {"arch": cfg.name, "barrier": a.barrier})
-        print("checkpoint:", path)
+        final_tree = state_to_tree(st)
+    if mgr:
+        if a.steps > start:
+            mgr.save(a.steps, final_tree, {**meta, "data_step": a.steps},
+                     block=True)
+        mgr.close()
+        print(f"checkpoint: step {mgr.latest_step()} in {a.ckpt_dir}")
     return 0
 
 

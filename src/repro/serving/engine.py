@@ -62,11 +62,17 @@ class ServingEngine:
 
         Prompts are left-padded to a common length and processed in
         batch-sized waves (prefill once per wave, then batched decode).
+        ``embeds``, when given, is aligned with ``prompts`` — one
+        frontend-embedding row per request, sliced per wave.
         """
         out: List[np.ndarray] = []
         for start in range(0, len(prompts), self.scfg.batch):
             wave = prompts[start:start + self.scfg.batch]
-            out.extend(self._generate_wave(wave, embeds))
+            # each wave decodes against ITS requests' frontend embeddings —
+            # slicing here (not `embeds[:B]` inside the wave) is what keeps
+            # wave 2+ from silently reusing wave 1's conditioning
+            emb = None if embeds is None else embeds[start:start + len(wave)]
+            out.extend(self._generate_wave(wave, emb))
         return out
 
     def _generate_wave(self, wave, embeds) -> List[np.ndarray]:
@@ -83,7 +89,10 @@ class ServingEngine:
                 emb = jnp.zeros((B, cfg.frontend_tokens, cfg.d_model),
                                 jnp.bfloat16)
             else:
-                emb = jnp.asarray(embeds[:B], jnp.bfloat16)
+                if len(embeds) != B:
+                    raise ValueError(
+                        f"wave of {B} prompts got {len(embeds)} embeddings")
+                emb = jnp.asarray(embeds, jnp.bfloat16)
         logits, cache = prefill(
             self.params, jnp.asarray(toks), cfg, embeds=emb,
             max_len=L + (cfg.frontend_tokens or 0) + scfg.max_new_tokens)

@@ -1,0 +1,244 @@
+"""Checkpoint store/manager + kill-and-resume fault tolerance.
+
+The kill tests SIGKILL a real training subprocess mid-run (paced by
+``--throttle`` so the kill window is deterministic), resume it from the
+latest async checkpoint, and require the final full training state to be
+bit-for-bit identical to the uninterrupted run — the acceptance bar of
+the fault-tolerance tentpole, for both the pjit path and the PSP trainer.
+"""
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, CheckpointPolicy,
+                              latest_step, read_metadata,
+                              restore_checkpoint, save_checkpoint)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# --------------------------------------------------------------------------- #
+# storage format (satellites: atomic sidecar, robust discovery, real errors)
+# --------------------------------------------------------------------------- #
+class TestStore:
+    def test_bf16_roundtrip_through_f32(self, tmp_path):
+        # bf16 leaves are stored as f32 (lossless superset) and cast back
+        # through jnp on restore — values and dtype must both survive
+        tree = {"w": (jnp.arange(7, dtype=jnp.float32) / 3).astype(jnp.bfloat16),
+                "n": {"i": jnp.arange(4, dtype=jnp.int32),
+                      "b": jnp.asarray([True, False])}}
+        save_checkpoint(str(tmp_path), 5, tree)
+        restored, step = restore_checkpoint(str(tmp_path), tree)
+        assert step == 5
+        assert restored["w"].dtype == tree["w"].dtype
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert np.array_equal(np.asarray(x, np.float32),
+                                  np.asarray(y, np.float32))
+
+    def test_latest_skips_partial_and_corrupt(self, tmp_path):
+        tree = {"w": jnp.ones(3)}
+        save_checkpoint(str(tmp_path), 3, tree)
+        # partial: npz published without its sidecar (pre-fix crash shape)
+        np.savez(tmp_path / "step_00000009.npz", w=np.ones(3))
+        # corrupt: sidecar exists but does not parse
+        np.savez(tmp_path / "step_00000007.npz", w=np.ones(3))
+        (tmp_path / "step_00000007.npz.json").write_text("{not json")
+        assert latest_step(str(tmp_path)) == 3
+        restored, step = restore_checkpoint(str(tmp_path), tree)
+        assert step == 3 and np.array_equal(restored["w"], tree["w"])
+
+    def test_sidecar_lands_before_npz(self, tmp_path):
+        # the npz rename is the publication point: the moment it exists,
+        # its sidecar must already be valid JSON with the step recorded
+        save_checkpoint(str(tmp_path), 12, {"w": jnp.zeros(2)},
+                        {"note": "x"})
+        meta = read_metadata(str(tmp_path), 12)
+        assert meta["step"] == 12 and meta["note"] == "x"
+
+    def test_restore_shape_mismatch_raises_valueerror(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((2, 3))})
+        with pytest.raises(ValueError, match=r"w.*\(2, 3\).*\(3, 2\)"):
+            restore_checkpoint(str(tmp_path), {"w": jnp.zeros((3, 2))})
+
+    def test_restore_missing_leaf_raises_valueerror(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(2)})
+        with pytest.raises(ValueError, match="no entry.*extra"):
+            restore_checkpoint(str(tmp_path), {"w": jnp.zeros(2),
+                                               "extra": jnp.zeros(1)})
+
+
+# --------------------------------------------------------------------------- #
+# manager: policies, async writer, retention, crash hygiene
+# --------------------------------------------------------------------------- #
+class TestManager:
+    def test_step_policy_and_retention(self, tmp_path):
+        tree = {"w": jnp.arange(4.0)}
+        with CheckpointManager(str(tmp_path),
+                               CheckpointPolicy(every_steps=2),
+                               keep=2) as mgr:
+            for t in range(1, 11):
+                saved = mgr.maybe_save(t, tree, {"data_step": t})
+                assert saved == (t % 2 == 0)
+            mgr.wait()
+            files = sorted(f for f in os.listdir(tmp_path)
+                           if f.endswith(".npz"))
+            # GC keeps only the newest 2 of the 5 periodic saves
+            assert files == ["step_00000008.npz", "step_00000010.npz"]
+            assert mgr.latest_step() == 10
+            assert read_metadata(str(tmp_path), 10)["data_step"] == 10
+
+    def test_wall_clock_policy(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path),
+                                CheckpointPolicy(every_seconds=0.2))
+        try:
+            assert not mgr.should_save(1)      # interval not yet elapsed
+            time.sleep(0.25)
+            assert mgr.should_save(2)
+            mgr.save(2, {"w": jnp.zeros(1)}, block=True)
+            assert not mgr.should_save(3)      # timer reset by the save
+        finally:
+            mgr.close()
+        assert latest_step(str(tmp_path)) == 2
+
+    def test_explicit_save_only_when_no_policy(self, tmp_path):
+        with CheckpointManager(str(tmp_path)) as mgr:
+            for t in range(1, 5):
+                assert not mgr.maybe_save(t, {"w": jnp.zeros(1)})
+            mgr.save(4, {"w": jnp.zeros(1)}, block=True)
+        assert latest_step(str(tmp_path)) == 4
+
+    def test_stale_tmp_and_orphan_sidecar_cleanup(self, tmp_path):
+        (tmp_path / "dead123.tmp").write_bytes(b"half a checkpoint")
+        (tmp_path / "step_00000005.npz.json").write_text('{"step": 5}')
+        save_checkpoint(str(tmp_path), 2, {"w": jnp.zeros(1)})
+        CheckpointManager(str(tmp_path)).close()
+        left = sorted(os.listdir(tmp_path))
+        assert left == ["step_00000002.npz", "step_00000002.npz.json"]
+
+    def test_writer_error_surfaces_on_wait(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"bad": np.asarray(["not", "numeric"])})
+        with pytest.raises(RuntimeError, match="writer thread failed"):
+            mgr.wait()
+        mgr.close()
+
+    def test_invalid_policy_rejected(self):
+        with pytest.raises(ValueError):
+            CheckpointPolicy(every_steps=0)
+        with pytest.raises(ValueError):
+            CheckpointPolicy(every_seconds=-1.0)
+
+
+# --------------------------------------------------------------------------- #
+# kill-and-resume: the golden equivalence, with a real SIGKILL
+# --------------------------------------------------------------------------- #
+TRAIN_ARGS = ["--arch", "qwen2-0.5b", "--reduced", "--batch", "2",
+              "--seq", "64", "--d-model", "128", "--vocab", "128",
+              "--log-every", "50"]
+STEPS = 12
+
+
+def _train(args, wait=True):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train", *TRAIN_ARGS, *args],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env)
+    if not wait:
+        return proc
+    out, err = proc.communicate(timeout=600)
+    assert proc.returncode == 0, err.decode()[-2000:]
+    return proc
+
+
+def _final_state(ckpt_dir):
+    data = np.load(os.path.join(ckpt_dir, f"step_{STEPS:08d}.npz"))
+    return {k: data[k] for k in data.files}
+
+
+@pytest.mark.parametrize("barrier", ["none", "pbsp"])
+def test_kill_and_resume_bit_exact(tmp_path, barrier):
+    """SIGKILL mid-run + --resume ≡ the uninterrupted run, leaf for leaf."""
+    mode = ([] if barrier == "none"
+            else ["--barrier", barrier, "--workers", "2"])
+    ref, killed = str(tmp_path / "ref"), str(tmp_path / "killed")
+    common = [*mode, "--steps", str(STEPS)]
+
+    # uninterrupted reference: STEPS steps, one final full-state checkpoint
+    _train([*common, "--ckpt-dir", ref])
+
+    # victim: same config, throttled so the kill window is deterministic,
+    # async-checkpointing every 2 steps.  SIGKILL as soon as a checkpoint
+    # is discoverable — long before the run could finish.
+    proc = _train([*common, "--ckpt-dir", killed, "--save-every", "2",
+                   "--throttle", "0.3"], wait=False)
+    deadline = time.monotonic() + 540
+    try:
+        while latest_step(killed) is None:
+            assert proc.poll() is None, proc.stderr.read().decode()[-2000:]
+            assert time.monotonic() < deadline, "no checkpoint appeared"
+            time.sleep(0.02)
+    finally:
+        proc.kill()
+        proc.wait()
+    s = latest_step(killed)
+    assert s is not None and s < STEPS, f"killed run already at {s}"
+
+    # resume from the latest async checkpoint and finish the run
+    _train([*common, "--ckpt-dir", killed, "--resume"])
+
+    a, b = _final_state(ref), _final_state(killed)
+    assert set(a) == set(b)
+    for k in a:
+        assert np.array_equal(a[k], b[k]), f"leaf {k} diverged after resume"
+
+
+def test_resume_metadata_records_data_stream(tmp_path):
+    """The sidecar records how much of the data stream was consumed."""
+    _train(["--steps", "4", "--ckpt-dir", str(tmp_path)])
+    assert read_metadata(str(tmp_path), 4)["data_step"] == 4
+
+
+# --------------------------------------------------------------------------- #
+# elastic trainer: resume under churn, through the real store
+# --------------------------------------------------------------------------- #
+def test_elastic_resume_equivalence(tmp_path):
+    """N ticks + checkpoint + resume N ≡ 2N uninterrupted ticks (churn on).
+
+    The full :class:`PSPState` — alive mask, churn cursors, policy
+    pytree, RNG key — round-trips through the on-disk store and the
+    resumed drive consumes the identical minibatch key stream, so the
+    final server params (and every other leaf) match bit-for-bit.
+    """
+    from repro.core.spmd_psp import (ChurnConfig, PSPConfig, elastic_drive,
+                                     linear_psp_state, state_from_tree,
+                                     state_to_tree)
+    cfg = PSPConfig(barrier="pssp", n_workers=4, sample_size=2, staleness=3,
+                    straggler_frac=0.25, contribution="mean-alive",
+                    churn=ChurnConfig(leave_rate=2.0, join_rate=2.0,
+                                      horizon=30.0, seed=7))
+    dim, n = 8, 12
+    _, it = elastic_drive(cfg, dim, 2 * n)
+    states = [st for st, _ in it]
+    mid, full = states[n - 1], states[-1]
+
+    save_checkpoint(str(tmp_path), n, state_to_tree(mid))
+    tree, step = restore_checkpoint(str(tmp_path),
+                                    state_to_tree(linear_psp_state(cfg, dim)))
+    assert step == n
+    _, it2 = elastic_drive(cfg, dim, 2 * n, state=state_from_tree(tree),
+                           start_tick=n)
+    resumed = [st for st, _ in it2][-1]
+
+    flat_a = jax.tree_util.tree_flatten_with_path(state_to_tree(full))[0]
+    flat_b = jax.tree_util.tree_flatten_with_path(state_to_tree(resumed))[0]
+    for (pa, xa), (_, xb) in zip(flat_a, flat_b):
+        assert np.array_equal(np.asarray(xa), np.asarray(xb)), (
+            f"PSPState leaf {jax.tree_util.keystr(pa)} diverged")

@@ -126,3 +126,31 @@ class TestServing:
                                                      max_new_tokens=5))
         p = [np.asarray([1, 2, 3], np.int32)]
         assert np.array_equal(eng.generate(p)[0], eng.generate(p)[0])
+
+    def test_per_wave_embeds(self):
+        # regression: waves after the first must decode against THEIR OWN
+        # frontend embeddings, not a reused slice of wave 1's
+        # (serving/engine.py once passed embeds[:B] to every wave)
+        from repro.configs import get_config, reduced
+        from repro.models import init_model
+        from repro.serving import ServeConfig, ServingEngine
+        cfg = reduced(get_config("internvl2-2b"))   # frontend_tokens > 0
+        assert cfg.frontend_tokens
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(params, cfg, ServeConfig(batch=2,
+                                                     max_new_tokens=4))
+        rng = np.random.default_rng(0)
+        prompt = np.asarray([1, 2, 3, 4], np.int32)
+        # four requests = two waves; give every request a DISTINCT embedding
+        embeds = rng.normal(size=(4, cfg.frontend_tokens, cfg.d_model)) * 3
+        embeds = embeds.astype(np.float32)
+        outs = eng.generate([prompt] * 4, embeds=embeds)
+        # same request served alone with its own embedding is the truth
+        for i in (2, 3):
+            solo = ServingEngine(params, cfg,
+                                 ServeConfig(batch=2, max_new_tokens=4))
+            ref = solo.generate([prompt], embeds=embeds[i:i + 1])[0]
+            assert np.array_equal(outs[i], ref), (
+                f"wave-2 request {i} decoded against the wrong embeddings")
+        # and the two waves' embeddings genuinely distinguish the outputs
+        assert not all(np.array_equal(outs[0], outs[i]) for i in (2, 3))
