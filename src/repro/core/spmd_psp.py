@@ -14,9 +14,14 @@ visible to the multi-pod dry-run and the roofline pipeline.
 
 Mapping (DESIGN.md §3/§4):
 
-* **worker** = a data-parallel shard group (the ``data`` mesh axis carries the
-  worker dimension W; the ``model`` axis shards each worker's compute).  In a
-  multi-pod mesh a worker is a (pod, data-row) pair.
+* **worker** = a data-parallel shard group (the
+  :data:`repro.parallel.sharding.PSP_WORKER_AXES` mesh axes carry the
+  worker dimension W — ``data``, or (pod, data-row) pairs on a multi-pod
+  mesh, resolved by :func:`repro.parallel.sharding.psp_worker_axes`; the
+  ``model`` axis shards each worker's compute).  The server ``psum``
+  reduces over exactly those axes, and the sweep engines' 2-D mesh
+  (:mod:`repro.core.vector_sim_jax`) draws its ``rows``/``nodes`` names
+  from the same vocabulary, so trainer and sweeps shard one way.
 * **server model** = one replicated parameter pytree, updated by masked
   contributions (`psum` over the worker axis is the only cross-worker
   collective — identical schedule to plain DP, so PSP adds *zero* extra

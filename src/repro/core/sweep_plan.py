@@ -29,20 +29,34 @@ execution are chosen, so the engine itself stays policy-free:
     caller's all-rows-done early exit (merged rows may have *different*
     horizons — see :func:`repro.core.vector_sim._merge_key`).
 
-``n_devices`` / padding — mesh placement of the scenario rows
-    The B dimension is sharded over a 1-D mesh (rows are independent;
-    per-row noise is keyed by *global* row id and shared noise by global
-    node id, so results are bit-identical for every mesh size — the
-    degenerate 1-device mesh IS the single-device engine).  Rows pad up
-    to a multiple of the mesh so each device owns an equal block; padded
-    rows carry a negative horizon and never tick.  Node-keyed shared
-    draws (the minibatch blob) are likewise split over the mesh and
-    all-gathered, so RNG cost shards with the rows.
+``mesh`` / padding — 2-D ``(rows, nodes)`` placement
+    Devices factorize into a ``rows × nodes`` mesh.  The B dimension is
+    sharded over the ``rows`` axis (rows are independent; per-row noise
+    is keyed by *global* row id, so results are bit-identical for every
+    row count — the degenerate 1-device mesh IS the single-device
+    engine).  Rows pad up to a multiple of the rows axis so each device
+    owns an equal block; padded rows carry a negative horizon and never
+    tick.  The P node slots shard over the ``nodes`` axis: the engine
+    keeps the node-dimensioned state and node-keyed draws (minibatch
+    blob, shared β-sample scores) sliced per shard and turns the
+    cross-node reductions into collectives
+    (:mod:`repro.core.vector_sim_jax`).  Bit-identity across
+    factorizations requires the node-shard width to be *exact* — a
+    padded slot would change the width of the full-view reductions — so
+    the nodes-axis size is clamped to the largest divisor of P within
+    the request, and the per-shard GEMM alignment lives on the rows
+    axis (:data:`~repro.kernels.psp_tick.DATA_PLANE_BLOCK`-padded row
+    blocks) where inert padding is free.  The default mesh is
+    ``(devices, 1)`` — node sharding is opt-in via ``mesh=`` /
+    ``PSP_SWEEP_MESH`` because the 1-D plan is optimal until P outgrows
+    a device.
 
 Env overrides (all optional, for tests and benchmarks):
 
 =====================  ==================================================
-``PSP_SWEEP_DEVICES``  mesh size (default: every local device)
+``PSP_SWEEP_MESH``     ``RxN`` rows × nodes factorization (e.g. ``4x2``)
+``PSP_SWEEP_DEVICES``  rows-axis size (default: every local device);
+                       ignored when a mesh is given
 ``PSP_TRACE_STRIDE``   force the record stride (still snapped to a
                        divisor of the measurement cadence)
 ``PSP_SWEEP_CHUNK``    force a uniform chunk length in records
@@ -57,7 +71,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["SweepPlan", "plan_sweep"]
+__all__ = ["SweepPlan", "parse_mesh", "plan_sweep", "resolve_mesh"]
 
 #: per-supertick noise-block budget (bytes); caps the stride for batches
 #: whose per-row score matrices scale with B·P²
@@ -75,14 +89,26 @@ class SweepPlan:
     n_rec: int                  #: scheduled records (covers the padded grid)
     n_rec_live: int             #: records containing at least one live tick
     chunks: Tuple[int, ...]     #: record-block lengths, in execution order
-    n_devices: int              #: 1-D mesh size over the B dimension
+    n_devices: int              #: total devices used (= rows · nodes)
     b_pad: int                  #: scenario rows after mesh padding
     node_pad: int               #: node-keyed draw slots after mesh padding
+    mesh: Tuple[int, int] = (1, 1)   #: (rows, nodes) device factorization
+    p_loc: int = 0              #: node slots per nodes-axis shard (P / nodes)
 
     @property
     def n_ticks(self) -> int:
         """Padded tick-grid length (``n_rec × stride``)."""
         return self.n_rec * self.stride
+
+    @property
+    def rows(self) -> int:
+        """Rows-axis size of the device mesh."""
+        return self.mesh[0]
+
+    @property
+    def nodes(self) -> int:
+        """Nodes-axis size of the device mesh."""
+        return self.mesh[1]
 
 
 def _record_stride(n_ticks: int, measure_idx: np.ndarray,
@@ -113,6 +139,66 @@ def _record_stride(n_ticks: int, measure_idx: np.ndarray,
     return best
 
 
+def parse_mesh(spec: str) -> Tuple[int, int]:
+    """Parse a ``RxN`` mesh spec (``PSP_SWEEP_MESH`` / ``--mesh``).
+
+    Exactly two positive decimal integers joined by a single ``x`` (case
+    insensitive): ``"4x2" → (4, 2)``.  Anything else — negative or zero
+    sizes, missing factors, stray separators — raises ``ValueError``
+    rather than silently running an unintended placement (the override
+    exists precisely to pin placements in CI).
+    """
+    parts = spec.strip().lower().split("x")
+    if len(parts) != 2 or not all(p.isdigit() and p for p in parts):
+        raise ValueError(
+            f"mesh spec {spec!r} is not of the form RxN (two positive "
+            "integers, e.g. '4x2')")
+    rows, nodes = int(parts[0]), int(parts[1])
+    if rows < 1 or nodes < 1:
+        raise ValueError(f"mesh spec {spec!r}: sizes must be >= 1")
+    return rows, nodes
+
+
+def _node_axis_size(n: int, P: int, budget: int) -> int:
+    """Largest divisor of ``P`` that is ≤ min(n, budget).
+
+    The nodes-axis shard width must be exact (``P / nodes``) — padding a
+    node slot would widen the full-view reductions and break the
+    cross-factorization bit-identity invariant — so a request that does
+    not divide P degrades to the nearest feasible factorization instead
+    of failing (e.g. ``nodes=8`` on P = 100 runs 5-way).
+    """
+    cap = max(1, min(n, P, budget))
+    return max(d for d in range(1, cap + 1) if P % d == 0)
+
+
+def resolve_mesh(B: int, P: int,
+                 mesh: Optional[Tuple[int, int]] = None,
+                 n_devices: Optional[int] = None) -> Tuple[int, int]:
+    """The ``(rows, nodes)`` factorization a sweep of this shape will use.
+
+    Resolution order: explicit ``mesh`` > ``PSP_SWEEP_MESH`` env >
+    1-D ``(n_devices, 1)`` (``PSP_SWEEP_DEVICES`` env, default every
+    local device).  Clamps exactly as :func:`plan_sweep` does — no
+    device may own zero rows, the nodes axis must divide P exactly, and
+    a request beyond the host's devices degrades instead of failing —
+    so benchmarks can *report* the placement they actually ran.
+    """
+    import jax
+    avail = len(jax.devices())
+    if mesh is None:
+        env_mesh = os.environ.get("PSP_SWEEP_MESH")
+        if env_mesh:
+            mesh = parse_mesh(env_mesh)
+    if mesh is None:
+        if n_devices is None:
+            n_devices = int(os.environ.get("PSP_SWEEP_DEVICES", "0")) or None
+        mesh = (avail if n_devices is None else int(n_devices), 1)
+    rows = max(1, min(int(mesh[0]), B, avail))
+    nodes = _node_axis_size(int(mesh[1]), P, avail // rows)
+    return rows, nodes
+
+
 def _binary_chunks(n_rec: int) -> Tuple[int, ...]:
     """Greedy pow2 decomposition of the record count, largest first.
 
@@ -139,7 +225,8 @@ def _binary_chunks(n_rec: int) -> Tuple[int, ...]:
 
 def plan_sweep(n_ticks: int, measure_idx: Sequence[int], B: int, P: int, *,
                batch: int, d: int, k_max: int, masked: bool,
-               has_churn: bool, n_devices: Optional[int] = None) -> SweepPlan:
+               has_churn: bool, n_devices: Optional[int] = None,
+               mesh: Optional[Tuple[int, int]] = None) -> SweepPlan:
     """Choose stride, chunk schedule and mesh placement for one sweep.
 
     Args:
@@ -152,29 +239,32 @@ def plan_sweep(n_ticks: int, measure_idx: Sequence[int], B: int, P: int, *,
       k_max: static β-sample slot count (0 = no sampled rows).
       masked: per-row alive-masked sampling (churn or ragged padding) —
         the memory-dominant case (B·P² scores per tick).
-      has_churn: churn uniforms are drawn per row per tick.
-      n_devices: mesh size; default every local device
+      n_devices: rows-axis size; default every local device
         (``PSP_SWEEP_DEVICES`` overrides), clamped to B so no device
-        owns zero rows.
+        owns zero rows.  Ignored when a mesh is requested.
+      mesh: explicit ``(rows, nodes)`` factorization
+        (``PSP_SWEEP_MESH=RxN`` overrides ``None``).  Clamped like the
+        1-D request: rows to B and the host's devices, nodes to the
+        largest divisor of P fitting the remaining device budget, so a
+        stale override degrades instead of failing.
     """
-    if n_devices is None:
-        n_devices = int(os.environ.get("PSP_SWEEP_DEVICES", "0")) or None
-    import jax
-    avail = len(jax.devices())
-    if n_devices is None:
-        n_devices = avail
-    # clamp: no device may own zero rows, and a request beyond the host's
-    # devices (e.g. a stale env override) degrades instead of failing
-    ndev = max(1, min(int(n_devices), B, avail))
+    rows, nodes = resolve_mesh(B, P, mesh=mesh, n_devices=n_devices)
+    ndev = rows * nodes
     # each device's row block pads up to the data-plane GEMM width
     # (DATA_PLANE_BLOCK), so neither the fused tick nor the kernel ever
     # pays a per-tick pad copy; padded rows are inert (negative horizon)
     # and the control plane's cost on them is negligible
     from repro.kernels.psp_tick import DATA_PLANE_BLOCK
-    b_loc = math.ceil(math.ceil(B / ndev) / DATA_PLANE_BLOCK) \
+    b_loc = math.ceil(math.ceil(B / rows) / DATA_PLANE_BLOCK) \
         * DATA_PLANE_BLOCK
-    b_pad = b_loc * ndev
-    node_pad = math.ceil(P / ndev) * ndev
+    b_pad = b_loc * rows
+    # node-keyed draw slots: each nodes-axis shard owns an exact P/nodes
+    # node block, and splits its block's draws over the rows axis (the
+    # rows of one node column draw disjoint id ranges and all-gather), so
+    # the slot count pads to the rows axis *within* each node column —
+    # the 1-D plan's ceil(P/ndev)·ndev, per column
+    p_loc = P // nodes
+    node_pad = nodes * math.ceil(p_loc / rows) * rows
 
     # the engine draws per-row noise for every PADDED row (keys are
     # global row ids, inert rows included), so the memory estimate must
@@ -193,4 +283,4 @@ def plan_sweep(n_ticks: int, measure_idx: Sequence[int], B: int, P: int, *,
     n_rec = sum(chunks)
     return SweepPlan(stride=stride, n_rec=n_rec, n_rec_live=n_rec_live,
                      chunks=chunks, n_devices=ndev, b_pad=b_pad,
-                     node_pad=node_pad)
+                     node_pad=node_pad, mesh=(rows, nodes), p_loc=p_loc)

@@ -21,13 +21,20 @@ donated scans** laid out by :func:`repro.core.sweep_plan.plan_sweep`:
   reuses the state pytree's buffers across chunks instead of
   double-buffering them.  The chunk loop early-exits once every row is
   past its horizon, so scheduled-but-dead superticks are never executed.
-* The scenario dimension is sharded over a 1-D device mesh with
-  ``shard_map`` (the degenerate 1-device mesh on an unflagged CPU).
-  Per-row noise is keyed by *global row id* and shared noise by *global
-  node id* (the minibatch blob is drawn in node slices and
-  all-gathered), so every mesh size consumes identical draws and
-  ``run_sweep(backend="jax")`` is **bit-identical** across device
-  counts — multi-device is transparent.
+* The batch is sharded over a 2-D ``(rows, nodes)`` device mesh with
+  ``shard_map`` (axis names from :mod:`repro.parallel.sharding`; the
+  degenerate 1×1 mesh on an unflagged CPU IS the single-device engine).
+  The scenario dimension shards over ``rows``; the P node slots — state,
+  node-keyed draws, the minibatch blob — stay **node-sliced** over
+  ``nodes`` end-to-end, and the tick's cross-node reductions run as
+  collectives (:func:`repro.kernels.psp_tick.psp_tick_sharded`).
+  Per-row noise is keyed by *global row id* and node-keyed noise by
+  *global node id*, with every draw either sliced from the full-width
+  stream or assembled from disjoint global-id blocks, so every mesh
+  factorization consumes identical draws and ``run_sweep(backend="jax")``
+  is **bit-identical** across device counts *and* factorizations —
+  multi-device is transparent (``tests/test_vector_sim_jax.py``'s
+  cross-mesh equivalence suite pins this).
 
 The scan itself performs zero host transfers: inputs are staged (and
 sharded) once by :func:`_prepare`, chunks hand the donated carry to each
@@ -63,8 +70,18 @@ Design notes for the hot path:
   with ``dt`` to stay above f32 resolution at the horizon.
 * The compiled chunk scan is cached by structural signature
   (``P, d, batch, k_max, has_churn, masked, adaptive, impl, stride,
-  ndev``) so repeated sweeps of the same shape (the common
+  rows, nodes``) so repeated sweeps of the same shape (the common
   benchmark/test pattern) compile once per chunk length.
+* Node sharding (``nodes > 1``, opt-in via ``PSP_SWEEP_MESH=RxN``) keeps
+  the carried ``(B, P)`` state and the supertick noise blocks sliced to
+  ``P_loc = P / nodes`` per shard — the memory that caps system size at
+  100k+ nodes — while the tick gathers only one tick's worth of
+  transients to full width where bit-identity demands reference shapes
+  (the β-sample peer view, the data-plane contraction; see
+  ``psp_tick_sharded``).  The nodes axis must divide P exactly — the
+  planner clamps to the nearest divisor — because a padded node slot
+  would widen the full-view reductions and flip fully-alive batches onto
+  the masked sampling path.
 * Adaptive barrier policies (dssp / ebsp / β-annealing) ride in the
   scanned carry as the :data:`~repro.kernels.psp_tick.POLICY_STATE_KEYS`
   pytree entries; static batches have ``adaptive=False`` and compile the
@@ -84,18 +101,29 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.simulator import SimResult
 from repro.core.sweep_plan import plan_sweep
 from repro.kernels import ops
 from repro.kernels.psp_tick import POLICY_STATE_KEYS, STATE_KEYS
+from repro.parallel.sharding import (SWEEP_NODES_AXIS, SWEEP_ROWS_AXIS,
+                                     sweep_mesh)
 
 __all__ = ["run_batch", "tick_impl"]
 
 #: params entries replicated across the mesh (everything else is per-row
-#: or per-node and therefore sharded on the leading axis)
+#: or per-node and therefore sharded)
 _REPLICATED_PARAMS = frozenset({"key", "eps", "poll"})
+
+#: params entries with a trailing node dimension — sharded over the
+#: ``nodes`` mesh axis alongside the node-dimensioned carry
+_NODE_PARAMS = frozenset({"compute_time", "valid_slot"})
+
+#: carry entries with a node dimension (axis 1); everything else in the
+#: carry is per-row only and rides replicated over the nodes axis
+_NODE_CARRY = frozenset({"steps", "alive", "computing", "event_time",
+                         "ready", "blocked", "pulled", "pol_ema"})
 
 
 def tick_impl() -> str:
@@ -110,42 +138,64 @@ def tick_impl() -> str:
 
 def _row_spec(ndim: int) -> PartitionSpec:
     """Leading-axis row sharding for an ``ndim``-rank per-row array."""
-    return PartitionSpec(*(("rows",) + (None,) * (ndim - 1)))
+    return PartitionSpec(*((SWEEP_ROWS_AXIS,) + (None,) * (ndim - 1)))
+
+
+def _node_spec(ndim: int) -> PartitionSpec:
+    """(B, P, ...) sharding: rows on axis 0, node slots on axis 1."""
+    return PartitionSpec(*((SWEEP_ROWS_AXIS, SWEEP_NODES_AXIS)
+                           + (None,) * (ndim - 2)))
 
 
 def _specs(params: Dict, carry: Dict, xs: Dict) -> Tuple[Dict, Dict, Dict]:
     """(params, carry, xs) partition-spec pytrees for the chunk scan.
 
-    Per-row arrays shard on their leading (B) axis, the churn schedules
-    on their trailing row axis, everything else is replicated.  The same
-    trees drive both ``shard_map`` and the input staging in
-    :func:`_prepare`, so staged buffers land exactly where the compiled
-    scan expects them (no resharding copy on call).
+    Per-row arrays shard on their leading (B) axis over ``rows``;
+    node-dimensioned arrays (:data:`_NODE_CARRY` / :data:`_NODE_PARAMS`)
+    additionally shard their P axis over ``nodes``; ``node_ids`` shards
+    its single axis over both (nodes-major: each node column's draw-id
+    block splits over the rows axis — see the supertick blob draw); the
+    churn schedules shard on their trailing row axis; everything else is
+    replicated.  The same trees drive both ``shard_map`` and the input
+    staging in :func:`_prepare`, so staged buffers land exactly where the
+    compiled scan expects them (no resharding copy on call).
     """
-    p_specs = {k: (PartitionSpec() if k in _REPLICATED_PARAMS
-                   else _row_spec(np.ndim(v))) for k, v in params.items()}
-    c_specs = {k: _row_spec(np.ndim(v)) for k, v in carry.items()}
+    def p_spec(k, v):
+        if k in _REPLICATED_PARAMS:
+            return PartitionSpec()
+        if k == "node_ids":
+            return PartitionSpec((SWEEP_NODES_AXIS, SWEEP_ROWS_AXIS))
+        if k in _NODE_PARAMS:
+            return _node_spec(np.ndim(v))
+        return _row_spec(np.ndim(v))
+
+    p_specs = {k: p_spec(k, v) for k, v in params.items()}
+    c_specs = {k: (_node_spec(np.ndim(v)) if k in _NODE_CARRY
+                   else _row_spec(np.ndim(v))) for k, v in carry.items()}
     x_specs = {"sup": PartitionSpec(), "t": PartitionSpec(),
-               "leave": PartitionSpec(None, None, "rows"),
-               "join": PartitionSpec(None, None, "rows")}
+               "leave": PartitionSpec(None, None, SWEEP_ROWS_AXIS),
+               "join": PartitionSpec(None, None, SWEEP_ROWS_AXIS)}
     return p_specs, c_specs, {k: x_specs[k] for k in xs}
 
 
 @functools.lru_cache(maxsize=32)
 def _compiled_chunk(P: int, d: int, batch: int, k_max: int, has_churn: bool,
                     masked: bool, adaptive: bool, impl: str, stride: int,
-                    ndev: int):
+                    rows: int, nodes: int):
     """(jitted chunk scan, mesh), specialised on structural shape.
 
     The returned function maps ``(params, carry, xs) -> (carry', (err,
     upd))`` where ``xs`` covers one chunk of superticks; the carry is
-    donated, the B axis is sharded over ``ndev`` devices.  Chunk length
-    only changes input shapes, so jit's own cache specialises per pow2
-    block while this wrapper caches the mesh + shard_map plumbing.
+    donated, the B axis is sharded over the ``rows`` mesh axis and the P
+    node slots over ``nodes``.  Chunk length only changes input shapes,
+    so jit's own cache specialises per pow2 block while this wrapper
+    caches the mesh + shard_map plumbing.
     """
-    mesh = Mesh(np.array(jax.devices()[:ndev]), ("rows",))
+    mesh = sweep_mesh(rows, nodes)
+    p_loc = P // nodes           # planner guarantees nodes | P
+    node_axis = SWEEP_NODES_AXIS if nodes > 1 else None
     kw = dict(k_max=k_max, has_churn=has_churn, masked=masked,
-              adaptive=adaptive, impl=impl)
+              adaptive=adaptive, impl=impl, node_axis=node_axis)
     state_keys = STATE_KEYS + (POLICY_STATE_KEYS if adaptive else ())
 
     def tick(params, carry, xt):
@@ -161,47 +211,64 @@ def _compiled_chunk(P: int, d: int, batch: int, k_max: int, has_churn: bool,
     def supertick(params, carry, x):
         # one batched noise block per supertick: a handful of keyed
         # jax.random calls instead of per-tick dispatch.  Per-row noise
-        # is keyed by global row id, shared noise by global node id, so
-        # every mesh size consumes identical draws (bit-identical
-        # sharding); the minibatch blob is drawn in node slices and
-        # all-gathered so its RNG cost shards with the mesh.
+        # is keyed by global row id, node-keyed noise by global node id,
+        # and every draw reaches the tick either as the shard's slice of
+        # the full-width stream (row-keyed draws are drawn full and
+        # sliced to the local node columns — the values cannot depend on
+        # the factorization) or assembled from disjoint global-id blocks
+        # (the blob and shared-score draws below), so every mesh shape
+        # consumes identical noise — the cross-mesh bit-identity
+        # invariant.  On the 1×1 mesh all slices are identity and this
+        # is exactly the single-device draw.
         row_ids, node_ids = params["row_ids"], params["node_ids"]
+        nid0 = lax.axis_index(SWEEP_NODES_AXIS) * p_loc
         k_sup = jax.random.fold_in(params["key"], x["sup"])
         k_mini, k_samp, k_dur, k_churn = jax.random.split(k_sup, 4)
         fold = jax.vmap(jax.random.fold_in, (None, 0))
         # minibatch blob keyed per (tick, node): the draw comes out in
         # scan layout directly (stride leading), so no supertick-sized
-        # transpose sits between the RNG and the tick loop
+        # transpose sits between the RNG and the tick loop.  node_ids is
+        # nodes-major — each node column's rows-padded id block splits
+        # over the rows axis, so the gather over *rows* reassembles the
+        # column's global ids [nid0, nid0 + p_loc) in order and the blob
+        # stays node-sliced (the 100k-node memory win): no shard ever
+        # materialises the (stride, P, m, d+1) block
         kt = fold(k_mini, x["sup"] * stride + jnp.arange(stride))
         blob_loc = jax.vmap(lambda k: jax.vmap(
             lambda kk: jax.random.normal(kk, (batch, d + 1)))(
-                fold(k, node_ids)))(kt)               # (stride, n_loc, ...)
-        blob = lax.all_gather(blob_loc, "rows", axis=1,
-                              tiled=True)[:, :P]      # (stride, P, m, d+1)
+                fold(k, node_ids)))(kt)               # (stride, ids_loc, ...)
+        blob = lax.all_gather(blob_loc, SWEEP_ROWS_AXIS, axis=1,
+                              tiled=True)[:, :p_loc]  # (stride, p_loc, ...)
         dur = jnp.moveaxis(jax.vmap(
             lambda k: jax.random.uniform(k, (stride, P)))(
                 fold(k_dur, row_ids)), 1, 0)          # (stride, b_loc, P)
         xt = {"t": x["t"], "lc": x["leave"], "jc": x["join"],
-              "X": blob[..., :d], "mb": blob[..., d], "dur": dur}
+              "X": blob[..., :d], "mb": blob[..., d],
+              "dur": lax.dynamic_slice_in_dim(dur, nid0, p_loc, 2)}
         if k_max > 0:
             if masked:
-                xt["scores"] = jnp.moveaxis(jax.vmap(
+                sc = jnp.moveaxis(jax.vmap(
                     lambda k: jax.random.uniform(k, (stride, P, P)))(
                         fold(k_samp, row_ids)), 1, 0)
+                # slice the deciding-node axis; peers keep full width
+                xt["scores"] = lax.dynamic_slice_in_dim(sc, nid0, p_loc, 2)
             elif k_max == 1:
-                xt["u1"] = jax.random.uniform(k_samp, (stride, P))
+                u1 = jax.random.uniform(k_samp, (stride, P))
+                xt["u1"] = lax.dynamic_slice_in_dim(u1, nid0, p_loc, 1)
             else:
                 sc_loc = jax.vmap(
                     lambda k: jax.random.uniform(k, (stride, P)))(
                         fold(k_samp, node_ids))
-                sc = lax.all_gather(sc_loc, "rows", tiled=True)
-                xt["scores"] = jnp.moveaxis(sc, 1, 0)[:, :P]
+                sc = lax.all_gather(sc_loc, SWEEP_ROWS_AXIS, tiled=True)
+                xt["scores"] = jnp.moveaxis(sc, 1, 0)[:, :p_loc]
         if has_churn:
             cu = jax.vmap(
                 lambda k: jax.random.uniform(k, (stride, 2, P)))(
                     fold(k_churn, row_ids))
-            xt["leave"] = jnp.moveaxis(cu[:, :, 0], 0, 1)
-            xt["join"] = jnp.moveaxis(cu[:, :, 1], 0, 1)
+            xt["leave"] = lax.dynamic_slice_in_dim(
+                jnp.moveaxis(cu[:, :, 0], 0, 1), nid0, p_loc, 2)
+            xt["join"] = lax.dynamic_slice_in_dim(
+                jnp.moveaxis(cu[:, :, 1], 0, 1), nid0, p_loc, 2)
         carry, _ = lax.scan(functools.partial(tick, params), carry, xt)
         err = (jnp.linalg.norm(carry["w"] - params["w_true"], axis=1)
                / params["w_true_norm"])
@@ -213,12 +280,14 @@ def _compiled_chunk(P: int, d: int, batch: int, k_max: int, has_churn: bool,
     def sharded(params, carry, xs):
         specs = _specs(params, carry, xs)
         # check_rep=False: pallas_call (the interpret/TPU tick) has no
-        # replication rule; correctness is pinned by the mesh-size
-        # bit-identity test instead
+        # replication rule; correctness is pinned by the cross-mesh
+        # bit-identity suite instead.  Traces (and the per-row carry) are
+        # replicated over the nodes axis — their out_specs mention only
+        # rows, so shard_map keeps one copy
         return shard_map(chunk, mesh=mesh, in_specs=specs,
                          out_specs=(specs[1],
-                                    (PartitionSpec(None, "rows"),
-                                     PartitionSpec(None, "rows"))),
+                                    (PartitionSpec(None, SWEEP_ROWS_AXIS),
+                                     PartitionSpec(None, SWEEP_ROWS_AXIS))),
                          check_rep=False)(params, carry, xs)
 
     return jax.jit(sharded, donate_argnums=(1,)), mesh
@@ -262,12 +331,19 @@ def _prepare(sim):
 
     seed = np.random.SeedSequence(
         [int(c.seed) for c in sim.configs] + [B, P, d]).generate_state(1)[0]
+    # node-keyed draw ids, nodes-major: each node column's global ids
+    # [n·p_loc, (n+1)·p_loc) padded up to the rows axis (the pad ids
+    # overlap the next column — drawn redundantly, sliced away after the
+    # rows gather).  On the 1-D mesh this is exactly arange(node_pad).
+    col = plan.node_pad // plan.nodes
+    node_ids = (np.arange(col)[None, :]
+                + plan.p_loc * np.arange(plan.nodes)[:, None]).reshape(-1)
     params = {
         "key": jax.random.PRNGKey(int(seed)),
         "eps": jnp.asarray(eps, f32),
         "poll": jnp.asarray(sim.poll_interval, f32),
         "row_ids": jnp.arange(Bp, dtype=jnp.int32),
-        "node_ids": jnp.arange(plan.node_pad, dtype=jnp.int32),
+        "node_ids": jnp.asarray(node_ids, jnp.int32),
         "w_true": jnp.asarray(pad_rows(sim.w_true), f32),
         # padded rows never tick; a unit norm keeps their (discarded)
         # error trace finite
@@ -338,7 +414,7 @@ def _prepare(sim):
 
     chunk_fn, mesh = _compiled_chunk(P, d, sim.batch, k_max, sim.has_churn,
                                      masked, adaptive, tick_impl(),
-                                     plan.stride, plan.n_devices)
+                                     plan.stride, plan.rows, plan.nodes)
     p_specs, c_specs, _ = _specs(params, carry,
                                  {"sup": 0, "t": 0, "leave": 0, "join": 0})
     shard = lambda spec: NamedSharding(mesh, spec)

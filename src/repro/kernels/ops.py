@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_tpu
-from repro.kernels.psp_tick import psp_tick_ref, psp_tick_tpu
+from repro.kernels.psp_tick import (psp_tick_ref, psp_tick_sharded,
+                                    psp_tick_tpu)
 from repro.kernels.rmsnorm import rmsnorm_tpu
 from repro.kernels.ssd_scan import ssd_scan_tpu
 
@@ -99,9 +100,59 @@ def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
     return ref.rmsnorm_ref(x, w, eps)
 
 
+#: state/noise/param entries carrying a node dimension — the pytree slices
+#: a node shard owns under a 2-D ``(rows, nodes)`` sweep mesh
+_NODE_STATE = ("steps", "alive", "computing", "event_time", "ready",
+               "blocked", "pulled", "pol_ema")
+
+
+def _psp_tick_gathered(state, rand, params, t, leave_n, join_n, *,
+                       k_max: int, has_churn: bool, masked: bool,
+                       adaptive: bool, interpret: bool, node_axis: str):
+    """Kernel path under a node-sharded mesh: gather → full tick → slice.
+
+    The Pallas kernel has no collective form, so each node shard gathers
+    the node-dimensioned operands to full width, runs the exact
+    single-shard kernel (identical operand shapes ⇒ identical bits to the
+    unsharded call), and keeps only its own node slice of the outputs.
+    Memory-wise this is the pre-sharding footprint for one tick's
+    transients — the *carried* state stays node-sliced — which is the
+    honest trade until a collective Mosaic tick exists.
+    """
+    Pl = state["steps"].shape[1]
+    g1 = lambda x: jax.lax.all_gather(x, node_axis, axis=1, tiled=True)
+    g0 = lambda x: jax.lax.all_gather(x, node_axis, axis=0, tiled=True)
+    st = {k: (g1(v) if k in _NODE_STATE else v) for k, v in state.items()}
+    rd = dict(rand)
+    rd["dur"] = g1(rd["dur"])
+    rd["X"], rd["mb"] = g0(rd["X"]), g0(rd["mb"])
+    if "scores" in rd:      # masked scores are (B, Pl, P); shared (Pl, P)
+        rd["scores"] = g1(rd["scores"]) if rd["scores"].ndim == 3 \
+            else g0(rd["scores"])
+    if "u1" in rd:
+        rd["u1"] = g0(rd["u1"])
+    if has_churn:
+        rd["leave"], rd["join"] = g1(rd["leave"]), g1(rd["join"])
+    pr = dict(params)
+    pr["compute_time"] = g1(pr["compute_time"])
+    pr["valid_slot"] = g1(pr["valid_slot"])
+    new_state, out = psp_tick_tpu(st, rd, pr, t, leave_n, join_n,
+                                  k_max=k_max, has_churn=has_churn,
+                                  masked=masked, adaptive=adaptive,
+                                  interpret=interpret)
+    off = jax.lax.axis_index(node_axis) * Pl
+    sl = lambda x: jax.lax.dynamic_slice_in_dim(x, off, Pl, 1)
+    for k in _NODE_STATE:
+        if k in new_state:
+            new_state[k] = sl(new_state[k])
+    return new_state, {**out, "fin": sl(out["fin"]),
+                       "start": sl(out["start"])}
+
+
 def psp_tick(state, rand, params, t, leave_n, join_n, *,
              k_max: int, has_churn: bool, masked: bool,
-             adaptive: bool = False, impl: str = "auto"):
+             adaptive: bool = False, impl: str = "auto",
+             node_axis: Optional[str] = None):
     """One fused PSP sweep-grid tick — control plane *and* data plane
     (see :mod:`repro.kernels.psp_tick`).
 
@@ -111,8 +162,27 @@ def psp_tick(state, rand, params, t, leave_n, join_n, *,
     pre-drawn noise in ``rand``, so the sweep's RNG stream — and therefore
     its golden traces — are independent of ``impl``.  Not jitted here: the
     caller's ``lax.scan`` (:mod:`repro.core.vector_sim_jax`) traces it.
+
+    ``node_axis`` names the sweep mesh's node axis when the caller runs
+    under ``shard_map`` with node-sliced ``(B, P_loc)`` state (the 2-D
+    ``(rows, nodes)`` mesh of :mod:`repro.core.sweep_plan`): the reference
+    becomes :func:`~repro.kernels.psp_tick.psp_tick_sharded` (cross-node
+    reductions as exact collectives) and the kernel paths gather to full
+    width, tick, and slice back — both bit-identical to ``node_axis=None``
+    on unsharded state.
     """
     use_kernel, interp = _dispatch(impl)
+    if node_axis is not None:
+        if use_kernel or interp:
+            return _psp_tick_gathered(state, rand, params, t, leave_n,
+                                      join_n, k_max=k_max,
+                                      has_churn=has_churn, masked=masked,
+                                      adaptive=adaptive, interpret=interp,
+                                      node_axis=node_axis)
+        return psp_tick_sharded(state, rand, params, t, leave_n, join_n,
+                                k_max=k_max, has_churn=has_churn,
+                                masked=masked, adaptive=adaptive,
+                                node_axis=node_axis)
     if use_kernel or interp:
         return psp_tick_tpu(state, rand, params, t, leave_n, join_n,
                             k_max=k_max, has_churn=has_churn, masked=masked,

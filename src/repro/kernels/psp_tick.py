@@ -77,11 +77,12 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core import barrier_kernel
 
-__all__ = ["psp_tick_ref", "psp_tick_tpu", "STATE_KEYS",
+__all__ = ["psp_tick_ref", "psp_tick_sharded", "psp_tick_tpu", "STATE_KEYS",
            "POLICY_STATE_KEYS"]
 
 
@@ -345,6 +346,263 @@ def psp_tick_ref(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
     out = {"fin": fin, "start": start,
            "n_fin": jnp.sum(fin, axis=1).astype(jnp.int32), "ctrl": ctrl}
     return new_state, out
+
+# --------------------------------------------------------------------------- #
+# node-sharded reference (collectives over the sweep mesh's "nodes" axis)
+# --------------------------------------------------------------------------- #
+def _arg_first_max(s: jax.Array, gids: jax.Array, sentinel: int,
+                   axis_name: str) -> jax.Array:
+    """Global index of each row's first maximum, across node shards.
+
+    ``s`` (B, P_loc) is sentinel-masked scores (dead slots −1.0), ``gids``
+    the shard's global node ids.  Exactly ``jnp.argmax`` over the full
+    row: the maximum is an exact f32 ``pmax`` and the tie-break takes the
+    lowest global index (first occurrence — global node order is shard
+    order × local order), so the collective form is bit-free of the
+    factorization.
+    """
+    m = lax.pmax(jnp.max(s, axis=1), axis_name)
+    i_loc = jnp.min(jnp.where(s == m[:, None], gids[None, :], sentinel),
+                    axis=1)
+    return lax.pmin(i_loc, axis_name)
+
+
+def psp_tick_sharded(state: Dict[str, jax.Array], rand: Dict[str, jax.Array],
+                     params: Dict[str, jax.Array], t: jax.Array,
+                     leave_n: jax.Array, join_n: jax.Array, *,
+                     k_max: int, has_churn: bool, masked: bool,
+                     adaptive: bool = False, node_axis: str = "nodes",
+                     ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """One full tick on node-sharded state: :func:`psp_tick_ref` with the
+    cross-node reductions as collectives over ``node_axis``.
+
+    Called under ``shard_map`` on a ``(rows, nodes)`` mesh
+    (:mod:`repro.core.vector_sim_jax`): every node-dimensioned operand —
+    state (``steps`` … ``pulled``), per-node noise (``dur``, score rows,
+    churn uniforms, the minibatch blob) and per-node params
+    (``compute_time``, ``valid_slot``) — arrives sliced to the shard's
+    contiguous ``P_loc = P / nodes`` node block, and β-sample score rows
+    are keyed by global node id so each shard draws exactly its slice.
+
+    **Bit-identity contract** (the reason this function exists instead of
+    a generic re-layout): every output element equals
+    :func:`psp_tick_ref`'s for *any* nodes-axis size, because each
+    cross-node reduction is one of
+
+    * an order-free exact collective — ``pmin``/``pmax`` over step
+      counters and event times, integer ``psum`` counts, the
+      first-argmax churn victim/joiner selection (:func:`_arg_first_max`);
+    * a pure selection over a gathered full-width operand — the β-sample
+      ``top_k``/indexing consumes all-gathered ``steps``/``alive`` (bools
+      and i32 gather bit-exactly) with the shard's own score rows;
+    * the data-plane contraction on gathered full-width inputs — the one
+      genuine f32 reduction over P keeps the reference's exact operand
+      shapes (:func:`_data_plane_block` at width P), so XLA picks the
+      same reduction order for every factorization.  The *stored* blob
+      and views stay node-sliced; only one tick's worth is ever
+      materialized full-width.
+
+    The nodes axis must divide P exactly (the planner guarantees it) —
+    a padded node slot would widen these reductions and void the
+    contract.
+    """
+    steps, alive = state["steps"], state["alive"]
+    computing, blocked = state["computing"], state["blocked"]
+    event_time, ready = state["event_time"], state["ready"]
+    B, Pl = steps.shape
+    i32 = jnp.int32
+    eps, poll = params["eps"], params["poll"]
+    gids = lax.axis_index(node_axis) * Pl + jnp.arange(Pl, dtype=i32)
+    active = t <= params["horizon"] + eps
+
+    def nsum(x):
+        return lax.psum(jnp.sum(x, axis=1), node_axis)
+
+    def gather(x, axis=1):
+        return lax.all_gather(x, node_axis, axis=axis, tiled=True)
+
+    # 0. churn — mirrors psp_tick_ref phase 0 with the row reductions
+    #    (alive count, victim/joiner argmax, freshest step) collective
+    if has_churn:
+        pend_l = state["pend_leave"] + leave_n
+        pend_j = state["pend_join"] + join_n
+        do_l = active & (pend_l > 0) & (nsum(alive) > 2)
+        victim = _arg_first_max(jnp.where(alive, rand["leave"], -1.0),
+                                gids, _I32_MAX, node_axis)
+        alive = alive & ~(do_l[:, None] & (victim[:, None] == gids[None]))
+        pool = ~alive & params["valid_slot"]
+        do_j = active & (pend_j > 0) & (nsum(pool) > 0)
+        joiner = _arg_first_max(jnp.where(pool, rand["join"], -1.0),
+                                gids, _I32_MAX, node_axis)
+        sel = do_j[:, None] & (joiner[:, None] == gids[None])
+        alive = alive | sel
+        fresh = lax.pmax(jnp.max(jnp.where(alive, steps, _I32_MIN), axis=1),
+                         node_axis)
+        steps = jnp.where(sel, fresh[:, None], steps)
+        computing = computing & ~sel
+        event_time = jnp.where(sel, t, event_time)
+        ready = jnp.where(sel, t, ready)
+        blocked = blocked & ~sel
+        pend_leave = jnp.where(active, pend_l - (pend_l > 0),
+                               state["pend_leave"])
+        pend_join = jnp.where(active, pend_j - (pend_j > 0),
+                              state["pend_join"])
+    else:
+        pend_leave, pend_join = state["pend_leave"], state["pend_join"]
+
+    # 1. finishes (elementwise; row_last is an exact f32 max)
+    fin = computing & alive & (event_time <= t + eps) & active[:, None]
+    any_fin = nsum(fin) > 0
+    row_last = lax.pmax(jnp.max(jnp.where(fin, event_time, -jnp.inf),
+                                axis=1), node_axis)
+    row_unblock = jnp.where(any_fin, jnp.minimum(row_last, t), t)
+    steps = steps + fin
+    computing = computing & ~fin
+    ready = jnp.where(fin, event_time, ready)
+    blocked = blocked & ~fin
+
+    # 2. barrier decisions.  The full-view min is a pmin; the β-sample
+    #    consults gathered steps/alive (exact) with the shard's own
+    #    node-keyed score rows — selection only, no cross-shard f32 math
+    cand = ~computing & alive & (event_time <= t + eps) & active[:, None]
+    steps_full = gather(steps)
+    P = steps_full.shape[1]
+    piota = jnp.arange(P, dtype=i32)
+    stal = jnp.broadcast_to(params["staleness"][:, None], (B, Pl))
+    beta_eff = params["beta_clip"][:, None]
+    if adaptive:
+        live = jnp.where(alive, state["pol_ema"], 0.0)
+        mx = lax.pmax(jnp.max(live, axis=1), node_axis)
+        frac = 1.0 - state["pol_ema"] / jnp.maximum(mx[:, None], 1e-9)
+        slack = jnp.floor(params["ebsp_range"][:, None] * frac).astype(i32)
+        stal = jnp.where(params["is_dssp"][:, None],
+                         state["pol_thr"][:, None],
+                         jnp.where(params["is_ebsp"][:, None], slack, stal))
+        beta_eff = jnp.where(params["is_anneal"], state["pol_beta"],
+                             params["beta_clip"])[:, None]
+    min_alive = lax.pmin(jnp.min(jnp.where(alive, steps, _I32_MAX), axis=1),
+                         node_axis)
+    pass_fv = steps - min_alive[:, None] <= stal
+    if k_max > 0:
+        if masked:
+            # sample_alive_peer_indices_jax with the deciding axis
+            # sliced: per-node top-k over the full gathered peer width
+            alive_full = gather(alive)
+            sc = jnp.where(~alive_full[:, None, :]
+                           | (gids[None, :, None] == piota[None, None, :]),
+                           2.0, rand["scores"])            # (B, Pl, P)
+            neg, take = lax.top_k(-sc, k_max)
+            valid = -neg < 1.5
+            peer = jnp.take_along_axis(
+                jnp.broadcast_to(steps_full[:, None, :], (B, Pl, P)),
+                take, axis=-1)
+        elif k_max == 1:
+            # sample_peer_indices_jax's β = 1 branch on global node ids
+            draw = jnp.floor(rand["u1"] * max(P - 1, 1)).astype(i32)
+            take = jnp.minimum(draw + (draw >= gids), P - 1)   # (Pl,)
+            peer = steps_full[:, take][:, :, None]
+            valid = jnp.broadcast_to(
+                jnp.arange(1) < P - 1, peer.shape)
+        else:
+            # shared-score top-k: the shard draws its deciding nodes'
+            # score rows (global-node keyed), peers span the full width
+            sc = jnp.where(gids[:, None] == piota[None, :], 2.0,
+                           rand["scores"])                 # (Pl, P)
+            _, take = lax.top_k(-sc, k_max)
+            peer = steps_full[:, take]                     # (B, Pl, k)
+            valid = jnp.broadcast_to(
+                jnp.arange(k_max) < P - 1, peer.shape)
+        valid = valid & (jnp.arange(peer.shape[-1]) < beta_eff[..., None])
+        lag_ok = steps[..., None] - peer <= stal[..., None]
+        pass_sm = jnp.all(lag_ok | ~valid, axis=-1)
+        n_sampled = jnp.sum(valid, axis=-1)
+    else:
+        pass_sm = jnp.ones((B, Pl), dtype=bool)
+        n_sampled = jnp.zeros((B, Pl), dtype=i32)
+    passed = jnp.where(params["is_asp"][:, None], True,
+                       jnp.where(params["full_view"][:, None],
+                                 pass_fv, pass_sm))
+    ctrl = lax.psum(jnp.sum(
+        jnp.where(cand, n_sampled * params["dist_hops"][:, None], 0),
+        axis=1), node_axis).astype(i32)
+
+    # 3. starts / re-polls (elementwise given the per-row row_unblock)
+    start = cand & passed
+    t0 = jnp.where(blocked & params["full_view"][:, None],
+                   jnp.maximum(row_unblock[:, None], ready), ready)
+    dur = barrier_kernel.step_duration(rand["dur"], params["compute_time"])
+    event_time = jnp.where(start, t0 + dur, event_time)
+    computing = computing | start
+    fail = cand & ~passed
+    blocked = (blocked | fail) & ~start
+    sm_fail = fail & params["sampled"][:, None]
+    ready = jnp.where(sm_fail, ready + poll, ready)
+    event_time = jnp.where(sm_fail, ready, event_time)
+
+    # 3b. adaptive-policy updates: progress_gap from exact collectives
+    if adaptive:
+        mxs = lax.pmax(jnp.max(jnp.where(alive, steps, _I32_MIN), axis=1),
+                       node_axis)
+        mns = lax.pmin(jnp.min(jnp.where(alive, steps, _I32_MAX), axis=1),
+                       node_axis)
+        gap = jnp.where(nsum(alive) > 0, mxs - mns, 0)
+        pol_thr = jnp.where(
+            params["is_dssp"] & active,
+            jnp.clip(gap, params["pol_lo"], params["staleness"]),
+            state["pol_thr"]).astype(i32)
+        pol_beta = jnp.where(
+            params["is_anneal"] & active,
+            jnp.clip(params["beta_lo"] + gap - params["staleness"],
+                     params["beta_lo"], params["beta_clip"]),
+            state["pol_beta"]).astype(i32)
+        al = params["ebsp_alpha"][:, None]
+        pol_ema = jnp.where(
+            params["is_ebsp"][:, None] & start,
+            (1.0 - al) * state["pol_ema"] + al * dur,
+            state["pol_ema"])
+
+    # 4. data plane: the one f32 reduction over P.  The contraction runs
+    #    on gathered full-width operands at the reference's exact shapes
+    #    (any node-sliced partial-sum scheme would change the reduction
+    #    order and break cross-factorization bit-identity); the server
+    #    model is per-row (replicated over the nodes axis), so every
+    #    shard computes the identical w and pulls only its own view slice
+    X = gather(rand["X"], axis=0)               # (P, m, d)
+    mbn = gather(rand["mb"], axis=0)            # (P, m)
+    fin_full = gather(fin)
+    pulled_full = gather(state["pulled"])       # (B, P, d)
+    w = state["w"]
+    diff = pulled_full - params["w_true"][:, None, :]
+    W = DATA_PLANE_BLOCK
+    Bp = -(-B // W) * W
+
+    def pad(a):
+        return a if Bp == B else jnp.concatenate(
+            [a, jnp.zeros((Bp - B,) + a.shape[1:], a.dtype)], axis=0)
+
+    d_p, f_p = pad(diff), pad(fin_full)
+    w_p = pad(w)
+    lr_p, ns_p = pad(params["lr"]), pad(params["noise_std"])
+    zero_pull = jnp.zeros((W,) + pulled_full.shape[1:], pulled_full.dtype)
+    w_blocks = [_data_plane_block(X, d_p[i:i + W], f_p[i:i + W],
+                                  jnp.zeros((W, X.shape[0]), bool),
+                                  w_p[i:i + W], zero_pull,
+                                  lr_p[i:i + W], ns_p[i:i + W], mbn)[0]
+                for i in range(0, Bp, W)]
+    w = jnp.concatenate(w_blocks)[:B]
+    pulled = jnp.where(start[..., None], w[:, None, :], state["pulled"])
+
+    new_state = {"steps": steps, "alive": alive, "computing": computing,
+                 "event_time": event_time, "ready": ready,
+                 "blocked": blocked, "pend_leave": pend_leave,
+                 "pend_join": pend_join, "w": w, "pulled": pulled}
+    if adaptive:
+        new_state.update(pol_thr=pol_thr, pol_ema=pol_ema,
+                         pol_beta=pol_beta)
+    out = {"fin": fin, "start": start,
+           "n_fin": nsum(fin).astype(i32), "ctrl": ctrl}
+    return new_state, out
+
 
 # --------------------------------------------------------------------------- #
 # Pallas kernel (one grid step per row block)

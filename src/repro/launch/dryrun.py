@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, INPUT_SHAPES, LONG_CONTEXT_ARCHS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import dryrun_inputs
-from repro.parallel.sharding import make_rules, use_rules
+from repro.parallel.sharding import make_rules, psp_worker_axes, use_rules
 from repro.roofline.analysis import (HW, collective_bytes, model_flops,
                                      roofline_report)
 from repro.roofline.hlo_cost import analyze_hlo
@@ -62,8 +62,7 @@ def run_psp_combo(arch: str, mesh_kind: str, out_dir: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = mesh.devices.size
     rules = make_rules(cfg, shape, mesh)
-    rules.table["psp_workers"] = (("pod", "data") if mesh_kind == "multi"
-                                  else ("data",))
+    rules.table["psp_workers"] = psp_worker_axes(mesh)
     # default: one PSP worker per (pod × data) shard group
     W = workers or (32 if mesh_kind == "multi" else 16)
     rec = {"arch": arch, "shape": "train_4k_psp", "mesh": mesh_kind,
@@ -103,8 +102,7 @@ def run_psp_combo(arch: str, mesh_kind: str, out_dir: str,
             leave_cursor=rep((), jnp.int32),
             join_cursor=rep((), jnp.int32))
         gb = shape.global_batch
-        spec = (P(("pod", "data"), None, None) if mesh_kind == "multi"
-                else P("data", None, None))
+        spec = P(psp_worker_axes(mesh), None, None)
         batch = {"tokens": jax.ShapeDtypeStruct(
             (W, gb // W, shape.seq_len), jnp.int32,
             sharding=NamedSharding(mesh, spec))}

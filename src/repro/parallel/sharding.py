@@ -22,10 +22,60 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["AxisRules", "make_rules", "spec_for", "constrain", "use_rules",
-           "current_rules"]
+__all__ = ["AxisRules", "PSP_WORKER_AXES", "SWEEP_NODES_AXIS",
+           "SWEEP_ROWS_AXIS", "constrain", "current_rules", "make_rules",
+           "psp_worker_axes", "spec_for", "sweep_mesh", "use_rules"]
 
 MeshAxes = Tuple[str, ...]
+
+# --------------------------------------------------------------------------- #
+# shared mesh-axis vocabulary
+#
+# Every engine that lays PSP state over devices names its axes from this
+# table, so the trainer and the sweep engines cannot drift into
+# incompatible sharding conventions:
+#
+# * the sweep engines (:mod:`repro.core.vector_sim_jax`) run a 2-D
+#   ``(rows, nodes)`` mesh — scenario rows over SWEEP_ROWS_AXIS, each
+#   scenario's P node slots over SWEEP_NODES_AXIS;
+# * the SPMD trainer (:mod:`repro.core.spmd_psp`) carries its worker
+#   dimension W on PSP_WORKER_AXES (the server psum reduces over exactly
+#   these axes), resolved against the production mesh by
+#   :func:`psp_worker_axes`.
+# --------------------------------------------------------------------------- #
+
+#: scenario-row axis of the sweep engines' 2-D mesh
+SWEEP_ROWS_AXIS = "rows"
+
+#: node-slot axis of the sweep engines' 2-D mesh (the P dimension)
+SWEEP_NODES_AXIS = "nodes"
+
+#: mesh axes that may carry the SPMD trainer's worker dimension, in
+#: major-to-minor order (a multi-pod worker is a (pod, data-row) pair)
+PSP_WORKER_AXES: MeshAxes = ("pod", "data")
+
+
+def sweep_mesh(rows: int, nodes: int = 1) -> Mesh:
+    """The sweep engines' ``(rows, nodes)`` device mesh.
+
+    The first ``rows × nodes`` local devices, rows-major — the planner
+    (:mod:`repro.core.sweep_plan`) guarantees the product fits the host.
+    The degenerate ``(1, 1)`` mesh is the single-device engine.
+    """
+    dev = np.array(jax.devices()[:rows * nodes]).reshape(rows, nodes)
+    return Mesh(dev, (SWEEP_ROWS_AXIS, SWEEP_NODES_AXIS))
+
+
+def psp_worker_axes(mesh: Optional[Mesh]) -> MeshAxes:
+    """The mesh axes carrying the trainer's worker dimension W.
+
+    :data:`PSP_WORKER_AXES` filtered to the axes the mesh actually has —
+    the single definition both the dry-run's ``psp_workers`` rules entry
+    and batch specs resolve through.
+    """
+    if mesh is None:
+        return ()
+    return tuple(a for a in PSP_WORKER_AXES if a in mesh.axis_names)
 
 
 class AxisRules:

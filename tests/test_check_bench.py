@@ -6,6 +6,11 @@ missing from the *fresh* run is a failure (a silently dropped benchmark
 must not pass), while a row missing from the *baseline* only is skipped
 — it was added by a PR newer than the committed ``BENCH_sweep.json`` and
 starts being gated once the baseline is regenerated.
+
+Jax-family rows additionally carry 2-D mesh metadata (``mesh`` /
+``mesh_axes`` / ``n_devices``): missing or incoherent metadata fails,
+and when baseline and fresh ran different device counts the gated
+metric is compared per device.
 """
 from __future__ import annotations
 
@@ -24,21 +29,27 @@ def _row(speedup, **extra):
     return {"speedup_vs_event": speedup, "seconds": 1.0, **extra}
 
 
+def _jrow(speedup, rows=1, nodes=1, **extra):
+    """A jax-family row with coherent 2-D mesh metadata."""
+    return _row(speedup, n_devices=rows * nodes, mesh=[rows, nodes],
+                mesh_axes={"rows": rows, "nodes": nodes}, **extra)
+
+
 BASELINE = {
     "event": {"seconds": 10.0},
     "numpy": _row(8.0),
-    "jax": _row(30.0, n_devices=1),
+    "jax": _jrow(30.0),
 }
 GATE = [("numpy", 0.25), ("jax", 0.25)]
 
 
 class TestCheck:
     def test_within_tolerance_passes(self):
-        fresh = {"numpy": _row(7.0), "jax": _row(28.0, n_devices=1)}
+        fresh = {"numpy": _row(7.0), "jax": _jrow(28.0)}
         assert check_bench.check(BASELINE, fresh, GATE) == []
 
     def test_regression_fails(self):
-        fresh = {"numpy": _row(2.0), "jax": _row(28.0, n_devices=1)}
+        fresh = {"numpy": _row(2.0), "jax": _jrow(28.0)}
         failures = check_bench.check(BASELINE, fresh, GATE)
         assert len(failures) == 1
         assert "numpy" in failures[0] and "FAIL" in failures[0]
@@ -54,8 +65,8 @@ class TestCheck:
         # the fresh run carries a row the committed baseline predates
         # (e.g. this PR's adaptive-policy benchmark additions): the gate
         # must note-and-skip it, not fail
-        fresh = {"numpy": _row(8.0), "jax": _row(30.0, n_devices=1),
-                 "pallas": _row(12.0)}
+        fresh = {"numpy": _row(8.0), "jax": _jrow(30.0),
+                 "pallas": _jrow(12.0)}
         gate = GATE + [("pallas", 0.45)]
         assert check_bench.check(BASELINE, fresh, gate) == []
         out = capsys.readouterr().out
@@ -63,21 +74,110 @@ class TestCheck:
         assert "baseline" in out
 
     def test_missing_metric_fails(self):
-        fresh = {"numpy": {"seconds": 1.0}, "jax": _row(30.0, n_devices=1)}
+        fresh = {"numpy": {"seconds": 1.0}, "jax": _jrow(30.0)}
         failures = check_bench.check(BASELINE, fresh, GATE)
         assert len(failures) == 1
         assert "numpy" in failures[0]
 
-    def test_mesh_mismatch_warns_but_does_not_fail(self, capsys):
-        fresh = {"numpy": _row(8.0), "jax": _row(30.0, n_devices=8)}
+
+class TestMesh2D:
+    """The 2-D mesh-metadata contract on jax-family rows."""
+
+    def test_missing_mesh_metadata_fails(self):
+        fresh = {"numpy": _row(8.0), "jax": _row(30.0, n_devices=1)}
+        failures = check_bench.check(BASELINE, fresh, GATE)
+        assert len(failures) == 1
+        assert "jax" in failures[0] and "mesh" in failures[0]
+
+    def test_incoherent_mesh_axes_fails(self):
+        row = _jrow(30.0, rows=4, nodes=2)
+        row["mesh_axes"] = {"rows": 2, "nodes": 4}     # transposed
+        fresh = {"numpy": _row(8.0), "jax": row}
+        failures = check_bench.check(BASELINE, fresh, GATE)
+        assert len(failures) == 1
+        assert "mesh_axes" in failures[0]
+
+    def test_device_count_mesh_product_mismatch_fails(self):
+        row = _jrow(30.0, rows=4, nodes=2)
+        row["n_devices"] = 4                           # lies about the mesh
+        fresh = {"numpy": _row(8.0), "jax": row}
+        failures = check_bench.check(BASELINE, fresh, GATE)
+        assert len(failures) == 1
+        assert "n_devices" in failures[0]
+
+    def test_numpy_rows_need_no_mesh(self):
+        # only jax-family rows carry a mesh; numpy stays schema-stable
+        fresh = {"numpy": _row(8.0), "jax": _jrow(28.0)}
         assert check_bench.check(BASELINE, fresh, GATE) == []
-        assert "mesh size differs" in capsys.readouterr().out
+
+    def test_differing_device_counts_compare_per_device(self, capsys):
+        # fresh ran an 8-device 2-D mesh vs the 1-device baseline: raw
+        # speedup 8× higher but identical per device → ok, with a note
+        fresh = {"numpy": _row(8.0), "jax": _jrow(240.0, rows=4, nodes=2)}
+        assert check_bench.check(BASELINE, fresh, GATE) == []
+        assert "per-device" in capsys.readouterr().out
+
+    def test_bigger_fresh_mesh_cannot_mask_a_regression(self):
+        # raw 80 > baseline 30, but per device it's 10 vs 30 → FAIL
+        fresh = {"numpy": _row(8.0), "jax": _jrow(80.0, rows=8, nodes=1)}
+        failures = check_bench.check(BASELINE, fresh, GATE)
+        assert len(failures) == 1
+        assert "jax" in failures[0] and "per-device" in failures[0]
+
+    def test_100k_row_gated_on_per_device_node_steps(self):
+        base = dict(BASELINE)
+        base["jax_100k"] = _jrow(None, rows=1, nodes=1,
+                                 node_steps_per_device_sec=1000.0)
+        gate = GATE + [("jax_100k", 0.6)]
+        # per-device metric: no renorm across device counts — 500/dev on
+        # an 8-device mesh is a genuine 2× per-device drop (within 60%)
+        ok = {"numpy": _row(8.0), "jax": _jrow(30.0),
+              "jax_100k": _jrow(None, rows=1, nodes=8,
+                                node_steps_per_device_sec=500.0)}
+        assert check_bench.check(base, ok, gate) == []
+        bad = dict(ok)
+        bad["jax_100k"] = _jrow(None, rows=1, nodes=8,
+                                node_steps_per_device_sec=100.0)
+        failures = check_bench.check(base, bad, gate)
+        assert len(failures) == 1
+        assert "jax_100k" in failures[0]
+        assert "node_steps_per_device_sec" in failures[0]
+
+    def test_mesh_only_skips_throughput_floor(self):
+        # the CI factorization matrix forces N host devices onto one
+        # CPU: per-device throughput drops ~Nx by construction, so the
+        # lane gates metadata coherence only — a heavy raw regression
+        # passes, but missing mesh metadata still fails
+        slow = {"numpy": _row(8.0), "jax": _jrow(1.0, rows=4, nodes=2)}
+        assert check_bench.check(BASELINE, slow, GATE, mesh_only=True) == []
+        bare = {"numpy": _row(8.0), "jax": _row(1.0, n_devices=8)}
+        failures = check_bench.check(BASELINE, bare, GATE, mesh_only=True)
+        assert len(failures) == 1
+        assert "mesh" in failures[0]
+
+    def test_mesh_only_still_fails_on_missing_row(self):
+        fresh = {"numpy": _row(8.0)}
+        failures = check_bench.check(BASELINE, fresh, GATE, mesh_only=True)
+        assert len(failures) == 1
+        assert "jax" in failures[0] and "fresh" in failures[0]
+
+    def test_100k_row_missing_mesh_fails(self):
+        base = dict(BASELINE)
+        base["jax_100k"] = _jrow(None, node_steps_per_device_sec=1000.0)
+        fresh = {"numpy": _row(8.0), "jax": _jrow(30.0),
+                 "jax_100k": _row(None, n_devices=8,
+                                  node_steps_per_device_sec=900.0)}
+        failures = check_bench.check(base, fresh,
+                                     GATE + [("jax_100k", 0.6)])
+        assert len(failures) == 1
+        assert "jax_100k" in failures[0] and "mesh" in failures[0]
 
 
 class TestParseEngines:
     def test_bare_names_take_defaults(self):
-        got = check_bench.parse_engines("numpy,jax,pallas", 0.25)
-        assert got == [("numpy", 0.25), ("jax", 0.25), ("pallas", 0.45)]
+        got = check_bench.parse_engines("numpy,jax,pallas,jax_100k", 0.25)
+        assert got == [("numpy", 0.25), ("jax", 0.25), ("pallas", 0.45),
+                       ("jax_100k", 0.6)]
 
     def test_explicit_tolerance_wins(self):
         got = check_bench.parse_engines("numpy:0.1,pallas:0.9", 0.25)
@@ -92,11 +192,25 @@ class TestMain:
 
     def test_cli_new_row_in_fresh_passes(self, tmp_path):
         base = self._dump(tmp_path, "base.json",
-                          {"numpy": _row(8.0), "jax": _row(30.0)})
+                          {"numpy": _row(8.0), "jax": _jrow(30.0)})
         fresh = self._dump(tmp_path, "fresh.json",
-                           {"numpy": _row(8.0), "jax": _row(30.0),
-                            "pallas": _row(12.0)})
+                           {"numpy": _row(8.0), "jax": _jrow(30.0),
+                            "pallas": _jrow(12.0),
+                            "jax_100k": _jrow(
+                                None, node_steps_per_device_sec=1000.0)})
         assert check_bench.main(["--baseline", base, "--fresh", fresh]) == 0
+
+    def test_cli_mesh_only_flag(self, tmp_path):
+        base = self._dump(tmp_path, "base.json",
+                          {"numpy": _row(8.0), "jax": _jrow(30.0)})
+        fresh = self._dump(tmp_path, "fresh.json",
+                           {"numpy": _row(8.0),
+                            "jax": _jrow(2.0, rows=4, nodes=2)})
+        assert check_bench.main(["--baseline", base, "--fresh", fresh,
+                                 "--engines", "numpy,jax",
+                                 "--mesh-only"]) == 0
+        assert check_bench.main(["--baseline", base, "--fresh", fresh,
+                                 "--engines", "numpy,jax"]) == 1
 
     def test_cli_regression_exits_nonzero(self, tmp_path):
         base = self._dump(tmp_path, "base.json", {"numpy": _row(8.0)})

@@ -8,7 +8,15 @@ mesh clamping, and the env overrides the benchmarks/tests rely on.
 import numpy as np
 import pytest
 
-from repro.core.sweep_plan import plan_sweep
+from repro.core.sweep_plan import parse_mesh, plan_sweep
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_mesh(monkeypatch):
+    """The CI factorization matrix exports PSP_SWEEP_MESH globally; the
+    planner tests exercise explicit arguments (and their own env cases),
+    so the ambient override must not leak in."""
+    monkeypatch.delenv("PSP_SWEEP_MESH", raising=False)
 
 
 def _measure_idx(n_ticks, every):
@@ -94,6 +102,109 @@ class TestMesh:
         assert plan.n_devices == 1
         # rows pad to the data-plane GEMM block width per device
         assert plan.b_pad == DATA_PLANE_BLOCK
+
+
+class TestParseMesh:
+    @pytest.mark.parametrize("spec,want", [
+        ("4x2", (4, 2)), ("1x1", (1, 1)), ("8X1", (8, 1)),
+        (" 2x4 ", (2, 4)), ("16x16", (16, 16)),
+    ])
+    def test_accepts_rxn(self, spec, want):
+        assert parse_mesh(spec) == want
+
+    @pytest.mark.parametrize("spec", [
+        "4x", "x2", "4", "axb", "4x2x1", "-4x2", "0x2", "4x0",
+        "4*2", "", "4 x 2",
+    ])
+    def test_rejects_malformed(self, spec):
+        with pytest.raises(ValueError):
+            parse_mesh(spec)
+
+
+class TestMesh2D:
+    def _plan(self, B=8, P=16, **kw):
+        kw.setdefault("batch", 4)
+        kw.setdefault("d", 8)
+        kw.setdefault("k_max", 1)
+        kw.setdefault("masked", False)
+        kw.setdefault("has_churn", False)
+        return plan_sweep(100, _measure_idx(100, 25), B, P, **kw)
+
+    def test_explicit_mesh_factorizes_devices(self):
+        import jax
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 devices")
+        plan = self._plan(mesh=(4, 2))
+        assert plan.mesh == (4, 2)
+        assert plan.n_devices == 8
+        assert plan.rows == 4 and plan.nodes == 2
+
+    def test_node_axis_must_divide_p_exactly(self):
+        import jax
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 devices")
+        # P = 100: a nodes=8 request degrades to the largest divisor ≤ 8
+        plan = self._plan(B=1, P=100, mesh=(1, 8))
+        assert plan.nodes == 5
+        assert plan.p_loc * plan.nodes == 100
+
+    def test_padding_invariants(self):
+        import jax
+        from repro.kernels.psp_tick import DATA_PLANE_BLOCK
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 devices")
+        for mesh, B, P in [((2, 4), 5, 12), ((4, 2), 7, 16),
+                           ((1, 8), 3, 24), ((8, 1), 9, 10)]:
+            plan = self._plan(B=B, P=P, mesh=mesh)
+            rows, nodes = plan.mesh
+            assert P % nodes == 0
+            assert plan.p_loc == P // nodes
+            # row blocks: GEMM-width padded, equal per rows-axis shard
+            assert plan.b_pad % (rows * DATA_PLANE_BLOCK) == 0
+            assert plan.b_pad >= B
+            # node-keyed draw slots: per node column, padded to the rows
+            # axis (each column's draws split over rows and all-gather)
+            col = plan.node_pad // nodes
+            assert col == -(-plan.p_loc // rows) * rows
+            assert plan.node_pad >= P
+
+    def test_degenerate_mesh_equals_1d_plan(self):
+        import jax
+        ndev = min(4, len(jax.devices()))
+        if ndev < 2:
+            pytest.skip("needs >1 device")
+        one_d = self._plan(n_devices=ndev)
+        two_d = self._plan(mesh=(ndev, 1))
+        assert two_d.mesh == (ndev, 1)
+        assert (two_d.stride, two_d.chunks, two_d.b_pad, two_d.node_pad,
+                two_d.n_devices) == \
+               (one_d.stride, one_d.chunks, one_d.b_pad, one_d.node_pad,
+                one_d.n_devices)
+
+    def test_env_override_and_precedence(self, monkeypatch):
+        import jax
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 devices")
+        monkeypatch.setenv("PSP_SWEEP_MESH", "2x4")
+        plan = self._plan()
+        assert plan.mesh == (2, 4)
+        # an explicit mesh kwarg beats the env override
+        plan = self._plan(mesh=(8, 1))
+        assert plan.mesh == (8, 1)
+        # malformed env specs fail loudly, not silently
+        monkeypatch.setenv("PSP_SWEEP_MESH", "8by1")
+        with pytest.raises(ValueError):
+            self._plan()
+
+    def test_rows_clamp_to_batch_then_nodes_fit_remaining(self):
+        import jax
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 devices")
+        # B=2 clamps rows 8→2; nodes budget is avail//rows = 4
+        plan = self._plan(B=2, P=16, mesh=(8, 4))
+        assert plan.rows == 2
+        assert plan.nodes == 4
+        assert plan.n_devices <= len(jax.devices())
 
 
 @pytest.mark.parametrize("B,ndev", [(5, 2), (7, 4), (1, 8)])

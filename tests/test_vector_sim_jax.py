@@ -312,6 +312,68 @@ class TestGoldenTrace:
         assert abs(a.mean_progress - b.mean_progress) \
             <= 0.2 * a.mean_progress + 1.0
 
+    def test_node_sharded_mesh_reproduces_golden(self, golden):
+        """The 2-D engine on a node-sharded mesh (P = 3 nodes across the
+        nodes axis) reproduces the committed 1-D jax golden exactly — no
+        regeneration allowed: node sharding must not perturb the RNG
+        layout."""
+        import jax
+        if len(jax.devices()) < 3:
+            pytest.skip("needs >=3 devices")
+        from repro.core import vector_sim_jax
+        ambient = os.environ.get("PSP_SWEEP_MESH")
+        os.environ["PSP_SWEEP_MESH"] = "1x3"
+        vector_sim_jax._compiled_chunk.cache_clear()
+        try:
+            r = self._run("jax")
+        finally:
+            if ambient is None:
+                os.environ.pop("PSP_SWEEP_MESH", None)
+            else:
+                os.environ["PSP_SWEEP_MESH"] = ambient
+            vector_sim_jax._compiled_chunk.cache_clear()
+        g = golden["jax"]
+        assert r.steps.tolist() == g["steps"]
+        assert r.total_updates == g["total_updates"]
+        assert r.server_updates.tolist() == g["server_updates"]
+        assert np.allclose(r.errors, g["errors"], rtol=1e-4, atol=1e-5)
+
+    def test_mesh_trace_matches_golden(self, golden):
+        """Dedicated 2-D golden: a churned 24-node pBSP row on a 2×4
+        mesh, pinned like the 1-D entries (regen via PSP_REGEN_GOLDEN=1
+        only after an intentional RNG-layout change)."""
+        import jax
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 devices")
+        from repro.core import vector_sim_jax
+        cfg = _scenario("pbsp", 0.2, True, 11)
+        ambient = os.environ.get("PSP_SWEEP_MESH")
+        os.environ["PSP_SWEEP_MESH"] = "2x4"
+        vector_sim_jax._compiled_chunk.cache_clear()
+        try:
+            r = run_sweep([cfg], backend="jax")[0]
+        finally:
+            if ambient is None:
+                os.environ.pop("PSP_SWEEP_MESH", None)
+            else:
+                os.environ["PSP_SWEEP_MESH"] = ambient
+            vector_sim_jax._compiled_chunk.cache_clear()
+        if os.environ.get("PSP_REGEN_GOLDEN"):
+            golden["jax_mesh2x4"] = {
+                "steps": r.steps.tolist(),
+                "total_updates": int(r.total_updates),
+                "server_updates": r.server_updates.tolist(),
+                "errors": [float(e) for e in r.errors],
+            }
+            with open(GOLDEN_PATH, "w") as f:
+                json.dump(golden, f, indent=1)
+            pytest.skip("2-D mesh golden trace regenerated")
+        g = golden["jax_mesh2x4"]
+        assert r.steps.tolist() == g["steps"]
+        assert r.total_updates == g["total_updates"]
+        assert r.server_updates.tolist() == g["server_updates"]
+        assert np.allclose(r.errors, g["errors"], rtol=1e-4, atol=1e-5)
+
 
 class TestVarianceBands:
     def test_band_shapes_and_enclosure(self):
@@ -427,6 +489,9 @@ class TestShardedSweeps:
     @staticmethod
     def _run(monkeypatch, ndev):
         from repro.core import vector_sim_jax
+        # an ambient PSP_SWEEP_MESH (the CI factorization matrix) would
+        # override PSP_SWEEP_DEVICES and make these 1-D tests vacuous
+        monkeypatch.delenv("PSP_SWEEP_MESH", raising=False)
         monkeypatch.setenv("PSP_SWEEP_DEVICES", str(ndev))
         vector_sim_jax._compiled_chunk.cache_clear()
         try:
@@ -458,6 +523,7 @@ class TestShardedSweeps:
             pytest.skip("needs >1 device")
         from repro.core import vector_sim_jax
         cfgs = self.CFGS[:3]             # 3 rows on a 2-device mesh
+        monkeypatch.delenv("PSP_SWEEP_MESH", raising=False)
         monkeypatch.setenv("PSP_SWEEP_DEVICES", "1")
         vector_sim_jax._compiled_chunk.cache_clear()
         single = run_sweep(cfgs, backend="jax")
@@ -468,6 +534,145 @@ class TestShardedSweeps:
         for a, b in zip(single, padded):
             np.testing.assert_array_equal(a.steps, b.steps)
             np.testing.assert_array_equal(a.errors, b.errors)
+
+
+class TestNodeShardedSweeps:
+    """2-D ``(rows × nodes)`` mesh: the P node dimension shards too.
+
+    Node-sliced state, collective reductions and node-keyed draws must be
+    bit-for-bit identical to the single-device engine across EVERY
+    factorization of the same device count — including churn (masked
+    sampling), ragged merged batches, adaptive policies and the
+    gather-run-slice kernel path.  The CI sharded lane runs this with 8
+    forced host devices, once per mesh in its factorization matrix."""
+
+    MESHES = ("8x1", "4x2", "2x4", "1x8")
+
+    @staticmethod
+    def _need(n):
+        import jax
+        if len(jax.devices()) < n:
+            pytest.skip(f"needs {n} devices "
+                        "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+
+    @staticmethod
+    def _sweep(cfgs, mesh, impl=None):
+        """run_sweep under a pinned mesh, snapshotting every result field
+        that the equivalence contract covers."""
+        from repro.core import vector_sim_jax
+        saved = {k: os.environ.get(k)
+                 for k in ("PSP_SWEEP_MESH", "PSP_TICK_IMPL")}
+        os.environ["PSP_SWEEP_MESH"] = mesh
+        if impl is not None:
+            os.environ["PSP_TICK_IMPL"] = impl
+        vector_sim_jax._compiled_chunk.cache_clear()
+        try:
+            return [(r.steps.copy(), r.errors.copy(),
+                     r.server_updates.copy(), int(r.total_updates),
+                     int(r.control_messages))
+                    for r in run_sweep(cfgs, backend="jax")]
+        finally:
+            for k, v in saved.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+            vector_sim_jax._compiled_chunk.cache_clear()
+
+    @classmethod
+    def _assert_factorizations_identical(cls, cfgs, meshes, impl=None):
+        base = cls._sweep(cfgs, "1x1")
+        for mesh in meshes:
+            other = cls._sweep(cfgs, mesh, impl=impl)
+            for b, o in zip(base, other):
+                for x, y in zip(b, o):
+                    assert np.array_equal(x, y), (mesh, impl, x, y)
+
+    def test_factorization_bit_identity(self):
+        """Static barriers (incl. a churn row → masked sampling and a
+        k=1 row → the draw fast path) across every 8-device
+        factorization."""
+        self._need(8)
+        cfgs = [_scenario("pssp", 0.2, False, 7),
+                _scenario("ssp", 0.0, False, 8),
+                _scenario("pbsp", 0.2, True, 9),
+                _scenario("asp", 0.1, False, 3)]
+        self._assert_factorizations_identical(cfgs, self.MESHES)
+
+    def test_ragged_merge_bit_identity(self):
+        """Ragged merged batches (different n_nodes in one compiled scan,
+        with churn): padded dead slots shard like live ones."""
+        self._need(8)
+        cfgs = [SimConfig(n_nodes=n, duration=3.0, dim=6, batch=4, seed=i,
+                          straggler_frac=0.2,
+                          churn_leave_rate=0.5 if i % 2 else 0.0,
+                          churn_join_rate=0.5 if i % 2 else 0.0,
+                          barrier=make_barrier("pssp", staleness=3,
+                                               sample_size=2))
+                for i, n in enumerate((9, 12, 16, 12))]
+        self._assert_factorizations_identical(cfgs, ("4x2", "1x8"))
+
+    def test_adaptive_policies_bit_identity(self):
+        """Stateful barrier policies carry per-row/per-node policy state
+        through the sharded scan."""
+        self._need(8)
+        cfgs = [_scenario("dssp", 0.2, False, 11),
+                _scenario("ebsp", 0.0, False, 12),
+                _scenario("apssp", 0.2, True, 13),
+                _scenario("apbsp", 0.0, False, 14)]
+        self._assert_factorizations_identical(cfgs, ("4x2", "1x8"))
+
+    def test_interpret_kernel_bit_identity(self):
+        """The Pallas-kernel path under a 2-D mesh (gather → full-width
+        tick → slice) against the unsharded reference."""
+        self._need(8)
+        cfgs = [_scenario("pssp", 0.2, False, 7),
+                _scenario("pbsp", 0.2, True, 9)]
+        self._assert_factorizations_identical(cfgs, ("2x4",),
+                                              impl="interpret")
+
+    def test_merged_horizons_bit_identity(self):
+        """Rows with different durations freeze independently per shard;
+        the early-exit boundary must not depend on the factorization."""
+        self._need(8)
+        cfgs = [dataclasses.replace(_scenario("pssp", 0.2, False, s),
+                                    duration=dur)
+                for s, dur in enumerate((5.0, 2.5, 5.0, 1.5))]
+        self._assert_factorizations_identical(cfgs, ("4x2", "1x8"))
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestNodeShardedScenarioMatrix:
+        """Hypothesis-driven barrier × straggler × churn × seed × mesh
+        matrix: every drawn scenario must be bit-identical between the
+        single-device engine and a drawn 2-D factorization."""
+
+        @given(name=st.sampled_from(FIVE + ("dssp", "apssp")),
+               frac=st.sampled_from((0.0, 0.2)),
+               churn=st.booleans(),
+               seed=st.integers(0, 997),
+               mesh=st.sampled_from(TestNodeShardedSweeps.MESHES))
+        @settings(max_examples=max(2, N_EXAMPLES // 2), deadline=None)
+        def test_scenario_bit_identity(self, name, frac, churn, seed, mesh):
+            TestNodeShardedSweeps._need(8)
+            cfgs = [_scenario(name, frac, churn, seed)]
+            TestNodeShardedSweeps._assert_factorizations_identical(
+                cfgs, (mesh,))
+
+else:
+
+    class TestNodeShardedScenarioMatrix:
+        @pytest.mark.parametrize("name,frac,churn,seed,mesh", [
+            (n, f, c, s, m) for (n, f, c, s), m in zip(
+                _fallback_matrix(),
+                itertools.cycle(TestNodeShardedSweeps.MESHES))
+        ][:max(2, N_EXAMPLES // 2)])
+        def test_scenario_bit_identity(self, name, frac, churn, seed, mesh):
+            TestNodeShardedSweeps._need(8)
+            cfgs = [_scenario(name, frac, churn, seed)]
+            TestNodeShardedSweeps._assert_factorizations_identical(
+                cfgs, (mesh,))
 
 
 class TestMergedHorizons:

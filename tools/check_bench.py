@@ -16,6 +16,22 @@ Pallas-interpret row is noisier on CPU (the interpreter lowers the
 kernel through extra masking), but a kernel-path collapse (e.g. a
 change that silently de-fuses the tick) still has to fail CI.
 
+Jax-family rows additionally carry 2-D mesh metadata (``mesh`` =
+``[rows, nodes]`` plus a ``mesh_axes`` table; see
+``benchmarks/sweep_bench.py --mesh``): a gated jax row *missing* that
+metadata fails — a silently un-meshed benchmark must not read as a
+pass — and when baseline and fresh ran different device counts the
+gated metric is normalized per device before comparison, so baselines
+transfer across mesh factorizations and runner sizes.  The 100k-node
+``jax_100k`` smoke row has no event-loop reference (that's its point);
+it is gated on ``node_steps_per_device_sec`` — already per-device, with
+a bit-identical numerator across factorizations — at a loose 60%
+tolerance that still catches a node-sharding collapse.  The CI
+factorization matrix runs ``--mesh-only`` instead: its lanes force N
+host devices onto one physical CPU, so per-device throughput drops ~Nx
+by construction and only row presence + mesh coherence are meaningful
+there.
+
 Usage (the CI fast lane runs exactly this)::
 
     python -m benchmarks.sweep_bench --out bench_fresh.json
@@ -41,10 +57,17 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_sweep.json")
 DEFAULT_TOLERANCE = 0.25
 #: per-engine default tolerance overrides (looser for the noisy
-#: interpret-mode kernel row)
-ENGINE_TOLERANCE = {"pallas": 0.45}
-DEFAULT_ENGINES = ("numpy", "jax", "pallas")
+#: interpret-mode kernel row; loosest for the raw-throughput 100k row,
+#: whose metric has no same-run event normalization)
+ENGINE_TOLERANCE = {"pallas": 0.45, "jax_100k": 0.6}
+DEFAULT_ENGINES = ("numpy", "jax", "pallas", "jax_100k")
 METRIC = "speedup_vs_event"
+#: per-engine gated-metric overrides
+ENGINE_METRIC = {"jax_100k": "node_steps_per_device_sec"}
+#: engines that must carry 2-D mesh metadata (mesh + mesh_axes)
+MESH_ENGINES = ("jax", "pallas", "jax_100k")
+#: metrics already normalized per device (skip the device renorm)
+PER_DEVICE_METRICS = ("node_steps_per_device_sec",)
 
 
 def load_engines(path: str) -> Dict[str, Dict]:
@@ -77,8 +100,34 @@ def parse_engines(spec: str, tolerance: float) -> List[Tuple[str, float]]:
     return out
 
 
+def mesh_errors(name: str, row: Dict) -> List[str]:
+    """Validate a jax-family row's 2-D mesh metadata; [] when coherent.
+
+    Requires ``mesh`` (a ``[rows, nodes]`` pair of positive ints),
+    ``mesh_axes`` naming the same sizes, and ``n_devices`` equal to
+    their product — so a row can't silently claim a placement it did
+    not run.
+    """
+    mesh = row.get("mesh")
+    axes = row.get("mesh_axes")
+    if (not isinstance(mesh, (list, tuple)) or len(mesh) != 2
+            or not all(isinstance(m, int) and m >= 1 for m in mesh)):
+        return [f"FAIL {name}: missing/malformed mesh metadata "
+                f"(mesh={mesh!r}; expected [rows, nodes])"]
+    errs = []
+    if (not isinstance(axes, dict)
+            or [axes.get("rows"), axes.get("nodes")] != list(mesh)):
+        errs.append(f"FAIL {name}: mesh_axes {axes!r} does not name "
+                    f"mesh {list(mesh)}")
+    if row.get("n_devices") != mesh[0] * mesh[1]:
+        errs.append(f"FAIL {name}: n_devices {row.get('n_devices')!r} "
+                    f"!= rows*nodes {mesh[0] * mesh[1]}")
+    return errs
+
+
 def check(baseline: Dict[str, Dict], fresh: Dict[str, Dict],
-          engines: List[Tuple[str, float]]) -> List[str]:
+          engines: List[Tuple[str, float]],
+          mesh_only: bool = False) -> List[str]:
     """Return one failure line per engine regressed beyond its tolerance.
 
     An engine missing from the *fresh* run is a failure — a silently
@@ -87,17 +136,22 @@ def check(baseline: Dict[str, Dict], fresh: Dict[str, Dict],
     newer PR added which the committed baseline predates; it starts
     being gated once the baseline is regenerated, and failing on it
     would force every row addition into a lock-step baseline bump.
+
+    Gated jax-family rows must carry coherent mesh metadata
+    (:func:`mesh_errors`); when baseline and fresh ran different device
+    counts, the gated metric is divided by each run's ``n_devices``
+    first (unless the metric is already per-device), so the one-sided
+    floor compares per-device throughput rather than letting a bigger
+    fresh mesh mask a real regression — or a smaller one fake it.
+
+    ``mesh_only=True`` gates row presence and mesh-metadata coherence
+    but skips the throughput floor entirely.  That's the mode for the
+    CI factorization matrix, which forces N host devices onto one
+    physical CPU: per-device throughput there drops ~Nx by
+    construction, so a floor comparison against the committed
+    single-device baseline would always fail without measuring
+    anything.  Throughput stays gated by the fast lane's 1-device run.
     """
-    jb, jf = baseline.get("jax", {}), fresh.get("jax", {})
-    if jb.get("n_devices") != jf.get("n_devices"):
-        # the event-loop normalization cancels host *speed* but not mesh
-        # size: more devices only loosen this one-sided gate, fewer can
-        # trip it without a real regression — surface it either way
-        print(f"WARN jax: mesh size differs (baseline "
-              f"n_devices={jb.get('n_devices')}, fresh "
-              f"{jf.get('n_devices')}); speedups are not directly "
-              "comparable — recalibrate the baseline on this runner "
-              "class (docs/BENCHMARKS.md)")
     failures = []
     for name, tolerance in engines:
         base_row, fresh_row = baseline.get(name), fresh.get(name)
@@ -106,22 +160,51 @@ def check(baseline: Dict[str, Dict], fresh: Dict[str, Dict],
             print(line)
             failures.append(line)
             continue
+        if name in MESH_ENGINES:
+            errs = mesh_errors(name, fresh_row)
+            for line in errs:
+                print(line)
+            failures.extend(errs)
+            if errs:
+                continue
+        if mesh_only:
+            mesh = fresh_row.get("mesh")
+            print(f"ok {name}: mesh metadata coherent"
+                  + (f" (mesh {mesh[0]}x{mesh[1]}, "
+                     f"{fresh_row.get('n_devices')} device(s))"
+                     if mesh else " (non-mesh row present)"))
+            continue
         if base_row is None:
             print(f"skip {name}: not in baseline (row newer than the "
                   "committed BENCH_sweep.json; regenerate the baseline "
                   "to gate it)")
             continue
-        base, got = base_row.get(METRIC), fresh_row.get(METRIC)
+        metric = ENGINE_METRIC.get(name, METRIC)
+        base, got = base_row.get(metric), fresh_row.get(metric)
         if base is None or got is None:
-            line = f"FAIL {name}: no {METRIC} in row"
+            line = f"FAIL {name}: no {metric} in row"
             print(line)
             failures.append(line)
             continue
+        note = ""
+        bd, fd = base_row.get("n_devices"), fresh_row.get("n_devices")
+        if (name in MESH_ENGINES and bd != fd
+                and metric not in PER_DEVICE_METRICS):
+            if not (isinstance(bd, int) and isinstance(fd, int)
+                    and bd >= 1 and fd >= 1):
+                line = (f"FAIL {name}: device counts differ (baseline "
+                        f"{bd!r}, fresh {fd!r}) and are not normalizable")
+                print(line)
+                failures.append(line)
+                continue
+            base, got = base / bd, got / fd
+            note = (f" [per-device: baseline ran {bd} device(s), "
+                    f"fresh {fd}]")
         floor = base * (1.0 - tolerance)
         status = "ok" if got >= floor else "FAIL"
-        line = (f"{status} {name}: {METRIC} {got:.2f}x vs baseline "
-                f"{base:.2f}x (floor {floor:.2f}x at "
-                f"{tolerance:.0%} tolerance)")
+        line = (f"{status} {name}: {metric} {got:.2f} vs baseline "
+                f"{base:.2f} (floor {floor:.2f} at "
+                f"{tolerance:.0%} tolerance){note}")
         print(line)
         if status == "FAIL":
             failures.append(line)
@@ -144,6 +227,11 @@ def main(argv=None) -> int:
                     help="comma-separated engine rows to gate, each "
                          "optionally suffixed :tolerance "
                          "(e.g. numpy,jax,pallas:0.5)")
+    ap.add_argument("--mesh-only", action="store_true",
+                    help="gate row presence + mesh-metadata coherence "
+                         "only, skipping the throughput floor (for "
+                         "forced-host-device CI lanes, where per-device "
+                         "throughput drops by construction)")
     a = ap.parse_args(argv)
 
     baseline = load_engines(a.baseline)
@@ -159,13 +247,15 @@ def main(argv=None) -> int:
     else:
         fresh = load_engines(a.fresh)
 
-    failures = check(baseline, fresh, parse_engines(a.engines, a.tolerance))
+    failures = check(baseline, fresh, parse_engines(a.engines, a.tolerance),
+                     mesh_only=a.mesh_only)
+    kind = "mesh-metadata" if a.mesh_only else "bench-regression"
     if failures:
-        print(f"bench-regression gate: {len(failures)} engine(s) regressed "
-              "beyond tolerance", file=sys.stderr)
+        print(f"{kind} gate: {len(failures)} engine(s) failed",
+              file=sys.stderr)
         return 1
-    print("bench-regression gate: all engines within tolerance",
-          file=sys.stderr)
+    print(f"{kind} gate: all engines within tolerance" if not a.mesh_only
+          else f"{kind} gate: all rows coherent", file=sys.stderr)
     return 0
 
 
