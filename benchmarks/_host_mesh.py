@@ -14,6 +14,10 @@ import os
 import sys
 
 if "jax" not in sys.modules:
+    # the one PSP_* read that can't go through repro.core.env: importing
+    # that package drags jax into the process before the XLA flag below
+    # is set, defeating the bootstrap.  The variable is still registered
+    # there (docs table + tests/test_env.py pin it).
     _n = os.environ.get("PSP_BENCH_HOST_DEVICES")
     _n = (os.cpu_count() or 1) if _n is None else int(_n)
     if _n > 1 and "xla_force_host_platform_device_count" \

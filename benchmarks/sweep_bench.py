@@ -41,6 +41,7 @@ from benchmarks import _host_mesh  # noqa: F401  (must precede jax import)
 
 import jax  # noqa: E402  (after the device-count bootstrap, by design)
 
+from repro.core import env                              # noqa: E402
 from repro.core.barriers import make_barrier            # noqa: E402
 from repro.core.simulator import SimConfig, run_simulation  # noqa: E402
 from repro.core.sweep_plan import parse_mesh, resolve_mesh  # noqa: E402
@@ -78,10 +79,9 @@ def enable_compile_cache() -> bool:
     ``PSP_COMPILE_CACHE=1`` to force it on anyway (e.g. on a host with a
     newer jaxlib).
     """
-    if os.environ.get("PSP_NO_COMPILE_CACHE"):
+    if env.flag("PSP_NO_COMPILE_CACHE"):
         return False
-    if (jax.default_backend() == "cpu"
-            and not os.environ.get("PSP_COMPILE_CACHE")):
+    if jax.default_backend() == "cpu" and not env.flag("PSP_COMPILE_CACHE"):
         return False
     cache_dir = os.environ.get("JAX_COMPILATION_CACHE_DIR",
                                os.path.abspath(CACHE_DIR))

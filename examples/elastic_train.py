@@ -62,6 +62,10 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore the newest checkpoint and continue "
                          "(no-op when --ckpt-dir holds none)")
+    ap.add_argument("--publish-dir", default=None,
+                    help="publish server_params snapshots here every "
+                         "--publish-every ticks (trainer→server bus)")
+    ap.add_argument("--publish-every", type=int, default=50)
     a = ap.parse_args()
 
     cfg = PSPConfig(barrier=a.barrier, n_workers=a.workers, sample_size=2,
@@ -85,6 +89,10 @@ def main():
     if a.ckpt_dir:
         mgr = CheckpointManager(a.ckpt_dir,
                                 CheckpointPolicy(every_steps=a.save_every))
+    pub = None
+    if a.publish_dir:
+        from repro.serving.snapshot_bus import SnapshotPublisher
+        pub = SnapshotPublisher(a.publish_dir, every_steps=a.publish_every)
     w_true, it = elastic_drive(cfg, D, a.ticks, state=state,
                                start_tick=start)
     print(f"{a.barrier} with churn {a.leave_rate}-/s {a.join_rate}+/s "
@@ -101,6 +109,14 @@ def main():
         if mgr:
             mgr.maybe_save(i + 1, state_to_tree(st),
                            {"barrier": a.barrier, "ticks": i + 1})
+        if pub:
+            pub.maybe_publish(i + 1, st.server_params,
+                              {"barrier": a.barrier})
+    if pub:
+        pub.publish(a.ticks, st.server_params, {"barrier": a.barrier},
+                    block=True)
+        pub.close()
+        print(f"published {pub.published} snapshots to {a.publish_dir}")
     if mgr:
         mgr.save(a.ticks, state_to_tree(st), {"barrier": a.barrier,
                                               "ticks": a.ticks}, block=True)

@@ -66,10 +66,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import os
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core import env
 
 __all__ = ["SweepPlan", "parse_mesh", "plan_sweep", "resolve_mesh"]
 
@@ -127,9 +128,9 @@ def _record_stride(n_ticks: int, measure_idx: np.ndarray,
     vals = np.concatenate([measure_idx + 1, [n_ticks]])
     q = int(np.gcd.reduce(vals.astype(np.int64)))
     cap = max(1, _NOISE_BUDGET // max(noise_bytes_per_tick, 1))
-    forced = os.environ.get("PSP_TRACE_STRIDE")
+    forced = env.get_int("PSP_TRACE_STRIDE")
     if forced:
-        cap = min(cap, max(1, int(forced)))
+        cap = min(cap, max(1, forced))
     best = 1
     for s in range(1, int(math.isqrt(q)) + 1):
         if q % s == 0:
@@ -187,12 +188,12 @@ def resolve_mesh(B: int, P: int,
     import jax
     avail = len(jax.devices())
     if mesh is None:
-        env_mesh = os.environ.get("PSP_SWEEP_MESH")
+        env_mesh = env.get_str("PSP_SWEEP_MESH")
         if env_mesh:
             mesh = parse_mesh(env_mesh)
     if mesh is None:
         if n_devices is None:
-            n_devices = int(os.environ.get("PSP_SWEEP_DEVICES", "0")) or None
+            n_devices = env.get_int("PSP_SWEEP_DEVICES") or None
         mesh = (avail if n_devices is None else int(n_devices), 1)
     rows = max(1, min(int(mesh[0]), B, avail))
     nodes = _node_axis_size(int(mesh[1]), P, avail // rows)
@@ -209,9 +210,9 @@ def _binary_chunks(n_rec: int) -> Tuple[int, ...]:
     length instead — the tail chunk is then *scheduled* past the live
     records and the runner's early exit skips it once every row is done.
     """
-    forced = os.environ.get("PSP_SWEEP_CHUNK")
+    forced = env.get_int("PSP_SWEEP_CHUNK")
     if forced:
-        c = max(1, int(forced))
+        c = max(1, forced)
         return tuple([c] * math.ceil(n_rec / c))
     out, left = [], n_rec
     while left > 0:

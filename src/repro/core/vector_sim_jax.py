@@ -93,7 +93,6 @@ Design notes for the hot path:
 from __future__ import annotations
 
 import functools
-import os
 from typing import Dict, List, Tuple
 
 import jax
@@ -103,6 +102,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.core import env
 from repro.core.simulator import SimResult
 from repro.core.sweep_plan import plan_sweep
 from repro.kernels import ops
@@ -133,7 +133,7 @@ def tick_impl() -> str:
     ``pallas`` / ``interpret`` / ``ref`` force a path (``interpret`` runs
     the kernel through the Pallas interpreter — the CPU test/bench path).
     """
-    return os.environ.get("PSP_TICK_IMPL", "auto")
+    return env.get_str("PSP_TICK_IMPL")
 
 
 def _row_spec(ndim: int) -> PartitionSpec:

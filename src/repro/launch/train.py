@@ -20,6 +20,12 @@ stream to the restored step, so a SIGKILL'd run resumed with the same
 flags reproduces the uninterrupted run bit-for-bit
 (``tests/test_checkpoint.py`` pins this with a real subprocess kill).
 
+Live serving: ``--publish-dir`` additionally publishes *serving
+snapshots* (params only — ``server_params`` in PSP mode) every
+``--publish-every`` steps over the trainer→server snapshot bus
+(:mod:`repro.serving.snapshot_bus`), plus one final snapshot; a live
+server (``repro.launch.serve --watch-dir``) hot-swaps them mid-traffic.
+
 CPU example (used by examples/train_e2e.py):
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
@@ -45,6 +51,7 @@ from repro.data import SyntheticLM
 from repro.launch.steps import make_train_step
 from repro.models import init_model, loss_fn
 from repro.optim import adamw, clip_by_norm, warmup_cosine
+from repro.serving.snapshot_bus import SnapshotPublisher
 
 
 def _make_manager(a) -> CheckpointManager | None:
@@ -105,6 +112,12 @@ def main(argv=None) -> int:
                     help="sleep per step; paces the run so kill-and-resume "
                          "tests get a deterministic mid-run kill window")
     ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--publish-dir", default=None,
+                    help="publish serving snapshots (params only) here "
+                         "for a live server (repro.launch.serve "
+                         "--watch-dir) to hot-swap")
+    ap.add_argument("--publish-every", type=int, default=25,
+                    help="snapshot-publication step cadence")
     a = ap.parse_args(argv)
 
     cfg = get_config(a.arch)
@@ -118,6 +131,8 @@ def main(argv=None) -> int:
     print(f"arch={cfg.name} params={n_params:,} barrier={a.barrier}")
 
     mgr = _make_manager(a)
+    pub = (SnapshotPublisher(a.publish_dir, every_steps=a.publish_every)
+           if a.publish_dir else None)
     meta = {"arch": cfg.name, "barrier": a.barrier}
     t0 = time.time()
     if a.barrier == "none":
@@ -138,6 +153,8 @@ def main(argv=None) -> int:
             if mgr:
                 mgr.maybe_save(t + 1, {"params": params, "opt_state": state},
                                {**meta, "data_step": t + 1})
+            if pub:
+                pub.maybe_publish(t + 1, params, meta)
             if a.throttle:
                 time.sleep(a.throttle)
         final_tree = {"params": params, "opt_state": state}
@@ -173,6 +190,8 @@ def main(argv=None) -> int:
             if mgr:
                 mgr.maybe_save(t + 1, state_to_tree(st),
                                {**meta, "data_step": t + 1})
+            if pub:
+                pub.maybe_publish(t + 1, st.server_params, meta)
             if a.throttle:
                 time.sleep(a.throttle)
         params = st.server_params
@@ -183,6 +202,11 @@ def main(argv=None) -> int:
                      block=True)
         mgr.close()
         print(f"checkpoint: step {mgr.latest_step()} in {a.ckpt_dir}")
+    if pub:
+        if a.steps > start:
+            pub.publish(a.steps, params, meta, block=True)
+        pub.close()
+        print(f"published {pub.published} snapshots to {a.publish_dir}")
     return 0
 
 

@@ -1,3 +1,17 @@
-from repro.serving.engine import ServeConfig, ServingEngine, sample_token
+from repro.serving.engine import (Completion, Request, ServeConfig,
+                                  ServingEngine, StepResult, sample_token)
+from repro.serving.server import InferenceServer, ServerStats
+from repro.serving.snapshot_bus import SnapshotPublisher, SnapshotWatcher
 
-__all__ = ["ServeConfig", "ServingEngine", "sample_token"]
+__all__ = [
+    "Completion",
+    "InferenceServer",
+    "Request",
+    "ServeConfig",
+    "ServerStats",
+    "ServingEngine",
+    "SnapshotPublisher",
+    "SnapshotWatcher",
+    "StepResult",
+    "sample_token",
+]

@@ -1,16 +1,43 @@
-"""Batched serving loop: continuous batched decode over a KV cache.
+"""Serving engine: request-lifecycle API over continuously batched decode.
 
-A thin production-shaped engine: requests (prompts) are admitted into a
-fixed-size batch; prefill builds the cache (per-request in this CPU build;
-batched prefill when prompts share a length); decode steps run batched with
-per-slot completion (EOS or token budget) and slot recycling.  ``serve_step``
-— one token for the whole batch against the cache — is exactly what the
-decode input shapes lower in the dry-run.
+The primary surface is JetStream-shaped — requests go in one at a time
+and the engine is *stepped*:
+
+* :meth:`ServingEngine.submit` — enqueue a :class:`Request`, get a
+  request id back immediately;
+* :meth:`ServingEngine.step` — one batched decode tick: admit queued
+  requests into free slots (batched prefill), sample one token for every
+  active slot, retire slots that finished (EOS / token budget / cache
+  capacity) as :class:`Completion`\\ s, then advance the KV caches one
+  decode step;
+* :meth:`ServingEngine.drain` — step until queue and slots are empty;
+* :meth:`ServingEngine.set_params` — hot-swap the model between decode
+  steps.  Swaps NEVER touch in-flight requests: each decode group pins
+  the params (and snapshot version) it started with, finishes on them,
+  and only newly admitted work sees the new snapshot.  This is PSP's
+  staleness tolerance applied at the serving edge — the trainer keeps
+  publishing, the server keeps decoding, nobody waits at a barrier.
+
+Slots live in fixed-width *decode groups* (``ServeConfig.batch`` slots,
+``ServeConfig.max_len`` cache capacity).  All slots of a group share one
+scalar cache clock, so admission into a running group left-pads the new
+prompt to the group's current length — exactly the padding semantics the
+wave engine always had (pads are attended), and the decode mask
+(``models/attention.py``) makes unused cache capacity numerically
+invisible, so a group's fixed-capacity cache decodes bit-identically to
+the old exact-fit wave cache.  A group whose snapshot is stale stops
+admitting and drains; a group with no active slots is dropped.
+
+``generate(prompts, embeds)`` remains as a thin compatibility wrapper:
+it submits one wave at a time and drains, which reproduces the legacy
+blocking wave-batch engine token-for-token (pinned by
+``tests/test_substrates.py``, incl. the per-wave-embeds regression).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +61,12 @@ def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Engine knobs.  ``max_len`` is the per-group cache capacity: every
+    request must satisfy ``prompt + frontend + max_new_tokens <= max_len``
+    and a slot whose group clock reaches it finishes with reason
+    ``"capacity"``.  ``max_groups`` bounds concurrently decoding groups
+    (admission back-pressure: excess requests wait in the queue)."""
+
     batch: int = 8
     max_len: int = 512
     max_new_tokens: int = 64
@@ -41,74 +74,318 @@ class ServeConfig:
     top_k: Optional[int] = None
     eos_id: Optional[int] = None
     seed: int = 0
+    max_groups: int = 4
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``embed`` is the per-request frontend embedding row ``(F, d_model)``
+    for architectures with ``cfg.frontend_tokens`` (zeros when omitted);
+    ``max_new_tokens=None`` takes the engine default.  ``req_id`` is
+    assigned by :meth:`ServingEngine.submit`.
+    """
+
+    prompt: np.ndarray
+    embed: Optional[np.ndarray] = None
+    max_new_tokens: Optional[int] = None
+    req_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request: generated ``tokens``, the ``snapshot_version``
+    it was served on (pinned at admission — never the mid-flight swap
+    target), and why it stopped (``"eos"`` | ``"length"`` |
+    ``"capacity"``)."""
+
+    req_id: int
+    tokens: np.ndarray
+    snapshot_version: int
+    prompt_len: int
+    finish_reason: str
+
+
+@dataclasses.dataclass
+class StepResult:
+    """One tick's outcome: finished requests plus every ``(req_id,
+    token)`` emitted this tick (for per-token latency accounting)."""
+
+    completions: List[Completion]
+    emitted: List[Tuple[int, int]]
+
+
+@dataclasses.dataclass
+class _Slot:
+    req_id: int
+    prompt_len: int
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+
+
+class _Group:
+    """A fixed-width decode group: ``batch`` slots sharing one cache
+    clock and one pinned ``(params, version)`` snapshot."""
+
+    def __init__(self, params, version: int, cache, logits, batch: int):
+        self.params = params
+        self.version = version
+        self.cache = cache
+        self.logits = logits                       # (batch, V) f32
+        self.slots: List[Optional[_Slot]] = [None] * batch
+        self.length: Optional[int] = None          # shared cache clock
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def free(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
 
 
 class ServingEngine:
-    """Synchronous batched decoder (single host, any number of devices)."""
+    """Continuously batched decoder with snapshot hot-swap (single host).
 
-    def __init__(self, params, cfg, serve_cfg: ServeConfig):
+    Not thread-safe: one thread drives ``submit``/``step``/``drain``/
+    ``set_params`` (``serving/server.py`` wraps it in an admission queue
+    + worker thread for concurrent callers).
+    """
+
+    def __init__(self, params, cfg, serve_cfg: ServeConfig, *,
+                 version: int = 0):
         self.params = params
         self.cfg = cfg
         self.scfg = serve_cfg
+        self.version = version
+        self._F = cfg.frontend_tokens or 0
+        if cfg.sliding_window and serve_cfg.max_len < cfg.sliding_window:
+            raise ValueError(
+                f"max_len {serve_cfg.max_len} < sliding_window "
+                f"{cfg.sliding_window}: the prefill ring cache would not "
+                "fit the group cache")
         self._key = jax.random.PRNGKey(serve_cfg.seed)
         self._decode = jax.jit(
             lambda p, c, t: decode_step(p, c, t, cfg),
             donate_argnums=(1,))   # the cache is consumed each step
+        self._queue: Deque[Request] = collections.deque()
+        self._groups: List[_Group] = []
+        self._next_id = 0
+        self.swaps = 0
 
+    # ------------------------------------------------------------------ #
+    # lifecycle API
+    # ------------------------------------------------------------------ #
+    def set_params(self, params, version: Optional[int] = None) -> int:
+        """Swap the serving snapshot between decode steps.
+
+        Groups already decoding keep the snapshot they pinned at
+        creation and stop admitting; new admissions build groups on the
+        new params.  Returns the (auto-incremented) new version.
+        """
+        self.params = params
+        self.version = self.version + 1 if version is None else version
+        self.swaps += 1
+        return self.version
+
+    def submit(self, req: Request) -> int:
+        """Validate + enqueue a request; returns its assigned id."""
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token array, "
+                             f"got shape {prompt.shape}")
+        mn = req.max_new_tokens or self.scfg.max_new_tokens
+        need = prompt.size + self._F + mn
+        if need > self.scfg.max_len:
+            raise ValueError(
+                f"request needs {need} cache slots (prompt {prompt.size} + "
+                f"frontend {self._F} + max_new {mn}) > max_len "
+                f"{self.scfg.max_len}")
+        if self._F and req.embed is not None:
+            emb = np.asarray(req.embed)
+            if emb.shape != (self._F, self.cfg.d_model):
+                raise ValueError(
+                    f"embed shape {emb.shape} != "
+                    f"({self._F}, {self.cfg.d_model})")
+        req = dataclasses.replace(req, prompt=prompt.astype(np.int32),
+                                  max_new_tokens=mn, req_id=self._next_id)
+        self._next_id += 1
+        self._queue.append(req)
+        return req.req_id
+
+    def has_pending(self) -> bool:
+        """Queued or in-flight work remains."""
+        return bool(self._queue) or any(g.active() for g in self._groups)
+
+    def step(self) -> StepResult:
+        """One batched decode tick (admit → sample/retire → decode)."""
+        self._admit()
+        completions: List[Completion] = []
+        emitted: List[Tuple[int, int]] = []
+        scfg = self.scfg
+        for g in self._groups:
+            active = g.active()
+            if not active:
+                continue
+            self._key, k = jax.random.split(self._key)
+            tok = sample_token(g.logits, k, scfg.temperature, scfg.top_k)
+            t = np.asarray(tok)
+            for i in active:
+                s = g.slots[i]
+                s.out.append(int(t[i]))
+                emitted.append((s.req_id, int(t[i])))
+                reason = None
+                if scfg.eos_id is not None and t[i] == scfg.eos_id:
+                    reason = "eos"
+                elif len(s.out) >= s.max_new:
+                    reason = "length"
+                elif g.length >= scfg.max_len:
+                    reason = "capacity"   # cache full: no further decode
+                if reason is not None:
+                    completions.append(Completion(
+                        req_id=s.req_id,
+                        tokens=np.asarray(s.out, np.int32),
+                        snapshot_version=g.version,
+                        prompt_len=s.prompt_len,
+                        finish_reason=reason))
+                    g.slots[i] = None
+            if g.active():
+                g.logits, g.cache = self._decode(g.params, g.cache,
+                                                 tok[:, None])
+                g.length += 1
+        self._groups = [g for g in self._groups if g.active()]
+        return StepResult(completions, emitted)
+
+    def drain(self) -> List[Completion]:
+        """Step until every queued and in-flight request completed."""
+        out: List[Completion] = []
+        while self.has_pending():
+            out.extend(self.step().completions)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # admission
+    # ------------------------------------------------------------------ #
+    def _fits_running(self, req: Request, g: _Group) -> bool:
+        """Left-pad admission into a running group's shared clock."""
+        return (g.version == self.version and g.free()
+                and req.prompt.size + self._F <= g.length
+                and g.length + req.max_new_tokens <= self.scfg.max_len)
+
+    def _admit(self):
+        """FIFO admission: fill running same-version groups first, then
+        open fresh groups up to ``max_groups``; head-of-line blocking is
+        deliberate (no reordering → deterministic, fair)."""
+        while self._queue:
+            head = self._queue[0]
+            target = next((g for g in self._groups
+                           if self._fits_running(head, g)), None)
+            if target is not None:
+                block = []
+                while (self._queue and len(block) < len(target.free())
+                       and self._fits_running(self._queue[0], target)):
+                    block.append(self._queue.popleft())
+                self._admit_block(target, block)
+                continue
+            if len(self._groups) >= self.scfg.max_groups:
+                return
+            block, L, mn = [], 0, 0
+            while self._queue and len(block) < self.scfg.batch:
+                r = self._queue[0]
+                L2 = max(L, r.prompt.size)
+                mn2 = max(mn, r.max_new_tokens)
+                if block and L2 + self._F + mn2 > self.scfg.max_len:
+                    break           # would overflow a co-admitted slot
+                L, mn = L2, mn2
+                block.append(self._queue.popleft())
+            self._groups.append(self._new_group())
+            self._admit_block(self._groups[-1], block)
+
+    def _new_group(self) -> _Group:
+        cache = init_cache(self.cfg, self.scfg.batch, self.scfg.max_len)
+        logits = jnp.zeros((self.scfg.batch, self.cfg.vocab_size),
+                           jnp.float32)
+        return _Group(self.params, self.version, cache, logits,
+                      self.scfg.batch)
+
+    def _admit_block(self, g: _Group, reqs: List[Request]):
+        """Prefill ``reqs`` together and scatter them into ``g``'s free
+        slots.  A fresh group's clock starts at the block's padded
+        length; a running group left-pads every prompt to its clock so
+        all slots stay on one cache offset."""
+        cfg, F = self.cfg, self._F
+        if g.length is None:
+            L_tok = max(r.prompt.size for r in reqs)
+            g.length = L_tok + F
+        else:
+            L_tok = g.length - F
+        k = len(reqs)
+        toks = np.zeros((k, L_tok), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, L_tok - r.prompt.size:] = r.prompt
+        emb = None
+        if F:
+            emb = np.zeros((k, F, cfg.d_model), np.float32)
+            for i, r in enumerate(reqs):
+                if r.embed is not None:
+                    emb[i] = np.asarray(r.embed, np.float32)
+            emb = jnp.asarray(emb, jnp.bfloat16)
+        logits, cache = prefill(g.params, jnp.asarray(toks), cfg,
+                                embeds=emb, max_len=self.scfg.max_len)
+        assert int(cache["length"]) == g.length
+        slots = g.free()[:k]
+        self._scatter(g, cache, logits, slots)
+        for slot, r in zip(slots, reqs):
+            g.slots[slot] = _Slot(req_id=r.req_id, prompt_len=r.prompt.size,
+                                  max_new=r.max_new_tokens)
+
+    def _scatter(self, g: _Group, cache, logits, slots: List[int]):
+        """Write a k-row prefill (cache rows + logits rows) into group
+        slot rows.  Group cache leaves carry the batch axis at position
+        1 under ``groups`` (scan-stacked over G) and 0 under ``tail``;
+        the scalar ``length`` clock is shared and already equal."""
+        idx = jnp.asarray(slots)
+
+        def rows(axis):
+            def one(dst, src):
+                sel = (slice(None),) * axis + (idx,)
+                return dst.at[sel].set(src.astype(dst.dtype))
+            return one
+
+        new = {"groups": jax.tree.map(rows(1), g.cache["groups"],
+                                      cache["groups"]),
+               "length": cache["length"]}
+        if "tail" in g.cache:
+            new["tail"] = jax.tree.map(rows(0), g.cache["tail"],
+                                       cache["tail"])
+        g.cache = new
+        g.logits = g.logits.at[idx].set(logits)
+
+    # ------------------------------------------------------------------ #
+    # legacy blocking API (compatibility wrapper)
+    # ------------------------------------------------------------------ #
     def generate(self, prompts: List[np.ndarray],
                  embeds: Optional[np.ndarray] = None
                  ) -> List[np.ndarray]:
-        """Greedy/sampled continuation for a list of token prompts.
+        """Blocking wave-batch generation (legacy surface).
 
-        Prompts are left-padded to a common length and processed in
-        batch-sized waves (prefill once per wave, then batched decode).
-        ``embeds``, when given, is aligned with ``prompts`` — one
-        frontend-embedding row per request, sliced per wave.
+        A thin wrapper over ``submit``/``drain``: prompts are submitted
+        in batch-sized waves and each wave is drained before the next is
+        admitted, which reproduces the historical wave engine exactly —
+        each wave decodes against its own requests' frontend embeddings
+        (the PR-7 regression), padded to the wave's own max prompt
+        length.
         """
-        out: List[np.ndarray] = []
+        if embeds is not None and len(embeds) != len(prompts):
+            raise ValueError(f"{len(prompts)} prompts got {len(embeds)} "
+                             "embeddings")
+        results: Dict[int, np.ndarray] = {}
+        ids: List[int] = []
         for start in range(0, len(prompts), self.scfg.batch):
             wave = prompts[start:start + self.scfg.batch]
-            # each wave decodes against ITS requests' frontend embeddings —
-            # slicing here (not `embeds[:B]` inside the wave) is what keeps
-            # wave 2+ from silently reusing wave 1's conditioning
-            emb = None if embeds is None else embeds[start:start + len(wave)]
-            out.extend(self._generate_wave(wave, emb))
-        return out
-
-    def _generate_wave(self, wave, embeds) -> List[np.ndarray]:
-        cfg, scfg = self.cfg, self.scfg
-        # pad prompts to a common length (left-pad with token 0)
-        L = max(len(p) for p in wave)
-        B = len(wave)
-        toks = np.zeros((B, L), np.int32)
-        for i, p in enumerate(wave):
-            toks[i, L - len(p):] = p
-        emb = None
-        if cfg.frontend_tokens:
-            if embeds is None:
-                emb = jnp.zeros((B, cfg.frontend_tokens, cfg.d_model),
-                                jnp.bfloat16)
-            else:
-                if len(embeds) != B:
-                    raise ValueError(
-                        f"wave of {B} prompts got {len(embeds)} embeddings")
-                emb = jnp.asarray(embeds, jnp.bfloat16)
-        logits, cache = prefill(
-            self.params, jnp.asarray(toks), cfg, embeds=emb,
-            max_len=L + (cfg.frontend_tokens or 0) + scfg.max_new_tokens)
-        done = np.zeros(B, bool)
-        outs: List[List[int]] = [[] for _ in range(B)]
-        tok = None
-        for _ in range(scfg.max_new_tokens):
-            self._key, k = jax.random.split(self._key)
-            tok = sample_token(logits, k, scfg.temperature, scfg.top_k)
-            t = np.asarray(tok)
-            for i in range(B):
-                if not done[i]:
-                    outs[i].append(int(t[i]))
-                    if scfg.eos_id is not None and t[i] == scfg.eos_id:
-                        done[i] = True
-            if done.all():
-                break
-            logits, cache = self._decode(self.params, cache, tok[:, None])
-        return [np.asarray(o, np.int32) for o in outs]
+            for j, p in enumerate(wave):
+                emb = None if embeds is None else embeds[start + j]
+                ids.append(self.submit(Request(prompt=np.asarray(p),
+                                               embed=emb)))
+            for c in self.drain():
+                results[c.req_id] = c.tokens
+        return [results[i] for i in ids]

@@ -1,0 +1,193 @@
+"""Inference server: admission queue + background decode worker.
+
+JetStream-offline-inference shape: callers from any thread ``submit()``
+into a bounded admission queue and get a ``concurrent.futures.Future``
+back; one worker thread owns the :class:`ServingEngine` outright and
+loops
+
+    drain inbox → (every ``poll_every`` ticks) poll the snapshot
+    watcher and hot-swap → ``engine.step()`` → resolve futures
+
+so the engine never needs locks.  Back-pressure is the queue bound:
+``submit`` blocks (or raises, with ``block=False``) when the server is
+``max_queue`` requests behind.  Requests are never dropped — a swap only
+redirects *future* admissions (see :meth:`ServingEngine.set_params`),
+and shutdown drains in-flight work before the worker exits.
+
+The worker also keeps the latency book: per-token wall-clock stamps from
+``StepResult.emitted``, per-request first-token/total latency, and the
+``swap_stall`` — wall time the decode loop spent loading a snapshot
+inside :meth:`SnapshotWatcher.poll`, which is exactly the serving-side
+cost of a hot-swap (``benchmarks/serve_bench.py`` reports its max).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional
+
+from repro.serving.engine import Completion, Request, ServingEngine
+from repro.serving.snapshot_bus import SnapshotWatcher
+
+__all__ = ["InferenceServer", "ServerStats"]
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Counters + raw latency samples (seconds) for one server run."""
+
+    submitted: int = 0
+    completed: int = 0
+    swaps: int = 0
+    snapshots_skipped: int = 0
+    steps: int = 0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    first_token_lat: List[float] = dataclasses.field(default_factory=list)
+    request_lat: List[float] = dataclasses.field(default_factory=list)
+    swap_stalls: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Tracked:
+    future: Future
+    t_submit: float
+    t_first: Optional[float] = None
+
+
+class InferenceServer:
+    """Threaded front-end over a :class:`ServingEngine`.
+
+    ``watcher=None`` serves a fixed snapshot; with a watcher the worker
+    polls every ``poll_every`` decode ticks (and when idle).  Use as a
+    context manager or call :meth:`shutdown`.
+    """
+
+    def __init__(self, engine: ServingEngine, *,
+                 watcher: Optional[SnapshotWatcher] = None,
+                 max_queue: int = 256, poll_every: int = 8,
+                 idle_wait: float = 0.01):
+        self.engine = engine
+        self.watcher = watcher
+        self.poll_every = poll_every
+        self.stats = ServerStats()
+        self._inbox: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self._tracked: Dict[int, _Tracked] = {}
+        self._idle_wait = idle_wait
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker,
+                                        name="serve-worker", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------ #
+    # caller side (any thread)
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request, *, block: bool = True,
+               timeout: Optional[float] = None) -> "Future[Completion]":
+        """Enqueue a request; the future resolves to its Completion.
+
+        Blocks when the admission queue is full (back-pressure); with
+        ``block=False`` raises ``queue.Full`` instead.
+        """
+        self._raise_worker_error()
+        if self._stop.is_set():
+            raise RuntimeError("server is shut down")
+        fut: "Future[Completion]" = Future()
+        self._inbox.put((req, fut, time.monotonic()), block=block,
+                        timeout=timeout)
+        return fut
+
+    def shutdown(self, *, drain: bool = True) -> None:
+        """Stop the worker; with ``drain`` (default) finish all admitted
+        and queued work first so no request is dropped."""
+        self._stop.set()
+        self._thread.join()
+        if drain:
+            self._drain_inbox()
+            while self.engine.has_pending():
+                self._tick(poll=False)
+        # anything still unresolved (drain=False) fails loudly
+        for tr in self._tracked.values():
+            if not tr.future.done():
+                tr.future.set_exception(RuntimeError("server shut down"))
+        self._tracked.clear()
+        self._raise_worker_error()
+
+    def __enter__(self) -> "InferenceServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------------ #
+    # worker side (single thread owns the engine)
+    # ------------------------------------------------------------------ #
+    def _worker(self):
+        try:
+            while not self._stop.is_set():
+                got = self._drain_inbox()
+                if not self.engine.has_pending():
+                    self._poll_watcher()        # swap while idle is free
+                    if not got:
+                        time.sleep(self._idle_wait)
+                    continue
+                self._tick(poll=self.stats.steps % self.poll_every == 0)
+        except BaseException as e:              # pragma: no cover - surfaced
+            self._error = e
+            self._stop.set()
+
+    def _drain_inbox(self) -> bool:
+        got = False
+        while True:
+            try:
+                req, fut, t_sub = self._inbox.get_nowait()
+            except queue.Empty:
+                return got
+            got = True
+            try:
+                rid = self.engine.submit(req)
+            except ValueError as e:             # unservable request
+                fut.set_exception(e)
+                continue
+            self._tracked[rid] = _Tracked(fut, t_sub)
+            self.stats.submitted += 1
+
+    def _poll_watcher(self):
+        if self.watcher is None:
+            return
+        t0 = time.monotonic()
+        loaded = self.watcher.poll()
+        self.stats.snapshots_skipped = self.watcher.skipped
+        if loaded is None:
+            return
+        params, version = loaded
+        self.engine.set_params(params, version)
+        self.stats.swaps += 1
+        self.stats.swap_stalls.append(time.monotonic() - t0)
+
+    def _tick(self, *, poll: bool):
+        if poll:
+            self._poll_watcher()
+        res = self.engine.step()
+        now = time.monotonic()
+        self.stats.steps += 1
+        for rid, _tok in res.emitted:
+            self.stats.token_times.append(now)
+            tr = self._tracked.get(rid)
+            if tr is not None and tr.t_first is None:
+                tr.t_first = now
+                self.stats.first_token_lat.append(now - tr.t_submit)
+        for comp in res.completions:
+            tr = self._tracked.pop(comp.req_id, None)
+            self.stats.completed += 1
+            if tr is not None:
+                self.stats.request_lat.append(now - tr.t_submit)
+                tr.future.set_result(comp)
+
+    def _raise_worker_error(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("serve worker thread failed") from err

@@ -1,0 +1,122 @@
+"""Trainer→server snapshot bus over a shared directory.
+
+The bus is the checkpoint subsystem worn sideways: the trainer publishes
+versioned model snapshots with the exact atomic npz + JSON-sidecar
+protocol of :mod:`repro.checkpoint` (sidecar renamed first, npz last, so
+a discoverable snapshot is always complete), and the server polls the
+directory for the newest publishable step.  No socket, no RPC, no
+coordination — a crash on either side leaves at worst a torn write that
+``latest_step`` refuses to select and the next publisher garbage-collects.
+
+* :class:`SnapshotPublisher` — trainer side.  Thin wrapper over
+  :class:`repro.checkpoint.manager.CheckpointManager`: async background
+  writer off the training critical path, bounded-queue back-pressure,
+  retention GC.  Publishes **serving params only** (not optimizer state),
+  stamping each snapshot's sidecar with its version.
+* :class:`SnapshotWatcher` — server side.  ``poll()`` returns a
+  ``(params, version)`` pair when a *new, loadable* snapshot appeared,
+  else ``None``.  Corrupt, torn, or config-mismatched snapshots are
+  skipped (remembered, so a permanently bad step is not re-tried every
+  poll) and the server keeps serving its current version — staleness
+  beats an outage, the same trade PSP makes at the training barrier.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+from repro.checkpoint import (CheckpointManager, CheckpointPolicy,
+                              latest_step, read_metadata, restore_checkpoint)
+
+PyTree = Any
+
+__all__ = ["SnapshotPublisher", "SnapshotWatcher"]
+
+
+class SnapshotPublisher:
+    """Trainer-side publisher: versioned serving snapshots, written
+    asynchronously with retention.
+
+    ``every_steps`` is the publication cadence for :meth:`maybe_publish`;
+    :meth:`publish` writes unconditionally.  ``keep`` old snapshots stay
+    on disk so a watcher mid-load never sees its file deleted under it
+    (retention deletes oldest-first and the watcher only reads the
+    newest).
+    """
+
+    def __init__(self, out_dir: str, *, every_steps: Optional[int] = None,
+                 keep: int = 3, async_write: bool = True):
+        self.out_dir = out_dir
+        self._mgr = CheckpointManager(
+            out_dir, CheckpointPolicy(every_steps=every_steps),
+            keep=keep, async_write=async_write)
+        self.published = 0
+
+    def maybe_publish(self, step: int, params: PyTree,
+                      metadata: Optional[dict] = None) -> bool:
+        """Publish iff the step cadence fires; returns whether it did."""
+        if not self._mgr.should_save(step):
+            return False
+        self.publish(step, params, metadata)
+        return True
+
+    def publish(self, step: int, params: PyTree,
+                metadata: Optional[dict] = None, *,
+                block: bool = False) -> None:
+        """Snapshot ``params`` to host and enqueue the atomic write."""
+        meta = {"kind": "serving_snapshot", "version": step,
+                **(metadata or {})}
+        self._mgr.save(step, params, meta, block=block)
+        self.published += 1
+
+    def wait(self) -> None:
+        """Block until every enqueued snapshot is on disk."""
+        self._mgr.wait()
+
+    def close(self) -> None:
+        self._mgr.close()
+
+    def __enter__(self) -> "SnapshotPublisher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class SnapshotWatcher:
+    """Server-side poller: loads the newest complete snapshot from a
+    directory into the structure of ``template``.
+
+    ``poll()`` is cheap when nothing changed (one ``listdir``).  Any
+    failure to load a candidate step — torn npz, shape/key mismatch from
+    a different config, file deleted between list and read — marks that
+    step bad and keeps the current version serving; a *newer* step is
+    still picked up normally.  ``strict=True`` re-raises instead (tests,
+    one-shot restore).
+    """
+
+    def __init__(self, watch_dir: str, template: PyTree, *,
+                 strict: bool = False):
+        self.watch_dir = watch_dir
+        self.template = template
+        self.strict = strict
+        self.loaded_step: Optional[int] = None
+        self.bad_steps: set = set()
+        self.skipped = 0
+
+    def poll(self) -> Optional[Tuple[PyTree, int]]:
+        """Return ``(params, version)`` if a new snapshot is loadable."""
+        step = latest_step(self.watch_dir)
+        if step is None or step == self.loaded_step or step in self.bad_steps:
+            return None
+        try:
+            params, _ = restore_checkpoint(self.watch_dir, self.template,
+                                           step)
+            meta = read_metadata(self.watch_dir, step)
+        except Exception:
+            if self.strict:
+                raise
+            self.bad_steps.add(step)
+            self.skipped += 1
+            return None
+        self.loaded_step = step
+        return params, int(meta.get("version", step))

@@ -224,3 +224,61 @@ class TestMain:
         with pytest.raises(ValueError):
             check_bench.main(["--baseline", str(bad),
                               "--fresh", str(bad)])
+
+
+def _serve(tokens_per_s=40.0, swaps=2, dropped=0, versions=(0, 1),
+           **extra):
+    """A serve_bench-schema result at the canonical load shape."""
+    return {"requests": 32, "rate_rps": 4.0, "batch": 4,
+            "max_new_tokens": 16, "tokens_per_s": tokens_per_s,
+            "swaps": swaps, "dropped": dropped,
+            "versions_served": list(versions),
+            "swap_stall_s": {"max": 0.03}, **extra}
+
+
+class TestServeGate:
+    """The serving-tier gate: swap/drop invariants always, the
+    throughput floor only at the baseline's load shape."""
+
+    def test_healthy_run_passes(self):
+        assert check_bench.check_serve(_serve(), _serve()) == []
+
+    def test_single_swap_fails(self):
+        fails = check_bench.check_serve(_serve(), _serve(swaps=1))
+        assert any("swap" in f for f in fails)
+
+    def test_dropped_request_fails(self):
+        fails = check_bench.check_serve(_serve(), _serve(dropped=3))
+        assert any("dropped" in f for f in fails)
+
+    def test_single_version_fails(self):
+        # two swaps but all completed traffic on one version: the run
+        # never actually served across a swap boundary
+        fails = check_bench.check_serve(_serve(), _serve(versions=(0,)))
+        assert any("versions" in f for f in fails)
+
+    def test_throughput_floor_at_matched_scale(self):
+        fails = check_bench.check_serve(_serve(tokens_per_s=100.0),
+                                        _serve(tokens_per_s=10.0))
+        assert any("tokens_per_s" in f for f in fails)
+        assert check_bench.check_serve(
+            _serve(tokens_per_s=100.0), _serve(tokens_per_s=50.0)) == []
+
+    def test_smoke_scale_skips_floor_not_invariants(self):
+        smoke = _serve(tokens_per_s=1.0, requests=9, rate_rps=16.0)
+        assert check_bench.check_serve(_serve(tokens_per_s=100.0),
+                                       smoke) == []
+        smoke_bad = _serve(tokens_per_s=1.0, requests=9, swaps=0)
+        assert check_bench.check_serve(_serve(), smoke_bad) != []
+
+    def test_cli_serve_mode(self, tmp_path):
+        base = tmp_path / "serve_base.json"
+        base.write_text(json.dumps(_serve()))
+        good = tmp_path / "serve_good.json"
+        good.write_text(json.dumps(_serve(tokens_per_s=35.0)))
+        bad = tmp_path / "serve_bad.json"
+        bad.write_text(json.dumps(_serve(dropped=1)))
+        assert check_bench.main(["--serve", "--baseline", str(base),
+                                 "--fresh", str(good)]) == 0
+        assert check_bench.main(["--serve", "--baseline", str(base),
+                                 "--fresh", str(bad)]) == 1

@@ -1,0 +1,84 @@
+"""The typed PSP_* env-override registry and its generated docs table."""
+import os
+
+import pytest
+
+from repro.core import env
+
+
+class TestAccessors:
+    def test_default_when_unset(self, monkeypatch):
+        monkeypatch.delenv("PSP_HYP_EXAMPLES", raising=False)
+        assert env.get_int("PSP_HYP_EXAMPLES") == 10
+        monkeypatch.delenv("PSP_TICK_IMPL", raising=False)
+        assert env.get_str("PSP_TICK_IMPL") == "auto"
+
+    def test_empty_string_is_unset(self, monkeypatch):
+        # `PSP_SWEEP_MESH= python ...` must CLEAR an ambient override
+        monkeypatch.setenv("PSP_SWEEP_MESH", "")
+        assert env.get_str("PSP_SWEEP_MESH") is None
+        monkeypatch.setenv("PSP_REGEN_GOLDEN", "")
+        assert env.flag("PSP_REGEN_GOLDEN") is False
+
+    def test_typed_reads(self, monkeypatch):
+        monkeypatch.setenv("PSP_SWEEP_DEVICES", "4")
+        assert env.get_int("PSP_SWEEP_DEVICES") == 4
+        monkeypatch.setenv("PSP_REGEN_GOLDEN", "1")
+        assert env.flag("PSP_REGEN_GOLDEN") is True
+        monkeypatch.setenv("PSP_SWEEP_MESH", "4x2")
+        assert env.get_str("PSP_SWEEP_MESH") == "4x2"
+
+    def test_garbage_int_names_the_variable(self, monkeypatch):
+        monkeypatch.setenv("PSP_SWEEP_CHUNK", "not-a-number")
+        with pytest.raises(ValueError, match="PSP_SWEEP_CHUNK"):
+            env.get_int("PSP_SWEEP_CHUNK")
+
+    def test_unregistered_name_raises(self):
+        with pytest.raises(KeyError, match="not a registered"):
+            env.get_str("PSP_TYPO_VAR")
+        with pytest.raises(KeyError):
+            env.flag("PSP_TYPO_VAR")
+
+
+class TestRegistry:
+    def test_kinds_are_valid(self):
+        for v in env.REGISTRY.values():
+            assert v.kind in ("str", "int", "float", "flag"), v.name
+            assert v.name.startswith("PSP_"), v.name
+            assert v.help, v.name
+
+    def test_docs_table_covers_registry(self):
+        # the ARCHITECTURE table is generated — regen with
+        # `python -m repro.core.env` if this fails after adding a var
+        doc = os.path.join(os.path.dirname(__file__), "..", "docs",
+                           "ARCHITECTURE.md")
+        with open(doc) as f:
+            text = f.read()
+        for name in env.REGISTRY:
+            assert f"`{name}`" in text, (
+                f"{name} is registered but missing from "
+                "docs/ARCHITECTURE.md (regen: python -m repro.core.env)")
+
+    def test_markdown_table_escapes_pipes(self):
+        table = env.markdown_table()
+        for line in table.splitlines()[2:]:
+            # 4 columns = exactly 5 unescaped pipes per row
+            assert line.replace("\\|", "").count("|") == 5, line
+
+    def test_every_registered_var_has_a_read_site(self):
+        # the registry types READS: a var nobody reads is dead weight.
+        # _host_mesh.py reads PSP_BENCH_HOST_DEVICES raw (pre-jax-import
+        # constraint, documented there), so grep source text instead of
+        # importing.
+        import glob
+        root = os.path.join(os.path.dirname(__file__), "..")
+        text = ""
+        for pat in ("src/repro/**/*.py", "benchmarks/*.py", "tests/*.py",
+                    "tools/*.py", "examples/*.py"):
+            for fn in glob.glob(os.path.join(root, pat), recursive=True):
+                if os.path.basename(fn) == "env.py":
+                    continue
+                with open(fn) as f:
+                    text += f.read()
+        for name in env.REGISTRY:
+            assert name in text, f"{name} registered but never read"

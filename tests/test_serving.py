@@ -1,0 +1,256 @@
+"""Serving tier: request lifecycle, snapshot bus, hot-swap under load.
+
+The swap tests pin the tentpole invariant: a snapshot hot-swap NEVER
+perturbs in-flight requests — they finish bit-for-bit on the snapshot
+they were admitted under (greedy decode), and only requests admitted
+after the swap see the new params.
+"""
+import json
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import init_model
+from repro.serving import (InferenceServer, Request, ServeConfig,
+                           ServingEngine, SnapshotPublisher, SnapshotWatcher)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("qwen2-0.5b"))
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    params_b = init_model(cfg, jax.random.PRNGKey(1))
+    return cfg, params, params_b
+
+
+def _scfg(**kw):
+    base = dict(batch=2, max_len=64, max_new_tokens=6, max_groups=4)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+class TestLifecycle:
+    def test_submit_step_drain(self, model):
+        cfg, params, _ = model
+        eng = ServingEngine(params, cfg, _scfg())
+        ids = [eng.submit(Request(prompt=np.arange(1, 4 + i, dtype=np.int32)))
+               for i in range(3)]
+        comps = {c.req_id: c for c in eng.drain()}
+        assert sorted(comps) == ids
+        assert all(len(c.tokens) == 6 for c in comps.values())
+        assert all(c.finish_reason == "length" for c in comps.values())
+        assert not eng.has_pending()
+
+    def test_continuous_admission_matches_solo(self, model):
+        # a request admitted into a RUNNING group is left-padded to the
+        # group clock; by batch-row independence it must decode exactly
+        # like a solo request with that padding made explicit
+        cfg, params, _ = model
+        eng = ServingEngine(params, cfg, _scfg(batch=3, max_groups=1))
+        eng.submit(Request(prompt=np.arange(1, 8, dtype=np.int32)))
+        eng.submit(Request(prompt=np.arange(2, 9, dtype=np.int32)))
+        eng.step()
+        eng.step()
+        clock = eng._groups[0].length            # pad target at admission
+        late = np.arange(3, 6, dtype=np.int32)
+        rid = eng.submit(Request(prompt=late))   # joins the running group
+        comps = {c.req_id: c for c in eng.drain()}
+        solo = ServingEngine(params, cfg, _scfg())
+        padded = np.concatenate([np.zeros(clock - late.size, np.int32), late])
+        sid = solo.submit(Request(prompt=padded))
+        ref = {c.req_id: c for c in solo.drain()}
+        assert np.array_equal(comps[rid].tokens, ref[sid].tokens)
+
+    def test_max_new_tokens_per_request(self, model):
+        cfg, params, _ = model
+        eng = ServingEngine(params, cfg, _scfg())
+        a = eng.submit(Request(prompt=np.asarray([1, 2, 3], np.int32),
+                               max_new_tokens=2))
+        b = eng.submit(Request(prompt=np.asarray([1, 2, 3], np.int32)))
+        comps = {c.req_id: c for c in eng.drain()}
+        assert len(comps[a].tokens) == 2
+        assert len(comps[b].tokens) == 6
+
+    def test_oversized_request_rejected(self, model):
+        cfg, params, _ = model
+        eng = ServingEngine(params, cfg, _scfg(max_len=16))
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(Request(prompt=np.arange(20, dtype=np.int32)))
+        with pytest.raises(ValueError, match="non-empty"):
+            eng.submit(Request(prompt=np.asarray([], np.int32)))
+
+    def test_queue_backpressure_max_groups(self, model):
+        # more distinct-shaped requests than groups: everything still
+        # completes, FIFO, nothing dropped
+        cfg, params, _ = model
+        eng = ServingEngine(params, cfg, _scfg(batch=2, max_groups=2))
+        ids = [eng.submit(Request(prompt=np.arange(1, 4, dtype=np.int32)))
+               for _ in range(7)]
+        comps = {c.req_id for c in eng.drain()}
+        assert comps == set(ids)
+
+    def test_eos_stops_early(self, model):
+        cfg, params, _ = model
+        eng = ServingEngine(params, cfg, _scfg())
+        rid = eng.submit(Request(prompt=np.asarray([1, 2, 3], np.int32)))
+        first = None
+        while first is None:
+            for c in eng.step().completions:
+                first = c
+        greedy_first = int(first.tokens[0])
+        eng2 = ServingEngine(params, cfg, _scfg(eos_id=greedy_first))
+        eng2.submit(Request(prompt=np.asarray([1, 2, 3], np.int32)))
+        (c,) = eng2.drain()
+        assert c.finish_reason == "eos"
+        assert len(c.tokens) == 1
+
+
+class TestSwapUnderLoad:
+    def _run(self, model, swap_tick):
+        cfg, p0, p1 = model
+        eng = ServingEngine(p0, cfg, _scfg(max_new_tokens=8), version=0)
+        comps = {}
+        for tick in range(40):
+            if tick == 0:
+                eng.submit(Request(prompt=np.arange(1, 5, dtype=np.int32)))
+            if tick == 2:
+                eng.submit(Request(prompt=np.arange(2, 8, dtype=np.int32)))
+            if swap_tick is not None and tick == swap_tick:
+                eng.set_params(p1, 1)
+            if tick == 5:
+                eng.submit(Request(prompt=np.arange(3, 6, dtype=np.int32)))
+            for c in eng.step().completions:
+                comps[c.req_id] = c
+            if tick > 5 and not eng.has_pending():
+                break
+        assert not eng.has_pending()
+        return comps
+
+    def test_inflight_bit_exact_across_swap(self, model):
+        swapped = self._run(model, swap_tick=3)
+        baseline = self._run(model, swap_tick=None)
+        # requests 0,1 were in flight at the swap: pinned to version 0,
+        # token-for-token identical to the run with no swap at all
+        for rid in (0, 1):
+            assert swapped[rid].snapshot_version == 0
+            assert np.array_equal(swapped[rid].tokens, baseline[rid].tokens)
+        # request 2 was admitted after the swap: new snapshot, and the
+        # params genuinely change its greedy decode
+        assert swapped[2].snapshot_version == 1
+        assert not np.array_equal(swapped[2].tokens, baseline[2].tokens)
+
+    def test_swap_while_idle(self, model):
+        cfg, p0, p1 = model
+        eng = ServingEngine(p0, cfg, _scfg(), version=0)
+        assert eng.set_params(p1) == 1          # auto-increment
+        rid = eng.submit(Request(prompt=np.asarray([1, 2], np.int32)))
+        comps = {c.req_id: c for c in eng.drain()}
+        assert comps[rid].snapshot_version == 1
+
+
+class TestSnapshotBus:
+    def test_roundtrip_and_versioning(self, model, tmp_path):
+        cfg, p0, p1 = model
+        d = str(tmp_path)
+        with SnapshotPublisher(d, every_steps=2, async_write=False) as pub:
+            assert not pub.maybe_publish(1, p0)
+            assert pub.maybe_publish(2, p0)
+            w = SnapshotWatcher(d, p0)
+            params, version = w.poll()
+            assert version == 2
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p0)):
+                assert np.array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+            assert w.poll() is None             # nothing new
+            pub.publish(4, p1)
+            _, version = w.poll()
+            assert version == 4
+
+    def test_torn_write_never_selected(self, model, tmp_path):
+        cfg, p0, _ = model
+        d = str(tmp_path)
+        with SnapshotPublisher(d, async_write=False) as pub:
+            pub.publish(3, p0)
+        # npz without sidecar = torn publication: latest_step skips it
+        open(os.path.join(d, "step_00000009.npz"), "wb").write(b"junk")
+        w = SnapshotWatcher(d, p0)
+        _, version = w.poll()
+        assert version == 3
+
+    def test_corrupt_snapshot_skipped_not_fatal(self, model, tmp_path):
+        cfg, p0, _ = model
+        d = str(tmp_path)
+        with SnapshotPublisher(d, async_write=False) as pub:
+            pub.publish(3, p0)
+        w = SnapshotWatcher(d, p0)
+        assert w.poll()[1] == 3
+        # corrupt npz WITH a sidecar: discoverable but unloadable
+        open(os.path.join(d, "step_00000011.npz"), "wb").write(b"junk")
+        with open(os.path.join(d, "step_00000011.npz.json"), "w") as f:
+            json.dump({"step": 11}, f)
+        assert w.poll() is None                 # skipped, not raised
+        assert w.skipped == 1
+        assert w.loaded_step == 3               # still serving v3
+        assert w.poll() is None                 # bad step not re-tried
+        assert w.skipped == 1
+        # a GOOD newer snapshot is still picked up
+        with SnapshotPublisher(d, async_write=False) as pub:
+            pub.publish(12, p0)
+        assert w.poll()[1] == 12
+
+    def test_strict_watcher_raises(self, model, tmp_path):
+        cfg, p0, _ = model
+        d = str(tmp_path)
+        open(os.path.join(d, "step_00000011.npz"), "wb").write(b"junk")
+        with open(os.path.join(d, "step_00000011.npz.json"), "w") as f:
+            json.dump({"step": 11}, f)
+        with pytest.raises(Exception):
+            SnapshotWatcher(d, p0, strict=True).poll()
+
+
+class TestInferenceServer:
+    def test_futures_and_hot_swap(self, model, tmp_path):
+        cfg, p0, p1 = model
+        d = str(tmp_path)
+        pub = SnapshotPublisher(d, async_write=False)
+        pub.publish(1, p0)
+        eng = ServingEngine(p0, cfg, _scfg(), version=0)
+        with InferenceServer(eng, watcher=SnapshotWatcher(d, p0),
+                             poll_every=2) as srv:
+            futs = [srv.submit(Request(
+                prompt=np.arange(1, 6, dtype=np.int32))) for _ in range(3)]
+            [f.result(timeout=300) for f in futs]
+            pub.publish(5, p1)
+            deadline = time.monotonic() + 300
+            while srv.stats.swaps < 2 and time.monotonic() < deadline:
+                time.sleep(0.01)                # idle poll picks it up
+            fut = srv.submit(Request(prompt=np.arange(2, 6, dtype=np.int32)))
+            comp = fut.result(timeout=300)
+        assert comp.snapshot_version == 5
+        assert srv.stats.swaps == 2
+        assert srv.stats.completed == 4
+        assert srv.stats.submitted == 4
+        assert len(srv.stats.request_lat) == 4
+        pub.close()
+
+    def test_shutdown_drains(self, model):
+        cfg, p0, _ = model
+        eng = ServingEngine(p0, cfg, _scfg())
+        srv = InferenceServer(eng)
+        futs = [srv.submit(Request(prompt=np.asarray([1, 2, 3], np.int32)))
+                for _ in range(5)]
+        srv.shutdown()                          # drain=True: zero drops
+        assert all(f.done() for f in futs)
+        assert all(len(f.result().tokens) == 6 for f in futs)
+
+    def test_unservable_request_fails_future(self, model):
+        cfg, p0, _ = model
+        eng = ServingEngine(p0, cfg, _scfg(max_len=16))
+        with InferenceServer(eng) as srv:
+            fut = srv.submit(Request(prompt=np.arange(30, dtype=np.int32)))
+            with pytest.raises(ValueError, match="max_len"):
+                fut.result(timeout=60)

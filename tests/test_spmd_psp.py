@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import env
 from repro.core.spmd_psp import (ChurnConfig, PSPConfig, elastic_drive,
                                  linear_psp_task, psp_init, psp_train_step)
 
@@ -158,7 +159,7 @@ class TestElasticChurn:
             "total_pushes": int(st.total_pushes),
             "final_error": round(err, 5),
         }
-        if os.environ.get("PSP_REGEN_GOLDEN"):
+        if env.flag("PSP_REGEN_GOLDEN"):
             with open(GOLDEN_CHURN, "w") as f:
                 json.dump(got, f, indent=1)
         with open(GOLDEN_CHURN) as f:

@@ -17,6 +17,7 @@ import os
 import numpy as np
 import pytest
 
+from repro.core import env
 from repro.core.barriers import make_barrier
 from repro.core.simulator import SimConfig, run_simulation
 from repro.core.vector_sim import VectorSimulator, run_sweep
@@ -28,7 +29,7 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 FIVE = ("bsp", "ssp", "asp", "pbsp", "pssp")
-N_EXAMPLES = int(os.environ.get("PSP_HYP_EXAMPLES", "10"))
+N_EXAMPLES = env.get_int("PSP_HYP_EXAMPLES")
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
                            "vector_sim_trace.json")
 
@@ -284,7 +285,7 @@ class TestGoldenTrace:
     @pytest.mark.parametrize("backend", ("numpy", "jax"))
     def test_trace_matches_golden(self, golden, backend):
         r = self._run(backend)
-        if os.environ.get("PSP_REGEN_GOLDEN"):
+        if env.flag("PSP_REGEN_GOLDEN"):
             golden[backend] = {
                 "steps": r.steps.tolist(),
                 "total_updates": int(r.total_updates),
@@ -358,7 +359,7 @@ class TestGoldenTrace:
             else:
                 os.environ["PSP_SWEEP_MESH"] = ambient
             vector_sim_jax._compiled_chunk.cache_clear()
-        if os.environ.get("PSP_REGEN_GOLDEN"):
+        if env.flag("PSP_REGEN_GOLDEN"):
             golden["jax_mesh2x4"] = {
                 "steps": r.steps.tolist(),
                 "total_updates": int(r.total_updates),

@@ -44,6 +44,20 @@ the smoke benchmark itself (pallas row included) and writes the fresh
 JSON next to the baseline as ``BENCH_fresh.json``.  Exit status 0 when
 every gated engine is within tolerance, 1 otherwise (one ``FAIL`` line
 per regressed engine), mirroring the doc-coverage gate's contract.
+
+``--serve`` gates the *serving-tier* benchmark instead
+(``benchmarks.serve_bench`` vs the committed
+``results/benchmarks/serve.json``).  Its run **invariants** are gated
+unconditionally — at least two mid-stream snapshot swaps, traffic
+spanning at least two model versions, and zero dropped requests — while
+the ``tokens_per_s`` floor (loose 60% tolerance: serve has no same-run
+event-loop normalizer, so raw throughput varies more across hosts) only
+applies when the fresh run matches the baseline's load shape
+(requests/rate/batch/max-new); a ``--smoke`` fresh run gates invariants
+only::
+
+    python -m benchmarks.serve_bench --smoke --out serve_fresh.json
+    python tools/check_bench.py --serve --fresh serve_fresh.json
 """
 from __future__ import annotations
 
@@ -55,7 +69,13 @@ from typing import Dict, List, Tuple
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_sweep.json")
+SERVE_BASELINE_PATH = os.path.join(REPO_ROOT, "results", "benchmarks",
+                                   "serve.json")
 DEFAULT_TOLERANCE = 0.25
+#: serve throughput floor tolerance — loose: no same-run normalizer
+SERVE_TOLERANCE = 0.6
+#: a fresh serve run only gates throughput at the baseline's load shape
+SERVE_SCALE_KEYS = ("requests", "rate_rps", "batch", "max_new_tokens")
 #: per-engine default tolerance overrides (looser for the noisy
 #: interpret-mode kernel row; loosest for the raw-throughput 100k row,
 #: whose metric has no same-run event normalization)
@@ -211,6 +231,55 @@ def check(baseline: Dict[str, Dict], fresh: Dict[str, Dict],
     return failures
 
 
+def check_serve(baseline: Dict, fresh: Dict,
+                tolerance: float = SERVE_TOLERANCE) -> List[str]:
+    """Gate a fresh serve-bench result; one failure line per violation.
+
+    Invariants gate unconditionally (they define a *valid* hot-swap run:
+    two distinct mid-stream swaps, traffic spanning two model versions,
+    zero dropped requests); the ``tokens_per_s`` floor only applies when
+    the fresh run reproduced the baseline's load shape
+    (:data:`SERVE_SCALE_KEYS`) — a ``--smoke`` run's throughput is
+    meaningless and must not fail (or vacuously pass) a comparison.
+    """
+    failures = []
+
+    def fail(line):
+        print(line)
+        failures.append(line)
+
+    if fresh.get("swaps", 0) < 2:
+        fail(f"FAIL serve: {fresh.get('swaps', 0)} swap(s) observed; the "
+             "run must hot-swap at least twice mid-stream")
+    if len(fresh.get("versions_served", [])) < 2:
+        fail(f"FAIL serve: completed traffic spanned versions "
+             f"{fresh.get('versions_served')}; need >= 2")
+    if fresh.get("dropped") != 0:
+        fail(f"FAIL serve: {fresh.get('dropped')!r} dropped request(s); "
+             "a swap must never cancel in-flight work")
+    if not failures:
+        print(f"ok serve: {fresh.get('swaps')} swaps (max stall "
+              f"{fresh.get('swap_stall_s', {}).get('max')}s), "
+              f"versions {fresh.get('versions_served')}, 0 dropped")
+    if all(fresh.get(k) == baseline.get(k) for k in SERVE_SCALE_KEYS):
+        base, got = baseline.get("tokens_per_s"), fresh.get("tokens_per_s")
+        if base is None or got is None:
+            fail("FAIL serve: no tokens_per_s to compare")
+        else:
+            floor = base * (1.0 - tolerance)
+            status = "ok" if got >= floor else "FAIL"
+            line = (f"{status} serve: tokens_per_s {got:.2f} vs baseline "
+                    f"{base:.2f} (floor {floor:.2f} at "
+                    f"{tolerance:.0%} tolerance)")
+            print(line)
+            if status == "FAIL":
+                failures.append(line)
+    else:
+        print("skip serve throughput floor: fresh run's load shape "
+              "differs from the baseline (smoke run?)")
+    return failures
+
+
 def main(argv=None) -> int:
     """CLI entry: compare fresh vs committed sweep-bench throughput."""
     ap = argparse.ArgumentParser()
@@ -232,7 +301,34 @@ def main(argv=None) -> int:
                          "only, skipping the throughput floor (for "
                          "forced-host-device CI lanes, where per-device "
                          "throughput drops by construction)")
+    ap.add_argument("--serve", action="store_true",
+                    help="gate the serving-tier benchmark instead "
+                         "(--fresh is a serve_bench JSON; baseline "
+                         "defaults to results/benchmarks/serve.json)")
     a = ap.parse_args(argv)
+
+    if a.serve:
+        base_path = (a.baseline if a.baseline != BASELINE_PATH
+                     else SERVE_BASELINE_PATH)
+        with open(base_path) as f:
+            baseline = json.load(f)
+        if a.fresh is None:
+            sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+            sys.path.insert(0, REPO_ROOT)
+            from benchmarks.serve_bench import serve_load
+            print("running smoke serve_bench...", file=sys.stderr)
+            fresh = serve_load(requests=9, rate_rps=16.0, batch=2,
+                               max_new=4)
+        else:
+            with open(a.fresh) as f:
+                fresh = json.load(f)
+        failures = check_serve(baseline, fresh)
+        if failures:
+            print(f"serve gate: {len(failures)} check(s) failed",
+                  file=sys.stderr)
+            return 1
+        print("serve gate: all checks passed", file=sys.stderr)
+        return 0
 
     baseline = load_engines(a.baseline)
     if a.fresh is None:
