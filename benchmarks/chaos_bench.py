@@ -1,0 +1,218 @@
+"""Chaos benchmark: recovery latency + goodput under the standard fault plan.
+
+Two segments, one artifact (``results/benchmarks/chaos.json``; schema in
+``docs/BENCHMARKS.md``; gated by ``tools/check_bench.py --chaos``):
+
+* **cluster** — two real multi-process runs of
+  :func:`repro.launch.cluster.run_cluster` with identical seeds/shape:
+  a no-fault reference and a faulted run under the ``standard`` plan
+  (one SIGKILL a third of the way in, one stalled straggler halfway).
+  Measured: **recovery latency** — wall seconds from the SIGKILL to the
+  victim's first *contributing* push after its respawn rejoined as a
+  churn joiner (kill → rejoin → first push, the full
+  detect/respawn/restore/re-anchor/contribute path) — and **goodput**,
+  total server pushes per wall second, reported for both runs plus
+  their ratio (how much training throughput one kill + one stall
+  actually costs).
+* **serving** — an open-loop request stream served while a
+  :class:`repro.serving.ChaosPublisher` executes the plan's publish
+  faults (torn-snapshot storm, delayed publication) on the snapshot bus
+  and the decode worker is killed once mid-stream (the plan's kill
+  tick, reused as a request index).  Measured: completed/dropped
+  requests, hot-swaps that still landed, worker restarts and
+  re-admissions, watcher skip/retry counts, tokens/s.  The invariant —
+  **zero drops** — is what the whole robustness tier buys.
+
+Run + artifact::
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench
+    PYTHONPATH=src python -m benchmarks.chaos_bench --smoke   # no artifact
+
+``--smoke`` shrinks both segments for CI; its timings are noise but
+every invariant (victim rejoined and contributed, zero drops, live
+workers never restarted) still holds and is still gated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "benchmarks", "chaos.json")
+
+
+def cluster_chaos(workers: int = 3, ticks: int = 30, dim: int = 16,
+                  batch: int = 4, tick_min_wall: float = 0.5,
+                  seed: int = 3) -> Dict:
+    """No-fault vs standard-plan cluster run → recovery + goodput dict."""
+    from repro.core.faults import make_plan
+    from repro.core.spmd_psp import PSPConfig
+    from repro.launch.cluster import run_cluster
+
+    cfg = PSPConfig(barrier="pbsp", n_workers=workers, staleness=3,
+                    sample_size=max(1, workers - 1))
+
+    def _run(plan_spec):
+        plan = make_plan(plan_spec, n_workers=workers, ticks=ticks)
+        with tempfile.TemporaryDirectory(prefix="psp_chaos_") as d:
+            res = run_cluster(cfg, dim, ticks, d, batch=batch, plan=plan,
+                              tick_min_wall=tick_min_wall,
+                              tick_timeout=120.0)
+        res.pop("final_params", None)
+        return res
+
+    ref = _run("none")
+    faulted = _run(f"standard:worker={seed % workers}")
+    victims = sorted({w for _t, kind, w in
+                      [tuple(e) for e in faulted["events"]]
+                      if kind == "leave"})
+    latencies = [rec["latency_s"] for rec in faulted["recovery"].values()
+                 if "latency_s" in rec]
+    live_restarts = sum(e for w, e in faulted["epochs"].items()
+                        if int(w) not in victims)
+    return {
+        "workers": workers, "ticks": ticks, "dim": dim, "batch": batch,
+        "plan": faulted["plan"],
+        "nofault": {"pushes": ref["total_pushes"],
+                    "wall_s": round(ref["wall_s"], 3),
+                    "goodput_pushes_per_s": round(ref["pushes_per_s"], 4)},
+        "faulted": {"pushes": faulted["total_pushes"],
+                    "wall_s": round(faulted["wall_s"], 3),
+                    "goodput_pushes_per_s":
+                        round(faulted["pushes_per_s"], 4),
+                    "events": faulted["events"],
+                    "epochs": faulted["epochs"],
+                    "recovery": faulted["recovery"]},
+        "goodput_ratio": round(faulted["pushes_per_s"]
+                               / max(ref["pushes_per_s"], 1e-9), 4),
+        "recovery_latency_s": round(max(latencies), 3) if latencies
+        else None,
+        "victims": victims,
+        "live_restarts": live_restarts,
+        "completed": bool(ref.get("completed")
+                          and faulted.get("completed")),
+    }
+
+
+def serving_chaos(arch: str = "qwen2-0.5b", requests: int = 16,
+                  rate_rps: float = 4.0, batch: int = 2, max_new: int = 4,
+                  prompt_len: int = 8, seed: int = 0) -> Dict:
+    """Open-loop serving under publish chaos + one decode-worker death."""
+    import benchmarks._host_mesh  # noqa: F401  (host mesh before jax)
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.core.faults import make_plan
+    from repro.models import init_model
+    from repro.serving import (ChaosPublisher, InferenceServer, Request,
+                               ServeConfig, ServingEngine, SnapshotWatcher)
+
+    cfg = reduced(get_config(arch))
+    p0 = init_model(cfg, jax.random.PRNGKey(seed))
+    scfg = ServeConfig(batch=batch, max_len=128, max_new_tokens=max_new,
+                       seed=seed)
+    plan = make_plan("standard", n_workers=1, ticks=requests)
+    kills = [e.tick for e in plan.events if e.kind == "kill"]
+    kill_at = min(kills[0], requests - 1) if kills else None
+
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=prompt_len)
+               .astype(np.int32) for _ in range(requests)]
+
+    with tempfile.TemporaryDirectory(prefix="psp_chaos_serve_") as d:
+        pub = ChaosPublisher(d, plan, async_write=False)
+        watcher = SnapshotWatcher(d, p0, backoff_base=0.05,
+                                  backoff_max=0.2, jitter_seed=seed)
+        eng = ServingEngine(p0, cfg, scfg, version=0)
+        futs = []
+        t0 = time.perf_counter()
+        with InferenceServer(eng, watcher=watcher, poll_every=2,
+                             max_restarts=2) as srv:
+            for i in range(requests):
+                # one publication per request: the plan's torn storm and
+                # delayed publish land on these indices
+                pub.publish(i + 1, init_model(cfg,
+                                              jax.random.PRNGKey(i + 1)))
+                futs.append(srv.submit(Request(prompt=prompts[i])))
+                if kill_at is not None and i == kill_at:
+                    srv.inject_worker_fault()
+                lag = (i + 1) / rate_rps - (time.perf_counter() - t0)
+                if lag > 0:
+                    time.sleep(lag)
+            comps = [f.result(timeout=600) for f in futs]
+        wall = time.perf_counter() - t0
+        stats = srv.stats
+
+    total_tokens = sum(len(c.tokens) for c in comps)
+    return {
+        "arch": cfg.name, "requests": requests, "rate_rps": rate_rps,
+        "batch": batch, "max_new_tokens": max_new,
+        "wall_s": round(wall, 3),
+        "completed": len(comps),
+        "dropped": requests - len(comps),
+        "tokens_per_s": round(total_tokens / wall, 3),
+        "versions_served": sorted({c.snapshot_version for c in comps}),
+        "swaps": stats.swaps,
+        "worker_restarts": stats.worker_restarts,
+        "readmitted": stats.readmitted,
+        "timeouts": stats.timeouts,
+        "snapshots_skipped": stats.snapshots_skipped,
+        "watcher_retries": watcher.retries,
+        "publish_faults": dict(pub.counters),
+    }
+
+
+def chaos_suite(*, smoke: bool = False) -> Dict:
+    """Run both segments; ``smoke`` shrinks shapes (invariants intact)."""
+    if smoke:
+        cluster = cluster_chaos(workers=3, ticks=24, tick_min_wall=0.4)
+        serving = serving_chaos(requests=10, rate_rps=8.0)
+    else:
+        cluster = cluster_chaos()
+        serving = serving_chaos()
+    return {"smoke": smoke, "cluster": cluster, "serving": serving}
+
+
+def main(argv=None) -> int:
+    """CLI entry: run the chaos benchmark, write/print the artifact."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI: every invariant still holds, "
+                         "timings are noise; does NOT write the "
+                         "committed artifact")
+    a = ap.parse_args(argv)
+    res = chaos_suite(smoke=a.smoke)
+    if not a.smoke or a.out != OUT_PATH:
+        os.makedirs(os.path.dirname(a.out), exist_ok=True)
+        with open(a.out, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"wrote {a.out}")
+    c, s = res["cluster"], res["serving"]
+    print(f"cluster: {c['workers']}w x {c['ticks']}t plan={c['plan']}  "
+          f"goodput {c['faulted']['goodput_pushes_per_s']:.2f}/s vs "
+          f"{c['nofault']['goodput_pushes_per_s']:.2f}/s "
+          f"(ratio {c['goodput_ratio']:.2f})")
+    print(f"  recovery latency {c['recovery_latency_s']}s  "
+          f"victims {c['victims']}  live restarts {c['live_restarts']}")
+    print(f"serving: {s['completed']}/{s['requests']} done  "
+          f"dropped {s['dropped']}  swaps {s['swaps']}  "
+          f"restarts {s['worker_restarts']} "
+          f"(readmitted {s['readmitted']})  "
+          f"faults {s['publish_faults']}")
+    ok = (c["completed"] and c["recovery_latency_s"] is not None
+          and c["live_restarts"] == 0 and s["dropped"] == 0
+          and s["swaps"] >= 1 and s["worker_restarts"] >= 1)
+    if not ok:
+        print("FAIL: chaos invariants violated")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

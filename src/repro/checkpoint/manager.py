@@ -98,17 +98,22 @@ class CheckpointManager:
 
     def __init__(self, ckpt_dir: str, policy: CheckpointPolicy | None = None,
                  *, keep: int = 3, async_write: bool = True,
-                 queue_size: int = 2):
+                 queue_size: int = 2, write_retries: int = 3,
+                 retry_backoff: float = 0.1):
         self.ckpt_dir = ckpt_dir
         self.policy = policy or CheckpointPolicy()
         self.keep = keep
         self._async = async_write
+        self.write_retries = write_retries
+        self.retry_backoff = retry_backoff
+        self.retried_writes = 0
         self._last_save_time = time.monotonic()
         self._last_saved_step: Optional[int] = None
         os.makedirs(ckpt_dir, exist_ok=True)
         self._clean_stale()
         self._queue: "queue.Queue" = queue.Queue(maxsize=queue_size)
         self._error: Optional[BaseException] = None
+        self._injected_faults: list = []
         self._thread: Optional[threading.Thread] = None
         if async_write:
             self._thread = threading.Thread(target=self._writer_loop,
@@ -183,8 +188,33 @@ class CheckpointManager:
     def __enter__(self) -> "CheckpointManager":
         return self
 
-    def __exit__(self, *exc) -> None:
-        self.close()
+    def __exit__(self, exc_type, exc, tb) -> None:
+        """Close on exit; surface writer errors without masking the body.
+
+        A clean ``with`` exit drains and raises any pending writer error
+        (the regression the shutdown tests pin).  When the body is
+        *already* raising, the writer error must not replace it — the
+        original exception stays primary and the writer failure is
+        attached as its ``__context__`` via an ordinary chained raise
+        swallowed here.
+        """
+        if exc_type is None:
+            self.close()
+            return
+        try:
+            self.close()
+        except Exception:
+            pass                # body exception stays primary
+
+    def inject_write_fault(self, exc: BaseException) -> None:
+        """Chaos hook: make the next write attempt raise ``exc`` once.
+
+        Each injected fault consumes exactly one *attempt* (not one
+        save), so ``write_retries >= 1`` turns a single injection into a
+        transparently retried transient failure — the path the
+        disk-full fault plan and the retry regression tests drive.
+        """
+        self._injected_faults.append(exc)
 
     # ------------------------------------------------------------------ #
     # writer thread
@@ -209,8 +239,25 @@ class CheckpointManager:
                 self._queue.task_done()
 
     def _write(self, step, snap, metadata):
-        save_checkpoint(self.ckpt_dir, step, snap, metadata)
-        self._gc()
+        """One write, retried with exponential backoff on transient errors.
+
+        ``write_retries`` extra attempts, sleeping ``retry_backoff * 2^i``
+        between them — a full disk or flaky mount heals without losing
+        the checkpoint; exhausted retries re-raise the last error (into
+        ``self._error`` on the async path).
+        """
+        for attempt in range(self.write_retries + 1):
+            try:
+                if self._injected_faults:
+                    raise self._injected_faults.pop(0)
+                save_checkpoint(self.ckpt_dir, step, snap, metadata)
+                self._gc()
+                return
+            except (OSError, IOError):
+                if attempt >= self.write_retries:
+                    raise
+                self.retried_writes += 1
+                time.sleep(self.retry_backoff * (2.0 ** attempt))
 
     def _gc(self):
         """Keep the newest ``keep`` published checkpoints, delete the rest."""

@@ -78,6 +78,25 @@ REGISTRY: Dict[str, EnvVar] = _reg(
     EnvVar("PSP_REGEN_GOLDEN", "flag", False,
            "regenerate committed golden trace files instead of "
            "comparing against them (intentional-change workflow)"),
+    EnvVar("PSP_FAULT_PLAN", "str", None,
+           "default fault plan for the cluster harness / chaos bench: a "
+           "registry spec (`standard:seed=7`) or a plan-JSON path"),
+    EnvVar("PSP_BUS_BACKOFF_BASE", "float", 0.25,
+           "snapshot-watcher retry backoff base seconds for a bad "
+           "step (doubles per failure, jittered)"),
+    EnvVar("PSP_BUS_BACKOFF_MAX", "float", 8.0,
+           "snapshot-watcher retry backoff ceiling in seconds"),
+    EnvVar("PSP_BUS_BLACKLIST_MAX", "int", 64,
+           "max bad-step entries the snapshot watcher remembers "
+           "(oldest evicted beyond the cap)"),
+    EnvVar("PSP_BUS_BLACKLIST_TTL", "float", 300.0,
+           "seconds a bad-step entry stays blacklisted before eviction "
+           "(the retention window)"),
+    EnvVar("PSP_HB_INTERVAL", "float", 0.25,
+           "cluster worker heartbeat-sidecar write cadence in seconds"),
+    EnvVar("PSP_HB_TIMEOUT", "float", 10.0,
+           "heartbeat staleness after which the cluster coordinator "
+           "SIGKILLs a hung worker and treats it as departed"),
 )
 
 

@@ -94,8 +94,9 @@ from repro.core.barrier_kernel import (BarrierKernel, BarrierPolicy,
                                        make_policy)
 from repro.core.barriers import BarrierControl, make_barrier
 
-__all__ = ["ChurnConfig", "PSPConfig", "PSPState", "elastic_drive",
-           "linear_psp_state", "linear_psp_task", "psp_init",
+__all__ = ["ChurnConfig", "PSPConfig", "PSPState", "apply_external_churn",
+           "elastic_drive", "external_drive", "linear_psp_state",
+           "linear_psp_task", "psp_apply_tick", "psp_init",
            "psp_train_step", "make_psp_step_fn", "state_from_tree",
            "state_to_tree"]
 
@@ -339,6 +340,43 @@ def _schedule_due(times: jax.Array, cursor: jax.Array,
     return (cursor < n) & (times[jnp.minimum(cursor, n - 1)] <= now)
 
 
+def _membership_update(state: PSPState, leave_sel: jax.Array,
+                       join_sel: jax.Array) -> PSPState:
+    """Apply membership-change masks to the state (the churn kernel).
+
+    ``leave_sel`` / ``join_sel`` are bool[W] selections of workers leaving
+    and (re)joining *this instant*.  Leavers' counters freeze where they
+    are.  Joiners follow the engines' fresh-start rule: they are
+    re-anchored with a fresh pull of the server model, restart at the max
+    alive step (evaluated after both masks land, so a rejoining
+    front-runner's own frozen counter participates — the
+    :func:`_fire_churn` ordering, preserved bit-for-bit), become
+    completed (``busy_until = now``) so they decide this very tick, and
+    have ``pushed`` set so a gradient computed while dead can never land.
+
+    This is the single definition of "what a leave/join does to trainer
+    state": the schedule-driven Poisson phase (:func:`_fire_churn`) and
+    the process-driven cluster harness (:func:`apply_external_churn`)
+    both route through it, so simulated and real churn cannot silently
+    diverge.  Cursor bookkeeping is the caller's job.
+    """
+    alive = (state.alive & ~leave_sel) | join_sel
+    fresh = jnp.max(jnp.where(alive, state.step, _I32_MIN))
+    step = jnp.where(join_sel, fresh, state.step)
+
+    def _reanchor(view, p):
+        m = join_sel.reshape((-1,) + (1,) * p.ndim)
+        return jnp.where(m, p[None], view)
+
+    return state._replace(
+        views=jax.tree.map(_reanchor, state.views, state.server_params),
+        step=step,
+        busy_until=jnp.where(join_sel, state.now, state.busy_until),
+        pushed=state.pushed | join_sel,
+        alive=alive,
+    )
+
+
 def _fire_churn(cfg: PSPConfig, state: PSPState,
                 k_churn: jax.Array) -> PSPState:
     """Phase 0 of an elastic tick: fire due leave/join events (≤ 1 each).
@@ -352,63 +390,88 @@ def _fire_churn(cfg: PSPConfig, state: PSPState,
     preserved; several same-tick events drain one per tick, the fused
     tick's ``pend_*`` carry rule (the numpy grid engine instead drains
     same-tick surpluses within the tick — a timing difference of rare
-    multi-event ticks, not a protocol difference).  The joiner is
-    re-anchored with a
-    fresh pull of the server model and its stale gradient is masked out
-    of this tick's push (``pushed`` set), so a departed-then-revived
-    worker can never push bytes it computed while dead.
+    multi-event ticks, not a protocol difference).  The membership
+    effect itself (joiner fresh-start/re-anchor/push-mask semantics)
+    lives in :func:`_membership_update`; this phase only decides *who*.
     """
     w = cfg.n_workers
     iota = jnp.arange(w)
     k_leave, k_join = jax.random.split(k_churn)
-    alive, step = state.alive, state.step
+    alive = state.alive
 
     # leave: kill a uniformly random alive worker (population floor: 2)
     due_l = _schedule_due(state.leave_times, state.leave_cursor, state.now)
     do_l = due_l & (jnp.sum(alive) > 2)
     victim = churn_victim(jax.random.uniform(k_leave, (w,)), alive)
-    alive = alive & ~(do_l & (iota == victim))
+    leave_sel = do_l & (iota == victim)
+    alive = alive & ~leave_sel
 
     # join: revive a uniformly random departed slot, fresh-started
     due_j = _schedule_due(state.join_times, state.join_cursor, state.now)
     do_j = due_j & jnp.any(~alive)
     joiner = churn_joiner(jax.random.uniform(k_join, (w,)), alive)
-    sel = do_j & (iota == joiner)
-    alive = alive | sel
-    fresh = jnp.max(jnp.where(alive, step, _I32_MIN))
-    step = jnp.where(sel, fresh, step)
+    join_sel = do_j & (iota == joiner)
 
-    def _reanchor(view, p):
-        m = sel.reshape((-1,) + (1,) * p.ndim)
-        return jnp.where(m, p[None], view)
-
+    state = _membership_update(state, leave_sel, join_sel)
     return state._replace(
-        views=jax.tree.map(_reanchor, state.views, state.server_params),
-        step=step,
-        busy_until=jnp.where(sel, state.now, state.busy_until),
-        pushed=state.pushed | sel,
-        alive=alive,
         leave_cursor=state.leave_cursor + due_l.astype(jnp.int32),
         join_cursor=state.join_cursor + due_j.astype(jnp.int32),
     )
 
 
-def psp_train_step(
+def apply_external_churn(cfg: PSPConfig, state: PSPState, *,
+                         leave: Tuple[int, ...] = (),
+                         join: Tuple[int, ...] = ()) -> PSPState:
+    """Apply *observed* membership changes (real process churn) to state.
+
+    The cluster harness (:mod:`repro.launch.cluster`) maps actual worker
+    deaths and rejoins onto the elastic trainer's alive-mask machinery
+    through this function: a SIGKILLed worker is a ``leave``, a respawned
+    worker that restored the latest snapshot is a ``join``.  Both apply
+    the exact :func:`_membership_update` kernel the Poisson churn phase
+    fires, so a real death behaves bit-for-bit like a scheduled one.
+
+    Unlike :func:`_fire_churn` there is no population floor and no
+    one-event-per-tick drain: real deaths are observed facts, not
+    schedule draws, and a correlated rack-level kill takes several
+    workers in one call.  Leaving an already-dead worker and joining an
+    already-alive one are no-ops (idempotent re-application).  The churn
+    RNG stream is untouched — this is host-driven, between ticks, and
+    composes with ``churn=None`` configs (the cluster's case).
+    """
+    w = cfg.n_workers
+    alive = np.asarray(state.alive)
+    leave_sel = np.zeros(w, bool)
+    for i in leave:
+        leave_sel[int(i)] = True
+    leave_sel &= alive                       # no-op on dead workers
+    join_sel = np.zeros(w, bool)
+    for i in join:
+        join_sel[int(i)] = True
+    join_sel &= ~(alive & ~leave_sel)        # no-op on alive workers
+    if not leave_sel.any() and not join_sel.any():
+        return state
+    return _membership_update(state, jnp.asarray(leave_sel),
+                              jnp.asarray(join_sel))
+
+
+def psp_apply_tick(
     cfg: PSPConfig,
-    grad_fn: Callable[[PyTree, PyTree], Tuple[jax.Array, PyTree]],
     opt_update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]],
     state: PSPState,
-    batch: PyTree,
+    compute: Callable[[PSPState], Tuple[jax.Array, PyTree]],
 ) -> Tuple[PSPState, dict]:
-    """One SPMD tick of PSP training.
+    """One SPMD tick of PSP, with the gradient source abstracted out.
 
-    Args:
-      cfg: barrier configuration (static).
-      grad_fn: ``(params, microbatch) -> (loss, grads)`` for ONE worker;
-        vmapped over the leading W axis of ``state.views`` / ``batch``.
-      opt_update: ``(grads, opt_state, params) -> (updates, new_opt_state)``.
-      state: carried :class:`PSPState`.
-      batch: pytree with leading axis W (per-worker microbatches).
+    ``compute(state) -> (losses, grads)`` supplies the f32[W] losses and
+    [W, ...] gradient pytree, evaluated *after* the churn phase (so a
+    same-tick joiner's gradient comes from its re-anchored view, as it
+    always did).  :func:`psp_train_step` passes the vmapped in-process
+    ``grad_fn``; the multi-process cluster coordinator
+    (:mod:`repro.launch.cluster`) passes the gradients its worker
+    subprocesses pushed over the bus (zeros in non-pushing rows — the
+    push mask discards those columns identically either way, which is
+    what makes the cluster bit-exact against the in-process trainer).
 
     Returns: (new_state, metrics)
     """
@@ -424,7 +487,7 @@ def psp_train_step(
     alive = state.alive
 
     # (1) every worker computes on its own (possibly stale) view
-    losses, grads = jax.vmap(grad_fn)(state.views, batch)
+    losses, grads = compute(state)
 
     # (2) completions push to the server; departed workers are masked out
     # of the psum — zero gradient, zero bytes
@@ -542,6 +605,34 @@ def psp_train_step(
     return new_state, metrics
 
 
+def psp_train_step(
+    cfg: PSPConfig,
+    grad_fn: Callable[[PyTree, PyTree], Tuple[jax.Array, PyTree]],
+    opt_update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]],
+    state: PSPState,
+    batch: PyTree,
+) -> Tuple[PSPState, dict]:
+    """One SPMD tick of PSP training (in-process gradients).
+
+    Args:
+      cfg: barrier configuration (static).
+      grad_fn: ``(params, microbatch) -> (loss, grads)`` for ONE worker;
+        vmapped over the leading W axis of ``state.views`` / ``batch``.
+      opt_update: ``(grads, opt_state, params) -> (updates, new_opt_state)``.
+      state: carried :class:`PSPState`.
+      batch: pytree with leading axis W (per-worker microbatches).
+
+    A thin wrapper over :func:`psp_apply_tick` that computes the
+    gradients in-process by vmapping ``grad_fn`` over the worker views —
+    pure code motion from the pre-cluster trainer, so every golden trace
+    and RNG stream is bit-identical.
+
+    Returns: (new_state, metrics)
+    """
+    return psp_apply_tick(cfg, opt_update, state,
+                          lambda st: jax.vmap(grad_fn)(st.views, batch))
+
+
 def state_to_tree(state: PSPState) -> dict:
     """The checkpointable pytree of the FULL training state.
 
@@ -643,6 +734,43 @@ def elastic_drive(cfg: PSPConfig, dim: int, ticks: int, *, batch: int = 16,
         for _ in range(start_tick):          # replay the consumed key stream
             kb, _ = jax.random.split(kb)
         for _ in range(start_tick, ticks):
+            kb, k1 = jax.random.split(kb)
+            x = jax.random.normal(k1, (cfg.n_workers, batch, dim))
+            state, m = step(state, (x, x @ w_true))
+            yield state, m
+
+    return w_true, _ticks(state, jax.random.PRNGKey(batch_seed))
+
+
+def external_drive(cfg: PSPConfig, dim: int, ticks: int,
+                   events: dict, *, batch: int = 16, lr: float = 0.1,
+                   task_seed: int = 0, init_seed: int = 1,
+                   batch_seed: int = 2):
+    """:func:`elastic_drive` with an *explicit* leave/join schedule.
+
+    ``events`` maps ``tick -> (leave_ids, join_ids)``; each entry is
+    applied via :func:`apply_external_churn` immediately before that
+    tick's train step, exactly where the cluster coordinator applies
+    observed process churn.  With ``cfg.churn=None`` this is the
+    single-process reference for a multi-process cluster run: replaying
+    the cluster's recorded membership events here must reproduce the
+    cluster's server params bit-for-bit (same alive trajectory, same RNG
+    stream, same pushes — ``tests/test_cluster_faults.py`` pins it).
+
+    Returns:
+      (w_true, it): ground truth and a per-tick ``(state, metrics)``
+      iterator, mirroring :func:`elastic_drive`.
+    """
+    w_true, grad_fn, opt_update = linear_psp_task(dim, lr=lr, seed=task_seed)
+    state = linear_psp_state(cfg, dim, init_seed)
+    step = jax.jit(make_psp_step_fn(cfg, grad_fn, opt_update))
+
+    def _ticks(state, kb):
+        for t in range(ticks):
+            if t in events:
+                leave, join = events[t]
+                state = apply_external_churn(cfg, state, leave=tuple(leave),
+                                             join=tuple(join))
             kb, k1 = jax.random.split(kb)
             x = jax.random.normal(k1, (cfg.n_workers, batch, dim))
             state, m = step(state, (x, x @ w_true))

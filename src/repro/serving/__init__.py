@@ -1,9 +1,11 @@
 from repro.serving.engine import (Completion, Request, ServeConfig,
                                   ServingEngine, StepResult, sample_token)
 from repro.serving.server import InferenceServer, ServerStats
-from repro.serving.snapshot_bus import SnapshotPublisher, SnapshotWatcher
+from repro.serving.snapshot_bus import (ChaosPublisher, SnapshotPublisher,
+                                        SnapshotWatcher)
 
 __all__ = [
+    "ChaosPublisher",
     "Completion",
     "InferenceServer",
     "Request",

@@ -84,13 +84,18 @@ class Request:
     ``embed`` is the per-request frontend embedding row ``(F, d_model)``
     for architectures with ``cfg.frontend_tokens`` (zeros when omitted);
     ``max_new_tokens=None`` takes the engine default.  ``req_id`` is
-    assigned by :meth:`ServingEngine.submit`.
+    assigned by :meth:`ServingEngine.submit`.  ``deadline_s`` is a
+    per-request wall-clock budget measured from submission; the engine
+    ignores it (deadlines are a server concern —
+    :class:`repro.serving.server.InferenceServer` fails the future with
+    ``TimeoutError`` and cancels the slot when it expires).
     """
 
     prompt: np.ndarray
     embed: Optional[np.ndarray] = None
     max_new_tokens: Optional[int] = None
     req_id: Optional[int] = None
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -215,6 +220,71 @@ class ServingEngine:
     def has_pending(self) -> bool:
         """Queued or in-flight work remains."""
         return bool(self._queue) or any(g.active() for g in self._groups)
+
+    def cancel(self, req_id: int) -> bool:
+        """Remove a queued or in-flight request without completing it.
+
+        Returns whether the request was found.  A cancelled slot frees
+        immediately (its group keeps decoding for the remaining slots;
+        an emptied group is dropped at the next :meth:`step`).  The
+        server uses this to enforce per-request deadlines — the future,
+        not the engine, reports the timeout.
+        """
+        for i, r in enumerate(self._queue):
+            if r.req_id == req_id:
+                del self._queue[i]
+                return True
+        for g in self._groups:
+            for i, s in enumerate(g.slots):
+                if s is not None and s.req_id == req_id:
+                    g.slots[i] = None
+                    return True
+        return False
+
+    def request_versions(self) -> Dict[int, Optional[int]]:
+        """Map every live request id to its pinned snapshot version.
+
+        In-flight requests report the version their decode group pinned
+        at admission; still-queued requests report ``None`` (they have
+        not pinned anything yet).  This is the book the server's
+        worker-death re-admission reads to rebuild version cohorts.
+        """
+        out: Dict[int, Optional[int]] = {r.req_id: None for r in self._queue}
+        for g in self._groups:
+            for s in g.slots:
+                if s is not None:
+                    out[s.req_id] = g.version
+        return out
+
+    def live_versions(self) -> List[int]:
+        """Snapshot versions still pinned by some decode group."""
+        return sorted({g.version for g in self._groups if g.active()})
+
+    def reset(self) -> List[int]:
+        """Drop every queued and in-flight request; returns their ids.
+
+        Recovery primitive: after a decode-worker crash the engine's
+        groups may be mid-step inconsistent, so the server resets and
+        re-submits from its own request book.  Request-id assignment is
+        *not* reset — re-admitted requests get fresh ids and stale ids
+        can never collide.
+        """
+        ids = [r.req_id for r in self._queue]
+        ids += [s.req_id for g in self._groups for s in g.slots
+                if s is not None]
+        self._queue.clear()
+        self._groups = []
+        return ids
+
+    def admit_queued(self) -> None:
+        """Admit queued requests into decode groups *now*, no decode step.
+
+        Group formation pins ``(params, version)``, so calling this
+        between a :meth:`set_params` pair lets the server rebuild a
+        version cohort on its original snapshot before switching the
+        engine back to the latest one (worker-death re-admission).
+        """
+        self._admit()
 
     def step(self) -> StepResult:
         """One batched decode tick (admit → sample/retire → decode)."""

@@ -44,6 +44,9 @@ class ServerStats:
     swaps: int = 0
     snapshots_skipped: int = 0
     steps: int = 0
+    timeouts: int = 0           # requests failed on their deadline
+    worker_restarts: int = 0    # decode-worker crash recoveries
+    readmitted: int = 0         # requests re-submitted after a crash
     token_times: List[float] = dataclasses.field(default_factory=list)
     first_token_lat: List[float] = dataclasses.field(default_factory=list)
     request_lat: List[float] = dataclasses.field(default_factory=list)
@@ -54,6 +57,7 @@ class ServerStats:
 class _Tracked:
     future: Future
     t_submit: float
+    request: Request            # original request (worker-death re-admission)
     t_first: Optional[float] = None
 
 
@@ -68,16 +72,24 @@ class InferenceServer:
     def __init__(self, engine: ServingEngine, *,
                  watcher: Optional[SnapshotWatcher] = None,
                  max_queue: int = 256, poll_every: int = 8,
-                 idle_wait: float = 0.01):
+                 idle_wait: float = 0.01, max_restarts: int = 2):
         self.engine = engine
         self.watcher = watcher
         self.poll_every = poll_every
+        self.max_restarts = max_restarts
         self.stats = ServerStats()
         self._inbox: "queue.Queue" = queue.Queue(maxsize=max_queue)
         self._tracked: Dict[int, _Tracked] = {}
+        # every snapshot this server has served, pruned to versions still
+        # pinned by a live group — the book worker-death re-admission
+        # reads to rebuild a cohort on its original params
+        self._params_history: Dict[int, object] = {engine.version:
+                                                   engine.params}
         self._idle_wait = idle_wait
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
+        self._fault: Optional[BaseException] = None
+        self._restarts = 0
         self._thread = threading.Thread(target=self._worker,
                                         name="serve-worker", daemon=True)
         self._thread.start()
@@ -99,6 +111,18 @@ class InferenceServer:
         self._inbox.put((req, fut, time.monotonic()), block=block,
                         timeout=timeout)
         return fut
+
+    def inject_worker_fault(self, exc: Optional[BaseException] = None) -> None:
+        """Chaos hook: make the decode worker raise at its next tick.
+
+        The fault-plan ``kill`` event for the serving tier (one decode
+        worker per server — :meth:`repro.core.faults.FaultPlan.
+        serving_kill_index`) lands here: the worker thread raises,
+        recovery re-admits in-flight requests on their pinned snapshots
+        (bit-exact under greedy decode) and the loop continues, up to
+        ``max_restarts`` times.
+        """
+        self._fault = exc or RuntimeError("injected decode-worker fault")
 
     def shutdown(self, *, drain: bool = True) -> None:
         """Stop the worker; with ``drain`` (default) finish all admitted
@@ -126,18 +150,79 @@ class InferenceServer:
     # worker side (single thread owns the engine)
     # ------------------------------------------------------------------ #
     def _worker(self):
-        try:
-            while not self._stop.is_set():
-                got = self._drain_inbox()
-                if not self.engine.has_pending():
-                    self._poll_watcher()        # swap while idle is free
-                    if not got:
-                        time.sleep(self._idle_wait)
-                    continue
-                self._tick(poll=self.stats.steps % self.poll_every == 0)
-        except BaseException as e:              # pragma: no cover - surfaced
-            self._error = e
-            self._stop.set()
+        while True:
+            try:
+                self._serve_loop()
+                return                          # clean stop
+            except BaseException as e:
+                if self._stop.is_set() or self._restarts >= self.max_restarts:
+                    self._error = e             # surfaced to callers
+                    self._stop.set()
+                    return
+                self._restarts += 1
+                self.stats.worker_restarts += 1
+                try:
+                    self._recover()
+                except BaseException as e2:     # recovery itself died
+                    self._error = e2
+                    self._stop.set()
+                    return
+
+    def _serve_loop(self):
+        while not self._stop.is_set():
+            if self._fault is not None:
+                exc, self._fault = self._fault, None
+                raise exc
+            got = self._drain_inbox()
+            self._check_deadlines(time.monotonic())
+            if not self.engine.has_pending():
+                self._poll_watcher()            # swap while idle is free
+                if not got:
+                    time.sleep(self._idle_wait)
+                continue
+            self._tick(poll=self.stats.steps % self.poll_every == 0)
+
+    def _recover(self):
+        """Worker-death re-admission: rebuild the engine's request book.
+
+        The crashed step may have left groups inconsistent, so the
+        engine is reset and every live request re-submitted from the
+        server's own copy — in-flight requests **per version cohort on
+        the exact snapshot their group pinned** (``set_params`` to the
+        pinned version, submit, ``admit_queued`` to pin the fresh group
+        before moving on), still-queued requests last under the current
+        snapshot.  Re-decoding restarts each request from token zero,
+        which under greedy decode reproduces the identical completion
+        (same params, same prompt ⇒ same argmax path) — the re-admitted
+        future resolves bit-exact to what the uninterrupted decode would
+        have returned.  Per-token latency samples of replayed tokens are
+        counted twice in ``stats.token_times``; completions are not.
+        """
+        latest = (self.engine.params, self.engine.version)
+        versions = self.engine.request_versions()
+        self.engine.reset()
+        cohorts: Dict[Optional[int], List[int]] = {}
+        for rid, ver in versions.items():
+            if rid in self._tracked:
+                cohorts.setdefault(ver, []).append(rid)
+        for ver in sorted(v for v in cohorts if v is not None):
+            params = self._params_history.get(ver)
+            if params is None:                  # history pruned: serve fresh
+                params, ver_pin = latest
+            else:
+                ver_pin = ver
+            self.engine.set_params(params, ver_pin)
+            self._resubmit(cohorts[ver])
+            self.engine.admit_queued()          # pin the cohort's groups
+        self.engine.set_params(*latest)
+        self._resubmit(cohorts.get(None, []))
+
+    def _resubmit(self, rids: List[int]):
+        for rid in rids:
+            tr = self._tracked.pop(rid)
+            new_rid = self.engine.submit(tr.request)
+            self._tracked[new_rid] = tr
+            self.stats.readmitted += 1
 
     def _drain_inbox(self) -> bool:
         got = False
@@ -147,13 +232,32 @@ class InferenceServer:
             except queue.Empty:
                 return got
             got = True
+            if (req.deadline_s is not None
+                    and time.monotonic() - t_sub > req.deadline_s):
+                self.stats.timeouts += 1        # expired while queued
+                fut.set_exception(TimeoutError(
+                    f"request missed its {req.deadline_s}s deadline "
+                    "in the admission queue"))
+                continue
             try:
                 rid = self.engine.submit(req)
             except ValueError as e:             # unservable request
                 fut.set_exception(e)
                 continue
-            self._tracked[rid] = _Tracked(fut, t_sub)
+            self._tracked[rid] = _Tracked(fut, t_sub, req)
             self.stats.submitted += 1
+
+    def _check_deadlines(self, now: float):
+        """Fail + cancel tracked requests past their deadline."""
+        expired = [rid for rid, tr in self._tracked.items()
+                   if tr.request.deadline_s is not None
+                   and now - tr.t_submit > tr.request.deadline_s]
+        for rid in expired:
+            tr = self._tracked.pop(rid)
+            self.engine.cancel(rid)
+            self.stats.timeouts += 1
+            tr.future.set_exception(TimeoutError(
+                f"request exceeded its {tr.request.deadline_s}s deadline"))
 
     def _poll_watcher(self):
         if self.watcher is None:
@@ -165,12 +269,17 @@ class InferenceServer:
             return
         params, version = loaded
         self.engine.set_params(params, version)
+        self._params_history[version] = params
+        live = set(self.engine.live_versions()) | {version}
+        for v in [v for v in self._params_history if v not in live]:
+            del self._params_history[v]
         self.stats.swaps += 1
         self.stats.swap_stalls.append(time.monotonic() - t0)
 
     def _tick(self, *, poll: bool):
         if poll:
             self._poll_watcher()
+        self._check_deadlines(time.monotonic())
         res = self.engine.step()
         now = time.monotonic()
         self.stats.steps += 1

@@ -16,20 +16,39 @@ coordination — a crash on either side leaves at worst a torn write that
 * :class:`SnapshotWatcher` — server side.  ``poll()`` returns a
   ``(params, version)`` pair when a *new, loadable* snapshot appeared,
   else ``None``.  Corrupt, torn, or config-mismatched snapshots are
-  skipped (remembered, so a permanently bad step is not re-tried every
-  poll) and the server keeps serving its current version — staleness
+  skipped and the server keeps serving its current version — staleness
   beats an outage, the same trade PSP makes at the training barrier.
+  Bad steps are remembered in a **bounded blacklist with exponential
+  backoff**: a failing step is retried on a jittered doubling schedule
+  (a half-written file that completes later still gets picked up)
+  instead of once per poll, entries are capped and expire after a
+  retention TTL, and anything at or below the currently served step is
+  dropped (it can never be selected again), so a long-running server
+  under sustained corruption holds O(1) memory.
+* :class:`ChaosPublisher` — fault-injecting publisher for chaos tests
+  and ``benchmarks/chaos_bench.py``: executes the publish-fault events
+  of a :class:`repro.core.faults.FaultPlan` (torn/corrupt snapshot
+  writes, delayed/dropped publications, transient disk-full) while
+  delegating clean publications to the real manager.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+import dataclasses
+import errno
+import json
+import os
+import random
+import time
+from typing import Any, Dict, Optional, Tuple
 
 from repro.checkpoint import (CheckpointManager, CheckpointPolicy,
                               latest_step, read_metadata, restore_checkpoint)
+from repro.core import env
+from repro.core.faults import FaultPlan
 
 PyTree = Any
 
-__all__ = ["SnapshotPublisher", "SnapshotWatcher"]
+__all__ = ["ChaosPublisher", "SnapshotPublisher", "SnapshotWatcher"]
 
 
 class SnapshotPublisher:
@@ -40,7 +59,10 @@ class SnapshotPublisher:
     :meth:`publish` writes unconditionally.  ``keep`` old snapshots stay
     on disk so a watcher mid-load never sees its file deleted under it
     (retention deletes oldest-first and the watcher only reads the
-    newest).
+    newest; ``keep=0`` disables GC — the cluster harness needs every
+    version addressable).  Transient write failures (disk full, EIO)
+    retry with backoff inside the manager's writer thread before
+    surfacing.
     """
 
     def __init__(self, out_dir: str, *, every_steps: Optional[int] = None,
@@ -73,13 +95,98 @@ class SnapshotPublisher:
         self._mgr.wait()
 
     def close(self) -> None:
+        """Drain pending publications and stop the writer."""
         self._mgr.close()
 
     def __enter__(self) -> "SnapshotPublisher":
         return self
 
-    def __exit__(self, *exc) -> None:
-        self.close()
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+            return
+        try:                    # never mask the in-flight body exception
+            self.close()
+        except Exception:
+            pass
+
+
+class ChaosPublisher(SnapshotPublisher):
+    """A :class:`SnapshotPublisher` that executes a fault plan.
+
+    Each :meth:`publish` call is a *publication index* (0, 1, 2, ...)
+    looked up in the plan (:meth:`repro.core.faults.FaultPlan.
+    publish_fault`); covered indices execute the fault instead of / on
+    top of the clean write:
+
+    * ``torn_snapshot`` — write a truncated npz with **no sidecar**: by
+      the bus protocol it is invisible to ``latest_step`` (the watcher
+      never even sees the version; a stale server keeps serving).
+    * ``corrupt_snapshot`` — write junk npz *plus* a valid sidecar: the
+      watcher discovers it, fails to load it, and must skip/backoff.
+    * ``delay_publish`` — sleep ``seconds`` before a clean publish
+      (staleness at the bus, the PSP trade).
+    * ``drop_publish`` — swallow the publication entirely.
+    * ``disk_full`` — raise a transient ``ENOSPC`` from the writer via a
+      one-shot injected failure, exercising the manager's retry path
+      (the write succeeds on retry).
+
+    Counters (``torn``, ``corrupt``, ``delayed``, ``dropped``,
+    ``disk_full``) record what actually fired, for bench invariants.
+    """
+
+    def __init__(self, out_dir: str, plan: FaultPlan, **kw):
+        super().__init__(out_dir, **kw)
+        self.plan = plan
+        self.index = 0
+        self.counters: Dict[str, int] = {
+            "torn": 0, "corrupt": 0, "delayed": 0, "dropped": 0,
+            "disk_full": 0}
+
+    def publish(self, step: int, params: PyTree,
+                metadata: Optional[dict] = None, *,
+                block: bool = False) -> None:
+        """Publish with the plan's fault (if any) applied to this index."""
+        ev = self.plan.publish_fault(self.index)
+        self.index += 1
+        if ev is None:
+            super().publish(step, params, metadata, block=block)
+            return
+        if ev.kind == "torn_snapshot":
+            self._write_junk(step, sidecar=False)
+            self.counters["torn"] += 1
+        elif ev.kind == "corrupt_snapshot":
+            self._write_junk(step, sidecar=True)
+            self.counters["corrupt"] += 1
+        elif ev.kind == "delay_publish":
+            time.sleep(ev.seconds)
+            self.counters["delayed"] += 1
+            super().publish(step, params, metadata, block=block)
+        elif ev.kind == "drop_publish":
+            self.counters["dropped"] += 1
+        elif ev.kind == "disk_full":
+            self.counters["disk_full"] += 1
+            self._mgr.inject_write_fault(
+                OSError(errno.ENOSPC, "No space left on device (injected)"))
+            super().publish(step, params, metadata, block=block)
+
+    def _write_junk(self, step: int, *, sidecar: bool) -> None:
+        """Write a deliberately unloadable snapshot for version ``step``."""
+        base = os.path.join(self.out_dir, f"step_{step:08d}.npz")
+        if sidecar:
+            with open(base + ".json", "w") as f:
+                json.dump({"kind": "serving_snapshot", "version": step}, f)
+        with open(base, "wb") as f:
+            f.write(b"PK\x03\x04 this is not a real npz")
+
+
+@dataclasses.dataclass
+class _BadStep:
+    """Blacklist entry: failure count + when to retry next."""
+
+    first_seen: float
+    fails: int
+    next_retry: float
 
 
 class SnapshotWatcher:
@@ -88,26 +195,55 @@ class SnapshotWatcher:
 
     ``poll()`` is cheap when nothing changed (one ``listdir``).  Any
     failure to load a candidate step — torn npz, shape/key mismatch from
-    a different config, file deleted between list and read — marks that
-    step bad and keeps the current version serving; a *newer* step is
-    still picked up normally.  ``strict=True`` re-raises instead (tests,
-    one-shot restore).
+    a different config, file deleted between list and read — blacklists
+    that step and keeps the current version serving; a *newer* step is
+    still picked up normally.  Blacklisted steps are retried on a
+    jittered exponential-backoff schedule (base
+    ``PSP_BUS_BACKOFF_BASE``, doubling per failure up to
+    ``PSP_BUS_BACKOFF_MAX``) — a write that completes late still lands —
+    and the blacklist is bounded: at most ``PSP_BUS_BLACKLIST_MAX``
+    entries (oldest evicted first), each expiring after
+    ``PSP_BUS_BLACKLIST_TTL`` seconds, and every entry at or below the
+    served step dropped on swap.  ``strict=True`` re-raises instead
+    (tests, one-shot restore).
     """
 
     def __init__(self, watch_dir: str, template: PyTree, *,
-                 strict: bool = False):
+                 strict: bool = False,
+                 backoff_base: Optional[float] = None,
+                 backoff_max: Optional[float] = None,
+                 blacklist_max: Optional[int] = None,
+                 blacklist_ttl: Optional[float] = None,
+                 jitter_seed: Optional[int] = None):
         self.watch_dir = watch_dir
         self.template = template
         self.strict = strict
         self.loaded_step: Optional[int] = None
-        self.bad_steps: set = set()
-        self.skipped = 0
+        self.bad_steps: Dict[int, _BadStep] = {}
+        self.skipped = 0          # failed load attempts (incl. retries)
+        self.retries = 0          # backoff-scheduled re-attempts
+        self.backoff_base = (env.get_float("PSP_BUS_BACKOFF_BASE")
+                             if backoff_base is None else backoff_base)
+        self.backoff_max = (env.get_float("PSP_BUS_BACKOFF_MAX")
+                            if backoff_max is None else backoff_max)
+        self.blacklist_max = (env.get_int("PSP_BUS_BLACKLIST_MAX")
+                              if blacklist_max is None else blacklist_max)
+        self.blacklist_ttl = (env.get_float("PSP_BUS_BLACKLIST_TTL")
+                              if blacklist_ttl is None else blacklist_ttl)
+        self._rng = random.Random(jitter_seed)
 
     def poll(self) -> Optional[Tuple[PyTree, int]]:
         """Return ``(params, version)`` if a new snapshot is loadable."""
+        now = time.monotonic()
+        self._evict(now)
         step = latest_step(self.watch_dir)
-        if step is None or step == self.loaded_step or step in self.bad_steps:
+        if step is None or step == self.loaded_step:
             return None
+        bad = self.bad_steps.get(step)
+        if bad is not None and now < bad.next_retry:
+            return None                       # backing off, serve stale
+        if bad is not None:
+            self.retries += 1
         try:
             params, _ = restore_checkpoint(self.watch_dir, self.template,
                                            step)
@@ -115,8 +251,32 @@ class SnapshotWatcher:
         except Exception:
             if self.strict:
                 raise
-            self.bad_steps.add(step)
-            self.skipped += 1
+            self._record_failure(step, bad, now)
             return None
         self.loaded_step = step
+        # nothing at/below the served step can ever be selected again
+        self.bad_steps = {s: b for s, b in self.bad_steps.items()
+                          if s > step}
         return params, int(meta.get("version", step))
+
+    def _record_failure(self, step: int, bad: Optional[_BadStep],
+                        now: float) -> None:
+        """Blacklist ``step`` (or push its retry horizon further out)."""
+        self.skipped += 1
+        if bad is None:
+            bad = _BadStep(first_seen=now, fails=0, next_retry=now)
+            self.bad_steps[step] = bad
+            while len(self.bad_steps) > max(1, self.blacklist_max):
+                del self.bad_steps[min(self.bad_steps)]   # oldest step out
+        bad.fails += 1
+        delay = min(self.backoff_base * (2.0 ** (bad.fails - 1)),
+                    self.backoff_max)
+        bad.next_retry = now + delay * (1.0 + 0.5 * self._rng.random())
+
+    def _evict(self, now: float) -> None:
+        """Expire blacklist entries older than the retention TTL."""
+        if not self.bad_steps:
+            return
+        self.bad_steps = {
+            s: b for s, b in self.bad_steps.items()
+            if now - b.first_seen <= self.blacklist_ttl}

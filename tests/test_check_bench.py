@@ -282,3 +282,74 @@ class TestServeGate:
                                  "--fresh", str(good)]) == 0
         assert check_bench.main(["--serve", "--baseline", str(base),
                                  "--fresh", str(bad)]) == 1
+
+
+def _chaos(*, ratio=0.9, latency=3.5, live_restarts=0, dropped=0,
+           swaps=2, restarts=1, torn=3, completed=True, **cluster_extra):
+    cluster = {"workers": 3, "ticks": 30, "dim": 16, "batch": 4,
+               "goodput_ratio": ratio, "recovery_latency_s": latency,
+               "victims": [0], "live_restarts": live_restarts,
+               "completed": completed}
+    cluster.update(cluster_extra)
+    return {"smoke": False, "cluster": cluster,
+            "serving": {"requests": 16, "completed": 16 - dropped,
+                        "dropped": dropped, "swaps": swaps,
+                        "worker_restarts": restarts,
+                        "publish_faults": {"torn": torn}}}
+
+
+class TestChaosGate:
+    """The chaos gate: recovery/zero-drop invariants always, the
+    goodput/latency floors only at the baseline's cluster shape."""
+
+    def test_healthy_run_passes(self):
+        assert check_bench.check_chaos(_chaos(), _chaos()) == []
+
+    def test_victim_never_contributed_fails(self):
+        fails = check_bench.check_chaos(_chaos(), _chaos(latency=None))
+        assert any("rejoined" in f for f in fails)
+
+    def test_live_restart_fails(self):
+        fails = check_bench.check_chaos(_chaos(), _chaos(live_restarts=1))
+        assert any("live worker" in f for f in fails)
+
+    def test_dropped_request_fails(self):
+        fails = check_bench.check_chaos(_chaos(), _chaos(dropped=2))
+        assert any("dropped" in f for f in fails)
+
+    def test_missing_worker_recovery_fails(self):
+        fails = check_bench.check_chaos(_chaos(), _chaos(restarts=0))
+        assert any("decode-worker" in f for f in fails)
+
+    def test_storm_never_fired_fails(self):
+        fails = check_bench.check_chaos(_chaos(), _chaos(torn=0))
+        assert any("torn" in f for f in fails)
+
+    def test_floors_at_matched_shape(self):
+        fails = check_bench.check_chaos(_chaos(ratio=0.9),
+                                        _chaos(ratio=0.1))
+        assert any("goodput_ratio" in f for f in fails)
+        fails = check_bench.check_chaos(_chaos(latency=2.0),
+                                        _chaos(latency=20.0))
+        assert any("recovery_latency_s" in f for f in fails)
+        assert check_bench.check_chaos(_chaos(ratio=0.9, latency=2.0),
+                                       _chaos(ratio=0.6,
+                                              latency=5.0)) == []
+
+    def test_smoke_shape_skips_floors_not_invariants(self):
+        smoke = _chaos(ratio=0.01, latency=99.0, ticks=24)
+        assert check_bench.check_chaos(_chaos(), smoke) == []
+        smoke_bad = _chaos(dropped=1, ticks=24)
+        assert check_bench.check_chaos(_chaos(), smoke_bad) != []
+
+    def test_cli_chaos_mode(self, tmp_path):
+        base = tmp_path / "chaos_base.json"
+        base.write_text(json.dumps(_chaos()))
+        good = tmp_path / "chaos_good.json"
+        good.write_text(json.dumps(_chaos(ratio=0.8)))
+        bad = tmp_path / "chaos_bad.json"
+        bad.write_text(json.dumps(_chaos(live_restarts=2)))
+        assert check_bench.main(["--chaos", "--baseline", str(base),
+                                 "--fresh", str(good)]) == 0
+        assert check_bench.main(["--chaos", "--baseline", str(base),
+                                 "--fresh", str(bad)]) == 1

@@ -134,6 +134,51 @@ class TestManager:
         with pytest.raises(ValueError):
             CheckpointPolicy(every_seconds=-1.0)
 
+    def test_transient_write_fault_retries(self, tmp_path):
+        import errno
+        mgr = CheckpointManager(str(tmp_path), async_write=False,
+                                write_retries=3, retry_backoff=0.01)
+        mgr.inject_write_fault(OSError(errno.ENOSPC, "disk full"))
+        mgr.inject_write_fault(OSError(errno.EIO, "flaky mount"))
+        mgr.save(1, {"w": jnp.zeros(2)})     # two faults, then success
+        assert mgr.retried_writes == 2
+        assert latest_step(str(tmp_path)) == 1
+        mgr.close()
+
+    def test_write_fault_exhausts_retries(self, tmp_path):
+        import errno
+        mgr = CheckpointManager(str(tmp_path), async_write=False,
+                                write_retries=1, retry_backoff=0.01)
+        for _ in range(2):                   # one more fault than retries
+            mgr.inject_write_fault(OSError(errno.ENOSPC, "disk full"))
+        with pytest.raises(OSError):
+            mgr.save(1, {"w": jnp.zeros(2)})
+        assert latest_step(str(tmp_path)) is None
+
+    def test_async_retry_is_transparent(self, tmp_path):
+        import errno
+        with CheckpointManager(str(tmp_path), write_retries=2,
+                               retry_backoff=0.01) as mgr:
+            mgr.inject_write_fault(OSError(errno.ENOSPC, "disk full"))
+            mgr.save(1, {"w": jnp.zeros(2)}, block=True)  # no raise
+            assert mgr.retried_writes == 1
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_writer_error_surfaces_on_clean_exit(self, tmp_path):
+        # regression: a failure on the LAST save before shutdown must not
+        # be swallowed by the context-manager exit
+        with pytest.raises(RuntimeError, match="writer thread failed"):
+            with CheckpointManager(str(tmp_path), write_retries=0) as mgr:
+                mgr.save(1, {"bad": np.asarray(["not", "numeric"])})
+
+    def test_writer_error_does_not_mask_body_exception(self, tmp_path):
+        # regression: when the with-body is already raising, a pending
+        # writer error must NOT replace it as the surfaced exception
+        with pytest.raises(ValueError, match="body failed first"):
+            with CheckpointManager(str(tmp_path), write_retries=0) as mgr:
+                mgr.save(1, {"bad": np.asarray(["not", "numeric"])})
+                raise ValueError("body failed first")
+
 
 # --------------------------------------------------------------------------- #
 # kill-and-resume: the golden equivalence, with a real SIGKILL

@@ -1,0 +1,270 @@
+"""Chaos tier: fault plans, external churn, and the multi-process cluster.
+
+The integration tests spawn REAL worker subprocesses and SIGKILL them.
+The load-bearing claim is bit-exactness: a multi-process cluster run —
+fault plan, kills, rejoins and all — must reproduce the single-process
+elastic trainer's server params exactly, once its recorded membership
+events are replayed through :func:`repro.core.spmd_psp.external_drive`.
+That holds because of two facts pinned here as unit tests first:
+
+* a solo ``jax.jit(grad_fn)`` on one worker's view equals that worker's
+  row of the in-graph ``vmap`` (what the worker subprocess computes);
+* :func:`psp_apply_tick` fed externally-computed constant gradients
+  (pushers' solo grads, zeros elsewhere) is bit-identical to
+  :func:`make_psp_step_fn`'s fused step (what the coordinator applies).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.faults import (BUILDERS, FaultEvent, FaultPlan, make_plan,
+                               plan_from_env)
+from repro.core.spmd_psp import (PSPConfig, apply_external_churn,
+                                 external_drive, linear_psp_state,
+                                 linear_psp_task, make_psp_step_fn,
+                                 psp_apply_tick)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+# --------------------------------------------------------------------------- #
+# fault plans
+# --------------------------------------------------------------------------- #
+class TestFaultPlan:
+    def test_builders_produce_valid_plans(self):
+        for name in BUILDERS:
+            plan = make_plan(name, n_workers=4, ticks=30)
+            assert plan.name == name
+            for ev in plan.events:
+                assert 0 <= ev.tick < 30
+                if ev.worker is not None:
+                    assert 0 <= ev.worker < 4
+
+    def test_seed_determinism(self):
+        a = make_plan("kill-one:seed=7", n_workers=6, ticks=40)
+        b = make_plan("kill-one:seed=7", n_workers=6, ticks=40)
+        c = make_plan("kill-one:seed=8", n_workers=6, ticks=40)
+        assert a.events == b.events
+        assert (a.events != c.events
+                or a.seed != c.seed)        # same victim possible; seed kept
+
+    def test_json_roundtrip(self, tmp_path):
+        plan = make_plan("standard:seed=3", n_workers=5, ticks=24)
+        path = str(tmp_path / "plan.json")
+        plan.save(path)
+        back = FaultPlan.from_json(open(path).read())
+        assert back == plan
+        # a JSON path is a valid spec
+        again = make_plan(path, n_workers=5, ticks=24)
+        assert again.events == plan.events
+
+    def test_publish_fault_covers_count_window(self):
+        plan = make_plan("torn-storm:k=3,at=2", n_workers=1, ticks=10)
+        kinds = [getattr(plan.publish_fault(i), "kind", None)
+                 for i in range(7)]
+        assert kinds[2:5] == ["torn_snapshot"] * 3
+        assert kinds[0] is None and kinds[5] is None
+
+    def test_rack_never_kills_everyone(self):
+        for seed in range(5):
+            plan = make_plan(f"rack:g=2,seed={seed}", n_workers=4, ticks=20)
+            killed = {e.worker for e in plan.events if e.kind == "kill"}
+            assert 0 < len(killed) < 4
+
+    def test_bad_specs_raise(self):
+        with pytest.raises(ValueError, match="unknown fault plan"):
+            make_plan("no-such-plan", n_workers=2, ticks=10)
+        with pytest.raises(ValueError):
+            make_plan("kill-one:worker", n_workers=2, ticks=10)
+        with pytest.raises(ValueError):
+            FaultEvent("not-a-kind", 0)
+
+    def test_plan_from_env(self, monkeypatch):
+        monkeypatch.delenv("PSP_FAULT_PLAN", raising=False)
+        assert plan_from_env(n_workers=2, ticks=10).name == "none"
+        monkeypatch.setenv("PSP_FAULT_PLAN", "kill-one:worker=1,at=4")
+        plan = plan_from_env(n_workers=2, ticks=10)
+        assert plan.kills_at(4) == [1]
+
+
+# --------------------------------------------------------------------------- #
+# the two numerical facts the cluster protocol rests on
+# --------------------------------------------------------------------------- #
+def _cfg(**kw):
+    base = dict(barrier="pbsp", n_workers=4, staleness=3, sample_size=2,
+                straggler_frac=0.25)
+    base.update(kw)
+    return PSPConfig(**base)
+
+
+class TestClusterNumerics:
+    def test_solo_grad_equals_vmap_row(self):
+        dim = 16
+        w_true, grad_fn, _ = linear_psp_task(dim, lr=0.1, seed=0)
+        state = linear_psp_state(_cfg(), dim, 1)
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, 8, dim))
+        y = x @ w_true
+        v_loss, v_grads = jax.vmap(grad_fn)(state.views, (x, y))
+        for w in range(4):
+            view = jax.tree_util.tree_map(lambda a, w=w: a[w], state.views)
+            s_loss, s_grads = jax.jit(grad_fn)(view, (x[w], y[w]))
+            assert np.array_equal(np.asarray(s_loss), np.asarray(v_loss)[w])
+            for sv, vv in zip(jax.tree_util.tree_leaves(s_grads),
+                              jax.tree_util.tree_leaves(v_grads)):
+                assert np.array_equal(np.asarray(sv), np.asarray(vv)[w])
+
+    def test_apply_tick_with_constant_grads_matches_fused_step(self):
+        # the coordinator path: grads computed OUTSIDE the jitted step
+        # (pushers' solo grads, zeros elsewhere) must be bit-identical to
+        # the in-graph vmap step, for every state leaf, over many ticks
+        dim, W, B = 16, 4, 8
+        cfg = _cfg()
+        w_true, grad_fn, opt_update = linear_psp_task(dim, lr=0.1, seed=0)
+        fused = jax.jit(make_psp_step_fn(cfg, grad_fn, opt_update))
+        constant = jax.jit(lambda st, losses, grads: psp_apply_tick(
+            cfg, opt_update, st, lambda _: (losses, grads)))
+        solo = jax.jit(grad_fn)
+
+        sa = linear_psp_state(cfg, dim, 1)
+        sb = linear_psp_state(cfg, dim, 1)
+        kb = jax.random.PRNGKey(2)
+        for _t in range(40):
+            kb, k1 = jax.random.split(kb)
+            x = jax.random.normal(k1, (W, B, dim))
+            batch = (x, x @ w_true)
+            push = np.asarray((sb.busy_until <= sb.now) & ~sb.pushed
+                              & sb.alive)
+            losses = np.zeros((W,), np.float32)
+            grads_np = jax.tree_util.tree_map(
+                lambda p: np.zeros((W,) + np.shape(p), np.float32),
+                sb.server_params)
+            for w in np.flatnonzero(push):
+                view = jax.tree_util.tree_map(lambda a, w=w: a[w], sb.views)
+                l, g = solo(view, (x[w], batch[1][w]))
+                losses[w] = np.asarray(l)
+                for dst, src in zip(jax.tree_util.tree_leaves(grads_np),
+                                    jax.tree_util.tree_leaves(g)):
+                    dst[w] = np.asarray(src)
+            sa, _ = fused(sa, batch)
+            sb, _ = constant(sb, jnp.asarray(losses),
+                             jax.tree_util.tree_map(jnp.asarray, grads_np))
+            for la, lb in zip(jax.tree_util.tree_leaves(sa),
+                              jax.tree_util.tree_leaves(sb)):
+                assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+# --------------------------------------------------------------------------- #
+# external churn (the coordinator's membership primitive)
+# --------------------------------------------------------------------------- #
+class TestExternalChurn:
+    def test_leave_then_join_reanchors(self):
+        cfg = _cfg(straggler_frac=0.0)
+        dim = 8
+        w_true, grad_fn, opt_update = linear_psp_task(dim, lr=0.1, seed=0)
+        step = jax.jit(make_psp_step_fn(cfg, grad_fn, opt_update))
+        state = linear_psp_state(cfg, dim, 1)
+        kb = jax.random.PRNGKey(2)
+        for _ in range(5):
+            kb, k1 = jax.random.split(kb)
+            x = jax.random.normal(k1, (4, 8, dim))
+            state, _ = step(state, (x, x @ w_true))
+        state = apply_external_churn(cfg, state, leave=(1,))
+        assert not bool(np.asarray(state.alive)[1])
+        # leaving again is a no-op; joining an alive worker is a no-op
+        state2 = apply_external_churn(cfg, state, leave=(1,), join=(0,))
+        for la, lb in zip(jax.tree_util.tree_leaves(state),
+                          jax.tree_util.tree_leaves(state2)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb))
+        state = apply_external_churn(cfg, state, join=(1,))
+        alive_steps = np.asarray(state.step)[np.asarray(state.alive)]
+        # joiner restarts at the max alive step with a fresh server pull,
+        # masked out of this tick's push
+        assert np.asarray(state.step)[1] == alive_steps.max()
+        assert bool(np.asarray(state.pushed)[1])
+        v1 = jax.tree_util.tree_map(lambda a: np.asarray(a)[1], state.views)
+        for lv, ls in zip(jax.tree_util.tree_leaves(v1),
+                          jax.tree_util.tree_leaves(state.server_params)):
+            assert np.array_equal(lv, np.asarray(ls))
+
+    def test_rack_leave_multiple_workers(self):
+        cfg = _cfg(n_workers=6)
+        state = linear_psp_state(cfg, 8, 1)
+        state = apply_external_churn(cfg, state, leave=(0, 1, 2))
+        assert np.asarray(state.alive).tolist() == [False] * 3 + [True] * 3
+
+    def test_external_drive_replays_events(self):
+        cfg = _cfg(straggler_frac=0.0)
+        events = {3: ((1,), ()), 7: ((), (1,))}
+        _, it = external_drive(cfg, 8, 12, events, batch=4)
+        states = [s for s, _m in it]
+        assert not bool(np.asarray(states[3].alive)[1])
+        assert bool(np.asarray(states[7].alive)[1])
+
+
+# --------------------------------------------------------------------------- #
+# the real thing: subprocess cluster runs
+# --------------------------------------------------------------------------- #
+def _replay(cfg, dim, ticks, result, batch):
+    """Feed a cluster run's recorded events back through external_drive."""
+    events = {}
+    for t, kind, w in result["events"]:
+        lv, jn = events.setdefault(t, ([], []))
+        (lv if kind == "leave" else jn).append(w)
+    events = {t: (tuple(l), tuple(j)) for t, (l, j) in events.items()}
+    _, it = external_drive(cfg, dim, ticks, events, batch=batch)
+    state = None
+    for state, _m in it:
+        pass
+    return state
+
+
+@pytest.mark.slow
+class TestClusterIntegration:
+    DIM, BATCH = 8, 4
+
+    def test_nofault_run_matches_single_process(self, tmp_path):
+        from repro.launch.cluster import run_cluster
+        cfg = _cfg(n_workers=3)
+        res = run_cluster(cfg, self.DIM, 16, str(tmp_path),
+                          batch=self.BATCH, tick_timeout=120.0)
+        assert res["events"] == []
+        ref = _replay(cfg, self.DIM, 16, res, self.BATCH)
+        assert np.array_equal(np.asarray(ref.server_params["w"]),
+                              res["final_params"]["w"])
+        assert int(ref.total_pushes) == res["total_pushes"]
+        # result.json is the same record minus the in-process arrays
+        on_disk = json.load(open(os.path.join(str(tmp_path),
+                                              "result.json")))
+        assert on_disk["total_pushes"] == res["total_pushes"]
+
+    def test_kill_one_rejoins_and_replays_bit_exact(self, tmp_path):
+        from repro.launch.cluster import run_cluster
+        cfg = _cfg(n_workers=3, straggler_frac=0.0)
+        plan = make_plan("kill-one:worker=1,at=4", n_workers=3, ticks=26)
+        res = run_cluster(cfg, self.DIM, 26, str(tmp_path), batch=self.BATCH,
+                          plan=plan, tick_timeout=120.0, tick_min_wall=0.5)
+        kinds = [(kind, w) for _t, kind, w in res["events"]]
+        assert ("leave", 1) in kinds        # the SIGKILL was observed
+        assert ("join", 1) in kinds         # ... and the respawn rejoined
+        # only the victim was restarted; live workers kept their process
+        assert res["epochs"] == {"0": 0, "1": 1, "2": 0}
+        rec = res["recovery"]["1"]
+        assert rec["latency_s"] > 0         # kill -> rejoin -> first push
+        assert rec["t_kill"] < rec["t_rejoin"] < rec["t_push"]
+        # the acceptance criterion: same alive trajectory => bit-exact
+        ref = _replay(cfg, self.DIM, 26, res, self.BATCH)
+        assert np.array_equal(np.asarray(ref.server_params["w"]),
+                              res["final_params"]["w"])
+        assert int(ref.total_pushes) == res["total_pushes"]
+        assert np.asarray(ref.alive).tolist() == res["alive"]
+
+    def test_cluster_rejects_internal_churn_config(self, tmp_path):
+        from repro.core.spmd_psp import ChurnConfig
+        from repro.launch.cluster import run_cluster
+        cfg = _cfg(churn=ChurnConfig(leave_rate=0.1, join_rate=0.1))
+        with pytest.raises(ValueError, match="churn"):
+            run_cluster(cfg, 8, 4, str(tmp_path))

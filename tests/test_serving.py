@@ -14,9 +14,11 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
+from repro.core.faults import make_plan
 from repro.models import init_model
-from repro.serving import (InferenceServer, Request, ServeConfig,
-                           ServingEngine, SnapshotPublisher, SnapshotWatcher)
+from repro.serving import (ChaosPublisher, InferenceServer, Request,
+                           ServeConfig, ServingEngine, SnapshotPublisher,
+                           SnapshotWatcher)
 
 
 @pytest.fixture(scope="module")
@@ -202,6 +204,67 @@ class TestSnapshotBus:
             pub.publish(12, p0)
         assert w.poll()[1] == 12
 
+    def test_blacklist_backoff_schedule(self, model, tmp_path):
+        cfg, p0, _ = model
+        d = str(tmp_path)
+        open(os.path.join(d, "step_00000011.npz"), "wb").write(b"junk")
+        with open(os.path.join(d, "step_00000011.npz.json"), "w") as f:
+            json.dump({"step": 11}, f)
+        w = SnapshotWatcher(d, p0, backoff_base=0.05, backoff_max=0.1,
+                            jitter_seed=0)
+        assert w.poll() is None and w.skipped == 1
+        # inside the backoff window: no load attempt at all
+        assert w.poll() is None and w.skipped == 1 and w.retries == 0
+        time.sleep(0.2)                     # past base*jitter
+        assert w.poll() is None
+        assert w.retries == 1 and w.skipped == 2
+        assert w.bad_steps[11].fails == 2   # horizon doubled
+
+    def test_blacklist_capped(self, model, tmp_path):
+        cfg, p0, _ = model
+        d = str(tmp_path)
+        w = SnapshotWatcher(d, p0, blacklist_max=3, backoff_base=1e-4,
+                            backoff_max=1e-4, jitter_seed=0)
+        for step in range(10, 16):          # newer corrupt step each poll
+            base = os.path.join(d, f"step_{step:08d}.npz")
+            open(base, "wb").write(b"junk")
+            json.dump({"step": step}, open(base + ".json", "w"))
+            assert w.poll() is None
+        assert len(w.bad_steps) == 3        # bounded, oldest evicted
+        assert min(w.bad_steps) == 13
+
+    def test_blacklist_ttl_eviction(self, model, tmp_path):
+        cfg, p0, _ = model
+        d = str(tmp_path)
+        base = os.path.join(d, "step_00000011.npz")
+        open(base, "wb").write(b"junk")
+        json.dump({"step": 11}, open(base + ".json", "w"))
+        w = SnapshotWatcher(d, p0, blacklist_ttl=0.05, backoff_base=1e-4,
+                            backoff_max=1e-4, jitter_seed=0)
+        assert w.poll() is None
+        assert w.bad_steps[11].fails == 1
+        time.sleep(0.1)                     # past the retention TTL
+        assert w.poll() is None
+        # the entry was evicted and re-recorded fresh, not accumulated
+        assert w.bad_steps[11].fails == 1
+
+    def test_half_written_snapshot_recovers_on_retry(self, model, tmp_path):
+        # the case backoff retries exist for: a corrupt write that is
+        # REPLACED by a complete one at the same step must eventually load
+        cfg, p0, _ = model
+        d = str(tmp_path)
+        base = os.path.join(d, "step_00000011.npz")
+        open(base, "wb").write(b"junk")
+        json.dump({"step": 11, "version": 11}, open(base + ".json", "w"))
+        w = SnapshotWatcher(d, p0, backoff_base=1e-4, backoff_max=1e-4,
+                            jitter_seed=0)
+        assert w.poll() is None
+        with SnapshotPublisher(d, async_write=False) as pub:
+            pub.publish(11, p0)             # the write completes late
+        time.sleep(0.01)
+        assert w.poll()[1] == 11
+        assert w.bad_steps == {}            # dropped at/below served step
+
     def test_strict_watcher_raises(self, model, tmp_path):
         cfg, p0, _ = model
         d = str(tmp_path)
@@ -254,3 +317,132 @@ class TestInferenceServer:
             fut = srv.submit(Request(prompt=np.arange(30, dtype=np.int32)))
             with pytest.raises(ValueError, match="max_len"):
                 fut.result(timeout=60)
+
+    def test_queue_deadline_expires(self, model):
+        cfg, p0, _ = model
+        eng = ServingEngine(p0, cfg, _scfg())
+        with InferenceServer(eng) as srv:
+            # an already-expired deadline fails in admission, never decoded
+            fut = srv.submit(Request(prompt=np.asarray([1, 2], np.int32),
+                                     deadline_s=1e-9))
+            with pytest.raises(TimeoutError):
+                fut.result(timeout=60)
+        assert srv.stats.timeouts == 1
+        assert srv.stats.completed == 0
+
+    def test_inflight_deadline_cancels(self, model):
+        cfg, p0, _ = model
+        eng = ServingEngine(p0, cfg, _scfg(max_new_tokens=64, max_len=128))
+        with InferenceServer(eng) as srv:
+            # 64 greedy tokens take well past 50ms (the first decode step
+            # alone compiles); the deadline must cancel it mid-flight
+            doomed = srv.submit(Request(
+                prompt=np.asarray([1, 2, 3], np.int32), deadline_s=0.05))
+            ok = srv.submit(Request(
+                prompt=np.asarray([1, 2, 3], np.int32), max_new_tokens=2))
+            with pytest.raises(TimeoutError):
+                doomed.result(timeout=300)
+            assert len(ok.result(timeout=300).tokens) == 2
+        assert srv.stats.timeouts == 1
+        assert not eng.has_pending()        # cancel freed the slot
+
+
+class TestChaosServing:
+    """The fault-plan-driven storm + worker-death satellites."""
+
+    def _storm(self, model, tmp_path, *, corrupt):
+        cfg, p0, p1 = model
+        d = str(tmp_path)
+        plan = make_plan("torn-storm:k=3,at=1"
+                         + (",corrupt=1" if corrupt else ""),
+                         n_workers=1, ticks=8)
+        pub = ChaosPublisher(d, plan, async_write=False)
+        pub.publish(1, p0)                  # index 0: clean v1
+        eng = ServingEngine(p0, cfg, _scfg(), version=0)
+        with InferenceServer(eng, watcher=SnapshotWatcher(
+                d, p0, backoff_base=0.01, backoff_max=0.02,
+                jitter_seed=0), poll_every=2) as srv:
+            deadline = time.monotonic() + 300
+            while srv.stats.swaps < 1 and time.monotonic() < deadline:
+                time.sleep(0.01)            # v1 lands
+            # the storm: every publication for K versions is bad
+            futs = []
+            for v in range(2, 2 + 3):
+                pub.publish(v, p1)          # indices 1..3: all bad
+                futs.append(srv.submit(Request(
+                    prompt=np.arange(1, 5 + v, dtype=np.int32))))
+            comps = [f.result(timeout=300) for f in futs]
+            # zero drops, all served on the last good version
+            assert [c.snapshot_version for c in comps] == [1, 1, 1]
+            assert srv.stats.swaps == 1
+            # first complete snapshot after the storm swaps immediately
+            pub.publish(6, p1)              # index 4: past the storm
+            deadline = time.monotonic() + 300
+            while srv.stats.swaps < 2 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            fut = srv.submit(Request(prompt=np.arange(1, 5,
+                                                      dtype=np.int32)))
+            assert fut.result(timeout=300).snapshot_version == 6
+        assert srv.stats.swaps == 2
+        assert srv.stats.completed == 4
+        pub.close()
+        return pub, srv
+
+    def test_torn_storm_zero_drops(self, model, tmp_path):
+        pub, srv = self._storm(model, tmp_path, corrupt=False)
+        assert pub.counters["torn"] == 3
+        # torn = invisible: the watcher never even discovered them
+        assert srv.stats.snapshots_skipped == 0
+
+    def test_corrupt_storm_zero_drops(self, model, tmp_path):
+        pub, srv = self._storm(model, tmp_path, corrupt=True)
+        assert pub.counters["corrupt"] == 3
+        # corrupt = discovered and skipped (with backoff), never fatal
+        assert srv.stats.snapshots_skipped >= 1
+
+    def test_worker_death_readmits_bit_exact(self, model, tmp_path):
+        cfg, p0, p1 = model
+        d = str(tmp_path)
+        prompt = np.arange(1, 7, dtype=np.int32)
+        # no-fault reference: same prompt, same params, same version pin
+        ref_eng = ServingEngine(p0, cfg, _scfg(max_new_tokens=24,
+                                               max_len=128), version=0)
+        ref_eng.submit(Request(prompt=prompt))
+        (ref,) = ref_eng.drain()
+
+        pub = SnapshotPublisher(d, async_write=False)
+        eng = ServingEngine(p0, cfg, _scfg(max_new_tokens=24, max_len=128),
+                            version=0)
+        with InferenceServer(eng, watcher=SnapshotWatcher(d, p0),
+                             poll_every=2) as srv:
+            fut = srv.submit(Request(prompt=prompt))
+            deadline = time.monotonic() + 300
+            # wait until the request is tracked AND admitted (one decode
+            # step ran): its group is pinned to version 0 from here on
+            while ((srv.stats.submitted < 1 or srv.stats.steps < 1)
+                   and time.monotonic() < deadline):
+                time.sleep(0.005)
+            pub.publish(1, p1)              # hot-swap races the decode
+            srv.inject_worker_fault()
+            comp = fut.result(timeout=300)
+            late = srv.submit(Request(prompt=prompt)).result(timeout=300)
+        # the dead worker's request was re-admitted on its PINNED
+        # snapshot and re-decoded bit-exact to the no-fault reference
+        assert srv.stats.worker_restarts == 1
+        assert srv.stats.readmitted >= 1
+        assert comp.snapshot_version == 0
+        assert np.array_equal(comp.tokens, ref.tokens)
+        # traffic admitted after the swap sees the new params
+        assert late.snapshot_version == 1
+        pub.close()
+
+    def test_worker_death_exhausts_restarts(self, model):
+        cfg, p0, _ = model
+        eng = ServingEngine(p0, cfg, _scfg())
+        srv = InferenceServer(eng, max_restarts=0)
+        srv.inject_worker_fault(RuntimeError("boom"))
+        deadline = time.monotonic() + 60
+        while not srv._stop.is_set() and time.monotonic() < deadline:
+            time.sleep(0.005)
+        with pytest.raises(RuntimeError, match="serve worker"):
+            srv.submit(Request(prompt=np.asarray([1, 2], np.int32)))

@@ -58,6 +58,20 @@ only::
 
     python -m benchmarks.serve_bench --smoke --out serve_fresh.json
     python tools/check_bench.py --serve --fresh serve_fresh.json
+
+``--chaos`` gates the chaos benchmark (``benchmarks.chaos_bench`` vs the
+committed ``results/benchmarks/chaos.json``).  Its **invariants** gate
+unconditionally — both cluster runs completed, the SIGKILLed worker
+rejoined *and* contributed a push (a recovery latency exists), live
+workers were never restarted, the serving stream finished with zero
+drops after at least one hot-swap and one decode-worker restart, and
+the torn-snapshot storm actually fired — while the floors (cluster
+``goodput_ratio`` and the ``recovery_latency_s`` ceiling) only apply
+when the fresh run matches the baseline's shape; a ``--smoke`` fresh
+run gates invariants only::
+
+    python -m benchmarks.chaos_bench --smoke --out chaos_fresh.json
+    python tools/check_bench.py --chaos --fresh chaos_fresh.json
 """
 from __future__ import annotations
 
@@ -71,11 +85,21 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_sweep.json")
 SERVE_BASELINE_PATH = os.path.join(REPO_ROOT, "results", "benchmarks",
                                    "serve.json")
+CHAOS_BASELINE_PATH = os.path.join(REPO_ROOT, "results", "benchmarks",
+                                   "chaos.json")
 DEFAULT_TOLERANCE = 0.25
 #: serve throughput floor tolerance — loose: no same-run normalizer
 SERVE_TOLERANCE = 0.6
 #: a fresh serve run only gates throughput at the baseline's load shape
 SERVE_SCALE_KEYS = ("requests", "rate_rps", "batch", "max_new_tokens")
+#: chaos goodput-ratio floor tolerance — the ratio IS same-run
+#: normalized (faulted vs no-fault on the same host), so it transfers,
+#: but respawn wall time (process spawn + jax import) varies with load
+CHAOS_TOLERANCE = 0.5
+#: recovery latency may grow this factor over baseline before failing
+CHAOS_LATENCY_SLACK = 3.0
+#: cluster-shape keys that must match for the chaos floors to apply
+CHAOS_SCALE_KEYS = ("workers", "ticks", "dim", "batch")
 #: per-engine default tolerance overrides (looser for the noisy
 #: interpret-mode kernel row; loosest for the raw-throughput 100k row,
 #: whose metric has no same-run event normalization)
@@ -280,6 +304,79 @@ def check_serve(baseline: Dict, fresh: Dict,
     return failures
 
 
+def check_chaos(baseline: Dict, fresh: Dict,
+                tolerance: float = CHAOS_TOLERANCE) -> List[str]:
+    """Gate a fresh chaos-bench result; one failure line per violation.
+
+    Invariants gate unconditionally — they define a run in which the
+    chaos machinery actually worked: both cluster runs completed, the
+    killed worker rejoined and contributed (``recovery_latency_s``
+    present), no live worker was restarted, the serving stream dropped
+    nothing while swapping at least once and surviving at least one
+    decode-worker death, and the torn-snapshot storm fired.  The
+    ``goodput_ratio`` floor and ``recovery_latency_s`` ceiling apply
+    only at the baseline's cluster shape (:data:`CHAOS_SCALE_KEYS`) —
+    a ``--smoke`` run's timings are noise and gate nothing.
+    """
+    failures = []
+
+    def fail(line):
+        print(line)
+        failures.append(line)
+
+    c, s = fresh.get("cluster", {}), fresh.get("serving", {})
+    if not c.get("completed"):
+        fail("FAIL chaos: cluster segment did not complete both runs")
+    if c.get("recovery_latency_s") is None:
+        fail("FAIL chaos: killed worker never rejoined and pushed "
+             "(no recovery latency recorded)")
+    if c.get("live_restarts", 1) != 0:
+        fail(f"FAIL chaos: {c.get('live_restarts')!r} live worker "
+             "restart(s); only killed workers may be respawned")
+    if s.get("dropped") != 0:
+        fail(f"FAIL chaos: {s.get('dropped')!r} dropped request(s) under "
+             "serving chaos; the stream must finish complete")
+    if s.get("swaps", 0) < 1:
+        fail("FAIL chaos: no hot-swap landed under publish chaos")
+    if s.get("worker_restarts", 0) < 1:
+        fail("FAIL chaos: the decode-worker death never fired/recovered")
+    if s.get("publish_faults", {}).get("torn", 0) < 1:
+        fail("FAIL chaos: the torn-snapshot storm never fired")
+    if not failures:
+        print(f"ok chaos invariants: recovery {c.get('recovery_latency_s')}"
+              f"s, victims {c.get('victims')}, serving "
+              f"{s.get('completed')}/{s.get('requests')} with "
+              f"{s.get('swaps')} swap(s), "
+              f"{s.get('worker_restarts')} restart(s)")
+    bc = baseline.get("cluster", {})
+    if all(c.get(k) == bc.get(k) for k in CHAOS_SCALE_KEYS):
+        base_r, got_r = bc.get("goodput_ratio"), c.get("goodput_ratio")
+        if base_r is not None and got_r is not None:
+            floor = base_r * (1.0 - tolerance)
+            status = "ok" if got_r >= floor else "FAIL"
+            line = (f"{status} chaos: goodput_ratio {got_r:.2f} vs "
+                    f"baseline {base_r:.2f} (floor {floor:.2f} at "
+                    f"{tolerance:.0%} tolerance)")
+            print(line)
+            if status == "FAIL":
+                failures.append(line)
+        base_l, got_l = bc.get("recovery_latency_s"), \
+            c.get("recovery_latency_s")
+        if base_l is not None and got_l is not None:
+            ceil = base_l * CHAOS_LATENCY_SLACK
+            status = "ok" if got_l <= ceil else "FAIL"
+            line = (f"{status} chaos: recovery_latency_s {got_l:.2f} vs "
+                    f"baseline {base_l:.2f} (ceiling {ceil:.2f} at "
+                    f"{CHAOS_LATENCY_SLACK:.0f}x slack)")
+            print(line)
+            if status == "FAIL":
+                failures.append(line)
+    else:
+        print("skip chaos floors: fresh cluster shape differs from the "
+              "baseline (smoke run?)")
+    return failures
+
+
 def main(argv=None) -> int:
     """CLI entry: compare fresh vs committed sweep-bench throughput."""
     ap = argparse.ArgumentParser()
@@ -305,7 +402,33 @@ def main(argv=None) -> int:
                     help="gate the serving-tier benchmark instead "
                          "(--fresh is a serve_bench JSON; baseline "
                          "defaults to results/benchmarks/serve.json)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="gate the chaos benchmark instead (--fresh is "
+                         "a chaos_bench JSON; baseline defaults to "
+                         "results/benchmarks/chaos.json)")
     a = ap.parse_args(argv)
+
+    if a.chaos:
+        base_path = (a.baseline if a.baseline != BASELINE_PATH
+                     else CHAOS_BASELINE_PATH)
+        with open(base_path) as f:
+            baseline = json.load(f)
+        if a.fresh is None:
+            sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+            sys.path.insert(0, REPO_ROOT)
+            from benchmarks.chaos_bench import chaos_suite
+            print("running smoke chaos_bench...", file=sys.stderr)
+            fresh = chaos_suite(smoke=True)
+        else:
+            with open(a.fresh) as f:
+                fresh = json.load(f)
+        failures = check_chaos(baseline, fresh)
+        if failures:
+            print(f"chaos gate: {len(failures)} check(s) failed",
+                  file=sys.stderr)
+            return 1
+        print("chaos gate: all checks passed", file=sys.stderr)
+        return 0
 
     if a.serve:
         base_path = (a.baseline if a.baseline != BASELINE_PATH
